@@ -1,0 +1,44 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+from repro.configs.bwraft_kv import CONFIG as PAPER_CLUSTER
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.runtime import BWRaftSim
+from repro.core.multiraft import MultiRaftSim
+
+Row = Tuple[str, float, str]
+
+
+def scaled_cluster(f_per_site: int) -> ClusterConfig:
+    sites = tuple(SiteConfig(n, followers=f_per_site, rtt_intra=1,
+                             rtt_inter=r, on_demand_price=0.0416,
+                             spot_price_mean=0.0125)
+                  for n, r in [("eu-frankfurt", 8), ("asia-singapore", 10),
+                               ("us-east", 6), ("us-west", 7)])
+    return ClusterConfig(name=f"scale{f_per_site}", sites=sites)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def tick_ms(ticks: float) -> float:
+    """Convert sim ticks to milliseconds (1 tick = 10 ms, DESIGN.md §3)."""
+    return ticks * 10.0
+
+
+def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
+                shards=2):
+    """(bwraft, raft, multiraft) steady-state reports."""
+    bw = BWRaftSim(cfg, mode="bwraft", write_rate=write_rate,
+                   read_rate=read_rate, phi=phi, seed=seed)
+    og = BWRaftSim(cfg, mode="raft", write_rate=write_rate,
+                   read_rate=read_rate, phi=phi, seed=seed)
+    mr = MultiRaftSim(cfg, shards=shards, write_rate=write_rate,
+                      read_rate=read_rate, seed=seed)
+    return bw.run(epochs)[-1], og.run(epochs)[-1], mr.run(epochs)[-1]

@@ -1,0 +1,28 @@
+"""Fig. 10: goodput/latency vs number of secretaries / observers."""
+import numpy as np
+
+from benchmarks.common import PAPER_CLUSTER, tick_ms
+from repro.core.runtime import BWRaftSim
+
+
+def run(quick: bool = True):
+    rows = []
+    for n_obs in ([1, 2] if quick else [0, 1, 2, 4, 8]):
+        sim = BWRaftSim(PAPER_CLUSTER, write_rate=2.0, read_rate=64.0,
+                        seed=6, manage_resources=False)
+        sim._lease(1, n_obs)
+        r = sim.run(4 if quick else 10)[-1]
+        rows.append((f"fig10.read_goodput.obs{n_obs}", r.reads_served,
+                     "reads_per_epoch"))
+        rows.append((f"fig10.read_latency.obs{n_obs}",
+                     tick_ms(r.read_lat_mean) * 1e3, "us"))
+    for n_sec in ([1, 2] if quick else [0, 1, 2, 4]):
+        sim = BWRaftSim(PAPER_CLUSTER, write_rate=24.0, read_rate=8.0,
+                        seed=6, manage_resources=False)
+        sim._lease(n_sec, 1)
+        r = sim.run(4 if quick else 10)[-1]
+        rows.append((f"fig10.write_goodput.sec{n_sec}", r.writes_committed,
+                     "writes_per_epoch"))
+        rows.append((f"fig10.write_latency.sec{n_sec}",
+                     tick_ms(np.nan_to_num(r.write_lat_mean)) * 1e3, "us"))
+    return rows

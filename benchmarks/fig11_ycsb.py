@@ -1,0 +1,28 @@
+"""Fig. 11: YCSB-style mixed workloads + leader resource usage."""
+import numpy as np
+
+from benchmarks.common import PAPER_CLUSTER
+from repro.core.runtime import BWRaftSim
+
+# YCSB-ish mixes: (name, write_ratio)
+MIXES = [("A_update_heavy", 0.5), ("B_read_mostly", 0.05),
+         ("C_read_only", 0.0)]
+
+
+def run(quick: bool = True):
+    rows = []
+    total = 48.0
+    for name, wr in MIXES:
+        for mode in ["bwraft", "raft"]:
+            sim = BWRaftSim(PAPER_CLUSTER, mode=mode,
+                            write_rate=total * wr,
+                            read_rate=total * (1 - wr), seed=8)
+            r = sim.run(4 if quick else 12)[-1]
+            rows.append((f"fig11.throughput.{name}.{mode}", r.goodput,
+                         "ops_per_epoch"))
+        # leader work proxy: committed writes x fan-out paths
+        import numpy as np
+        st = sim.state
+        rows.append((f"fig11.leader_work.{name}",
+                     float(np.asarray(st["leader_work"]).max()), "msg_units"))
+    return rows

@@ -1,0 +1,18 @@
+"""Fig. 12: impact of the R/W ratio alpha on goodput + expense."""
+from benchmarks.common import PAPER_CLUSTER
+from repro.core.runtime import BWRaftSim
+
+
+def run(quick: bool = True):
+    rows = []
+    total = 64.0
+    alphas = [0.5, 0.9] if quick else [0.1, 0.3, 0.5, 0.7, 0.9, 0.99]
+    for alpha in alphas:
+        sim = BWRaftSim(PAPER_CLUSTER, write_rate=total * (1 - alpha),
+                        read_rate=total * alpha, seed=10)
+        r = sim.run(5 if quick else 15)[-1]
+        rows.append((f"fig12.goodput.alpha{int(alpha*100)}", r.goodput,
+                     "ops_per_epoch"))
+        rows.append((f"fig12.cost.alpha{int(alpha*100)}", r.cost * 1e6,
+                     "usd_x1e6"))
+    return rows

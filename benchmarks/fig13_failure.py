@@ -1,0 +1,19 @@
+"""Fig. 13: impact of the spot failure rate phi."""
+from benchmarks.common import PAPER_CLUSTER
+from repro.core.runtime import BWRaftSim
+
+
+def run(quick: bool = True):
+    rows = []
+    phis = [0.0, 0.05] if quick else [0.0, 0.01, 0.05, 0.1, 0.2]
+    for phi in phis:
+        sim = BWRaftSim(PAPER_CLUSTER, write_rate=12.0, read_rate=48.0,
+                        phi=phi, seed=12)
+        r = sim.run(5 if quick else 15)[-1]
+        rows.append((f"fig13.goodput.phi{int(phi*100)}", r.goodput,
+                     "ops_per_epoch"))
+        rows.append((f"fig13.killed.phi{int(phi*100)}", r.killed,
+                     "revocations_per_epoch"))
+        rows.append((f"fig13.secretaries.phi{int(phi*100)}",
+                     r.n_secretaries, "alive"))
+    return rows

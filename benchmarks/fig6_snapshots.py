@@ -1,0 +1,27 @@
+"""Fig. 6: read/write latency snapshots over epochs (3 systems)."""
+import numpy as np
+
+from benchmarks.common import PAPER_CLUSTER, Row, run_systems, tick_ms
+from repro.core.runtime import BWRaftSim
+from repro.core.multiraft import MultiRaftSim
+
+
+def run(quick: bool = True):
+    epochs = 6 if quick else 60
+    rows = []
+    bw = BWRaftSim(PAPER_CLUSTER, write_rate=8.0, read_rate=48.0, seed=2)
+    og = BWRaftSim(PAPER_CLUSTER, mode="raft", write_rate=8.0,
+                   read_rate=48.0, seed=2)
+    mr = MultiRaftSim(PAPER_CLUSTER, shards=2, write_rate=8.0,
+                      read_rate=48.0, seed=2)
+    bw_r, og_r, mr_r = bw.run(epochs), og.run(epochs), mr.run(epochs)
+    tail = max(epochs // 2, 1)
+    for name, rs in [("bwraft", bw_r), ("original", og_r),
+                     ("multiraft", mr_r)]:
+        rlat = np.nanmean([r.read_lat_mean for r in rs[-tail:]])
+        wlat = np.nanmean([r.write_lat_mean for r in rs[-tail:]])
+        rows.append((f"fig6.read_latency.{name}", tick_ms(rlat) * 1e3,
+                     f"{tick_ms(rlat):.0f}ms_mean_read"))
+        rows.append((f"fig6.write_latency.{name}", tick_ms(wlat) * 1e3,
+                     f"{tick_ms(wlat):.0f}ms_mean_write"))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 7: performance + cost as the workload scales out."""
+import numpy as np
+
+from benchmarks.common import Row, run_systems, scaled_cluster
+
+
+def run(quick: bool = True):
+    rows = []
+    loads = [(2, 8.0), (4, 24.0)] if quick else \
+        [(2, 8.0), (4, 24.0), (8, 48.0), (12, 96.0)]
+    for f_per_site, w in loads:
+        cfg = scaled_cluster(f_per_site)
+        bw, og, mr = run_systems(cfg, write_rate=w, read_rate=w * 3,
+                                 epochs=4 if quick else 10,
+                                 shards=max(f_per_site // 2, 2))
+        scale = 4 * f_per_site
+        for name, r in [("bwraft", bw), ("original", og),
+                        ("multiraft", mr)]:
+            rows.append((f"fig7.goodput.F{scale}.{name}", r.goodput,
+                         f"ops_per_epoch"))
+            rows.append((f"fig7.cost.F{scale}.{name}", r.cost * 1e6,
+                         f"usd_per_epoch_x1e6"))
+    return rows

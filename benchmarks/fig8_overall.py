@@ -1,0 +1,19 @@
+"""Fig. 8: overall goodput + expense comparison (headline numbers)."""
+from benchmarks.common import PAPER_CLUSTER, run_systems
+
+
+def run(quick: bool = True):
+    bw, og, mr = run_systems(PAPER_CLUSTER, write_rate=12.0, read_rate=48.0,
+                             epochs=5 if quick else 20)
+    rows = []
+    for name, r in [("bwraft", bw), ("original", og), ("multiraft", mr)]:
+        rows.append((f"fig8.goodput.{name}", r.goodput, "ops_per_epoch"))
+        rows.append((f"fig8.cost.{name}", r.cost * 1e6, "usd_x1e6"))
+        rows.append((f"fig8.cost_per_kop.{name}",
+                     1e9 * r.cost / max(r.goodput, 1), "usd_per_kop_x1e6"))
+    rows.append(("fig8.goodput_gain_vs_original",
+                 bw.goodput / max(og.goodput, 1), "x"))
+    rows.append(("fig8.cost_saving_vs_multiraft",
+                 100 * (1 - (bw.cost / max(bw.goodput, 1)) /
+                        (mr.cost / max(mr.goodput, 1))), "pct_per_op"))
+    return rows

@@ -1,0 +1,60 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Consensus benchmarks run inline
+(1 CPU device); the roofline/dry-run benchmarks need 512 host devices and
+run as subprocesses (their results are also cached under results/).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--with-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+
+MODULES = [
+    "fig6_snapshots", "fig7_scaleout", "fig8_overall", "fig9_cdf",
+    "fig10_roles", "fig11_ycsb", "fig12_alpha", "fig13_failure",
+    "fig14_sites",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow)")
+    ap.add_argument("--with-roofline", action="store_true",
+                    help="also run one roofline cell as a subprocess")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    mods = [m for m in MODULES if not args.only or args.only in m]
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            out = mod.run(quick=not args.full)
+        except Exception as e:  # pragma: no cover
+            print(f"# {name} FAILED: {e}", file=sys.stderr)
+            raise
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.extend(out)
+        rows.append((f"{name}.wall", dt / max(len(out), 1), "us_per_row"))
+
+    if args.with_roofline:
+        cmd = [sys.executable, "-m", "benchmarks.roofline",
+               "--arch", "llama3.2-1b", "--shape", "decode_32k"]
+        t0 = time.perf_counter()
+        subprocess.run(cmd, check=True)
+        rows.append(("roofline.llama_decode.wall",
+                     (time.perf_counter() - t0) * 1e6, "us"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

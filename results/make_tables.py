@@ -1,0 +1,33 @@
+"""Regenerate the EXPERIMENTS.md roofline summary table from JSON.
+
+  PYTHONPATH=src python results/make_tables.py [results/roofline_baseline.json]
+"""
+import json
+import sys
+
+
+def main(path="results/roofline_baseline.jsonl"):
+    if path.endswith(".jsonl"):
+        recs = [json.loads(l) for l in open(path)]
+    else:
+        recs = json.load(open(path))
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "SKIP":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP "
+                  f"(full-attention @500k) | | |")
+            continue
+        if r["status"] != "OK":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"FAIL: {r.get('error','')[:40]} | | |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+              f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+              f"{r['bottleneck']} | {r['useful_flops_frac']:.2f} | "
+              f"{r['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,143 @@
+"""ConsensusCoordinator: the BW-Raft control plane for multi-pod training.
+
+Each training pod is a voter; checkpoint commits, membership views and
+scale decisions flow through the replicated log, so every pod derives the
+same view after any failure (restart = read the last committed
+CKPT_COMMIT).  Observers double as inference replicas (`repro.coord.
+elastic`); secretaries carry the checkpoint-manifest fan-out exactly as
+they carry AppendEntries in the KV service.
+
+In this container the cluster is the in-process simulator; on real
+hardware each jax process would run one node with the same record schema
+(launch/cluster.py documents the boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster_config import ClusterConfig
+from repro.core.runtime import BWRaftSim
+from repro.coord import log_records as rec
+from repro.kvstore.service import BWKVService, Timeout
+
+
+@dataclasses.dataclass
+class CommittedCheckpoint:
+    step: int
+    digest_tag: int
+    revision: int
+
+
+class ConsensusCoordinator:
+    def __init__(self, cfg: ClusterConfig, *, seed: int = 0,
+                 sim: Optional[BWRaftSim] = None):
+        self.cfg = cfg
+        self.sim = sim or BWRaftSim(cfg, mode="bwraft", write_rate=0.0,
+                                    read_rate=0.0, seed=seed,
+                                    manage_resources=False)
+        self.kv = BWKVService(self.sim)
+        self._last: Optional[CommittedCheckpoint] = None
+
+    # -- checkpoint commit protocol ------------------------------------ #
+    def commit_checkpoint(self, step: int, digest_hex: str
+                          ) -> CommittedCheckpoint:
+        """Propose CKPT_COMMIT(step, digest); returns once majority-
+        replicated.  Raises Timeout if consensus can't be reached."""
+        value = rec.pack_ckpt(step, digest_hex)
+        key = rec.ControlRecord(rec.RecordType.CKPT_COMMIT, value).key(
+            self.cfg.key_space)
+        res = self.kv.put(f"__ckpt__", value)
+        # __ckpt__ hashes arbitrarily; also store under the typed key for
+        # crash recovery via state-machine read
+        self._put_typed(rec.RecordType.CKPT_COMMIT, value)
+        self._last = CommittedCheckpoint(step, value % 4096, res.revision)
+        return self._last
+
+    def _put_typed(self, rtype: rec.RecordType, value: int) -> None:
+        kid = rec.record_base(self.cfg.key_space) + int(rtype)
+        st = self.sim.state
+        import repro.core.state as SM
+        lid = int(SM.leader_id(st, self.sim.static))
+        if lid < 0:
+            self.kv._step(50)
+            lid = int(SM.leader_id(self.sim.state, self.sim.static))
+        st = self.sim.state
+        pos = int(st["log_len"][lid])
+        self.sim.state = dict(
+            st,
+            log_term=st["log_term"].at[lid, pos].set(st["term"][lid]),
+            log_key=st["log_key"].at[lid, pos].set(kid),
+            log_val=st["log_val"].at[lid, pos].set(value),
+            log_len=st["log_len"].at[lid].set(pos + 1),
+            entry_submit_t=st["entry_submit_t"].at[pos].set(st["tick"]),
+        )
+        # drive ticks until committed
+        t = 0
+        while int(self.sim.state["commit_len"].max()) <= pos and t < 400:
+            self.kv._step(1)
+            t += 1
+
+    def last_committed_checkpoint(self) -> Optional[Tuple[int, int]]:
+        """(step, digest_tag) from the replicated state machine — the
+        restart path reads this, never local disk state."""
+        import repro.core.state as SM
+        st = self.sim.state
+        kid = rec.record_base(self.cfg.key_space) + \
+            int(rec.RecordType.CKPT_COMMIT)
+        lid = int(SM.leader_id(st, self.sim.static))
+        node = lid if lid >= 0 else 0
+        value = int(st["kv"][node, kid])
+        if value == 0:
+            return None
+        return rec.unpack_ckpt(value)
+
+    # -- membership / elasticity ---------------------------------------- #
+    def commit_membership(self, alive_bitmap: int) -> None:
+        self._put_typed(rec.RecordType.MEMBERSHIP,
+                        rec.pack_membership(alive_bitmap))
+
+    def membership(self) -> int:
+        import repro.core.state as SM
+        st = self.sim.state
+        kid = rec.record_base(self.cfg.key_space) + \
+            int(rec.RecordType.MEMBERSHIP)
+        lid = max(int(SM.leader_id(st, self.sim.static)), 0)
+        return int(st["kv"][lid, kid])
+
+    def commit_scale(self, k_s: int, k_o: int) -> None:
+        self._put_typed(rec.RecordType.SCALE, rec.pack_scale(k_s, k_o))
+
+    # -- pod failure ----------------------------------------------------- #
+    def kill_pod(self, pod: int) -> None:
+        """Simulate a voter-pod failure (e.g. the coordinator/leader)."""
+        st = self.sim.state
+        import jax.numpy as jnp
+        alive = st["alive"].at[pod].set(False)
+        self.sim.state = dict(st, alive=alive)
+
+    def revive_pod(self, pod: int) -> None:
+        st = self.sim.state
+        import repro.core.state as SM
+        self.sim.state = dict(
+            st,
+            alive=st["alive"].at[pod].set(True),
+            role=st["role"].at[pod].set(SM.FOLLOWER))
+
+    def wait_for_leader(self, max_ticks: int = 600) -> int:
+        import repro.core.state as SM
+        t = 0
+        while t < max_ticks:
+            lid = int(SM.leader_id(self.sim.state, self.sim.static))
+            if lid >= 0:
+                # classic Raft: a new leader commits a no-op of its own term
+                # so prior-term entries (e.g. CKPT_COMMIT) become committed
+                # and applied under the new leadership (§5.4.2)
+                self._put_typed(rec.RecordType.EPOCH_MARK,
+                                int(self.sim.state["tick"]))
+                return lid
+            self.kv._step(5)
+            t += 5
+        raise Timeout("no leader")

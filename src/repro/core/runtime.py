@@ -1,0 +1,302 @@
+"""BW-Raft runtime: jitted tick-scan epochs + host-side control plane.
+
+One *epoch* = `cfg.period_ticks` protocol ticks (jitted `lax.scan`), after
+which the control plane runs: collect stats ("peek", Algorithm 1), score
+the spot-offer pool and select instances (MCSA, "peak"), lease them into
+dead spot slots, wire secretaries/observers, compact the log window.
+`mode="raft"` disables spot roles entirely (the Original baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import manager as mgr
+from repro.core import mcsa
+from repro.core import step as step_mod
+from repro.core import state as state_mod
+from repro.core.cluster_config import ClusterConfig
+from repro.core.state import (DEAD, FOLLOWER, LEADER, OBSERVER, SECRETARY)
+
+
+def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
+                    read_rate: float, phi: float = 0.0) -> Dict:
+    S = cfg.num_sites
+    return {
+        "write_rate": jnp.float32(write_rate),
+        "read_rate": jnp.float32(read_rate),
+        "phi": jnp.float32(phi),
+        "heartbeat_interval": jnp.int32(cfg.heartbeat_interval),
+        "election_timeout_min": jnp.int32(cfg.election_timeout_min),
+        "election_timeout_max": jnp.int32(cfg.election_timeout_max),
+        "on_demand_price": jnp.asarray(
+            [s.on_demand_price for s in cfg.sites], jnp.float32),
+        "spot_price_mean": jnp.asarray(
+            [s.spot_price_mean for s in cfg.sites], jnp.float32),
+        "spot_price_vol": jnp.float32(cfg.sites[0].spot_price_vol),
+        "ticks_per_hour": jnp.float32(3600.0 / 0.01 / 100),  # 1 tick = 10ms
+        "network_cost_coef": jnp.float32(0.0005),
+    }
+
+
+@dataclasses.dataclass
+class EpochReport:
+    epoch: int
+    reads_arrived: int
+    writes_arrived: int
+    reads_served: int
+    writes_committed: int
+    read_lat_mean: float
+    read_lat_max: float
+    write_lat_mean: float
+    write_lat_p95: float
+    write_lat_p99: float
+    cost: float
+    n_secretaries: int
+    n_observers: int
+    leader_changes: int
+    no_leader_ticks: int
+    killed: int
+    decision: Optional[mgr.PeekDecision] = None
+
+    @property
+    def goodput(self) -> float:
+        return (self.reads_served + self.writes_committed) / 1.0
+
+
+_EPOCH_CACHE: Dict = {}
+
+
+def _epoch_fn_for(cfg: ClusterConfig, static):
+    """One jitted epoch function per cluster config — cfg_c values are jit
+    *arguments* (rate sweeps re-use the compiled program)."""
+    if cfg not in _EPOCH_CACHE:
+        @jax.jit
+        def epoch_fn(state, rng, cfg_c):
+            def body(carry, r):
+                st, _ = carry
+                st, m = step_mod.tick(st, static, cfg_c, r)
+                return (st, 0), m
+            rngs = jax.random.split(rng, cfg.period_ticks)
+            (state, _), ms = jax.lax.scan(body, (state, 0), rngs)
+            return state, ms
+        _EPOCH_CACHE[cfg] = epoch_fn
+    return _EPOCH_CACHE[cfg]
+
+
+class BWRaftSim:
+    """In-process BW-Raft cluster simulation (the paper's prototype)."""
+
+    def __init__(self, cfg: ClusterConfig, *, mode: str = "bwraft",
+                 write_rate: float = 8.0, read_rate: float = 32.0,
+                 phi: float = 0.0, seed: int = 0,
+                 manage_resources: bool = True):
+        assert mode in ("bwraft", "raft")
+        self.cfg = cfg
+        self.mode = mode
+        self.static = state_mod.build_static(cfg)
+        self.state = state_mod.init_state(cfg, self.static)
+        self.cfg_c = make_cfg_arrays(cfg, write_rate=write_rate,
+                                     read_rate=read_rate, phi=phi)
+        self.rng = jax.random.PRNGKey(seed)
+        self.np_rng = np.random.default_rng(seed + 1)
+        self.manage = manage_resources and mode == "bwraft"
+        self.predictor = mgr.RevocationPredictor(cfg.num_sites)
+        self.epoch = 0
+        self.reads_prev = 0
+        self._reports: List[EpochReport] = []
+        self._leased = np.zeros(cfg.num_sites, np.int64)
+        self._revoked = np.zeros(cfg.num_sites, np.int64)
+
+        self._epoch_fn = _epoch_fn_for(cfg, self.static)
+
+    # ------------------------------------------------------------------ #
+    def set_rates(self, write_rate=None, read_rate=None, phi=None):
+        if write_rate is not None:
+            self.cfg_c["write_rate"] = jnp.float32(write_rate)
+        if read_rate is not None:
+            self.cfg_c["read_rate"] = jnp.float32(read_rate)
+        if phi is not None:
+            self.cfg_c["phi"] = jnp.float32(phi)
+
+    def _lease(self, want_sec: int, want_obs: int) -> None:
+        """Peak: score a spot-offer pool (eq. 2), MCSA-select, wire roles."""
+        st = jax.tree.map(np.asarray, self.state)
+        cfg, static = self.cfg, self.static
+        site = static["site"]
+        V = static["V"]
+        n_sites = cfg.num_sites
+
+        def lease_slots(slot_mask, want, role_val):
+            free = np.where(slot_mask & (st["role"] == DEAD))[0]
+            if want <= 0 or len(free) == 0:
+                return []
+            pool = min(len(free) * 4, 256)
+            offer_site = self.np_rng.integers(0, n_sites, pool)
+            cpu = self.np_rng.uniform(1, 4, pool)
+            mem = self.np_rng.uniform(1, 8, pool)
+            price = np.array([cfg.sites[s].spot_price_mean for s in
+                              offer_site]) * self.np_rng.uniform(
+                0.6, 1.6, pool)
+            revoke = self.predictor.predict()[offer_site]
+            scores = mgr.spot_scores(cpu, mem, price, revoke)
+            picked = mcsa.mcsa_topk(scores, min(want, len(free)),
+                                    self.np_rng)
+            chosen_sites = [int(offer_site[i]) for i in picked]
+            slots = []
+            for s_id in chosen_sites:
+                cands = [f for f in free
+                         if site[f] == s_id and f not in slots]
+                if not cands:
+                    cands = [f for f in free if f not in slots]
+                if cands:
+                    slots.append(int(cands[0]))
+                    self._leased[site[slots[-1]]] += 1
+            return slots
+
+        sec_slots = lease_slots(static["is_secretary_slot"], want_sec,
+                                SECRETARY)
+        obs_slots = lease_slots(static["is_observer_slot"], want_obs,
+                                OBSERVER)
+
+        role = st["role"].copy()
+        alive = st["alive"].copy()
+        for s in sec_slots:
+            role[s] = SECRETARY
+            alive[s] = True
+        for s in obs_slots:
+            role[s] = OBSERVER
+            alive[s] = True
+
+        # wire followers -> site secretary (round robin), observers -> a
+        # follower at their site
+        sec_of = np.full(role.shape, -1, np.int32)
+        obs_of = np.full(role.shape, -1, np.int32)
+        for s_id in range(n_sites):
+            secs = [i for i in range(len(role))
+                    if role[i] == SECRETARY and alive[i] and site[i] == s_id]
+            fols = [i for i in range(V)
+                    if role[i] in (FOLLOWER, LEADER) and alive[i]
+                    and site[i] == s_id]
+            if secs:
+                for j, f in enumerate(fols):
+                    sec_of[f] = secs[j % len(secs)]
+            obss = [i for i in range(len(role))
+                    if role[i] == OBSERVER and alive[i] and site[i] == s_id]
+            if fols:
+                for j, o in enumerate(obss):
+                    obs_of[o] = fols[j % len(fols)]
+        # cross-site fallback wiring for observers at secretary-less sites
+        all_fols = [i for i in range(V) if role[i] in (FOLLOWER, LEADER)
+                    and alive[i]]
+        for o in range(len(role)):
+            if role[o] == OBSERVER and alive[o] and obs_of[o] < 0 and \
+                    all_fols:
+                obs_of[o] = all_fols[o % len(all_fols)]
+
+        self.state = dict(self.state,
+                          role=jnp.asarray(role),
+                          alive=jnp.asarray(alive),
+                          sec_of=jnp.asarray(sec_of),
+                          obs_of=jnp.asarray(obs_of))
+
+    def _compact(self) -> None:
+        """Epoch-boundary log compaction (state machines keep the data)."""
+        st = self.state
+        L = st["log_term"].shape[1]
+        N = st["log_term"].shape[0]
+        z = jnp.zeros((N,), jnp.int32)
+        self.state = dict(
+            st,
+            log_term=jnp.zeros_like(st["log_term"]),
+            log_key=jnp.zeros_like(st["log_key"]),
+            log_val=jnp.zeros_like(st["log_val"]),
+            log_len=z, commit_len=z, applied_len=z, match_len=z,
+            app_arrive_t=jnp.full((N,), -1, jnp.int32),
+            ack_arrive_t=jnp.full((N,), -1, jnp.int32),
+            entry_submit_t=jnp.full((L,), -1, jnp.int32),
+            entry_commit_t=jnp.full((L,), -1, jnp.int32),
+            reads_arrived=jnp.zeros((), jnp.int32),
+            writes_arrived=jnp.zeros((), jnp.int32),
+            reads_served=jnp.zeros((), jnp.int32),
+            writes_committed=jnp.zeros((), jnp.int32),
+            read_lat_sum=jnp.zeros((), jnp.float32),
+            read_lat_max=jnp.zeros((), jnp.float32),
+        )
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self) -> EpochReport:
+        self.rng, sub = jax.random.split(self.rng)
+        cost_before = float(self.state["cost_accrued"])
+        self.state, ms = self._epoch_fn(self.state, sub, self.cfg_c)
+        st = jax.tree.map(np.asarray, self.state)
+        ms = jax.tree.map(np.asarray, ms)
+
+        # write latency from the entry timeline
+        sub_t = st["entry_submit_t"]
+        com_t = st["entry_commit_t"]
+        done = (sub_t >= 0) & (com_t >= 0)
+        lat = (com_t[done] - sub_t[done]).astype(float)
+        reads_served = int(st["reads_served"])
+        rep = EpochReport(
+            epoch=self.epoch,
+            reads_arrived=int(st["reads_arrived"]),
+            writes_arrived=int(st["writes_arrived"]),
+            reads_served=reads_served,
+            writes_committed=int(done.sum()),
+            read_lat_mean=float(st["read_lat_sum"] / max(reads_served, 1)),
+            read_lat_max=float(st["read_lat_max"]),
+            write_lat_mean=float(lat.mean()) if lat.size else float("nan"),
+            write_lat_p95=float(np.percentile(lat, 95)) if lat.size
+            else float("nan"),
+            write_lat_p99=float(np.percentile(lat, 99)) if lat.size
+            else float("nan"),
+            cost=float(st["cost_accrued"]) - cost_before,
+            n_secretaries=int(ms["n_secretaries"][-1]),
+            n_observers=int(ms["n_observers"][-1]),
+            leader_changes=int((np.diff(ms["leader_term"]) > 0).sum()),
+            no_leader_ticks=int((ms["has_leader"] == 0).sum()),
+            killed=int(ms["killed"].sum()),
+        )
+
+        # ---- control plane: peek (Algorithm 1) + peak (MCSA lease) ------
+        if self.manage:
+            self._revoked += np.bincount(
+                self.static["site"][~np.asarray(st["alive"])],
+                minlength=self.cfg.num_sites) * 0  # placeholder census
+            self.predictor.update(
+                np.full(self.cfg.num_sites, rep.killed /
+                        max(self.cfg.num_sites, 1)),
+                np.maximum(self._leased, 1))
+            stats = mgr.PeekStats(
+                reads_prev=self.reads_prev,
+                reads_now=rep.reads_arrived,
+                writes_now=rep.writes_arrived,
+                followers_per_site=[s.followers for s in self.cfg.sites],
+                k_s=rep.n_secretaries, k_o=rep.n_observers,
+                budget=self.cfg.budget_per_period,
+                spot_price=float(np.mean(st["spot_price"])),
+                on_demand_price=float(
+                    np.mean([s.on_demand_price for s in self.cfg.sites])),
+            )
+            dec = mgr.algorithm1(self.cfg, stats)
+            rep.decision = dec
+            self._lease(max(dec.dk_s, 0), max(dec.dk_o, 0))
+        self.reads_prev = rep.reads_arrived
+
+        self._compact()
+        self.epoch += 1
+        self._reports.append(rep)
+        return rep
+
+    def run(self, epochs: int) -> List[EpochReport]:
+        return [self.run_epoch() for _ in range(epochs)]
+
+    @property
+    def reports(self) -> List[EpochReport]:
+        return self._reports

@@ -1,0 +1,151 @@
+"""BW-Raft cluster state: a struct-of-arrays pytree, leading axis = node.
+
+Node layout: ids [0, V) are the on-demand *voters* (leader / followers /
+candidates — one per `SiteConfig.followers`), ids [V, V+MS) are secretary
+slots, ids [V+MS, N) are observer slots.  Spot slots are DEAD until the
+resource manager leases an instance into them; revocation kills them.
+
+The log is windowed per epoch (entries reset at epoch boundaries after the
+KV state machine has absorbed them — Raft log compaction); entry global
+submit/commit ticks live in `entry_submit_t` / `entry_commit_t` for latency
+accounting.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cluster_config import ClusterConfig
+
+# roles
+FOLLOWER, CANDIDATE, LEADER, SECRETARY, OBSERVER, DEAD = range(6)
+NONE = jnp.int32(-1)
+
+
+def build_static(cfg: ClusterConfig) -> Dict[str, np.ndarray]:
+    """Static per-node tables (site, voter mask, rtt matrix, capacities)."""
+    V = cfg.num_voters
+    MS, MO = cfg.max_secretaries, cfg.max_observers
+    N = V + MS + MO
+    site = np.zeros((N,), np.int32)
+    i = 0
+    for s_idx, s in enumerate(cfg.sites):
+        for _ in range(s.followers):
+            site[i] = s_idx
+            i += 1
+    # spot slots round-robin over sites
+    for j in range(V, N):
+        site[j] = (j - V) % cfg.num_sites
+    is_voter = np.zeros((N,), bool)
+    is_voter[:V] = True
+    is_secretary_slot = np.zeros((N,), bool)
+    is_secretary_slot[V:V + MS] = True
+    is_observer_slot = np.zeros((N,), bool)
+    is_observer_slot[V + MS:] = True
+
+    rtt = np.zeros((N, N), np.int32)
+    for a in range(N):
+        for b in range(N):
+            sa, sb = site[a], site[b]
+            if sa == sb:
+                rtt[a, b] = cfg.sites[sa].rtt_intra
+            else:
+                rtt[a, b] = (cfg.sites[sa].rtt_inter
+                             + cfg.sites[sb].rtt_inter) // 2
+    return {
+        "site": site, "is_voter": is_voter,
+        "is_secretary_slot": is_secretary_slot,
+        "is_observer_slot": is_observer_slot,
+        "rtt": rtt, "N": N, "V": V,
+        "majority": V // 2 + 1,
+        "work_capacity": 8,       # reads a node can serve per tick
+        "msg_budget": 16,         # fan-out msg-units a node sends per tick
+        "entries_per_msg": 32,    # batch payload per msg-unit (bytes model)
+        "max_ship": 256,          # entries shipped per append batch
+        "max_apply": 8,           # state-machine applies per tick
+    }
+
+
+def init_state(cfg: ClusterConfig, static) -> Dict[str, jnp.ndarray]:
+    N, V, L, K = static["N"], static["V"], cfg.max_log, cfg.key_space
+    S = cfg.num_sites
+    z = lambda *sh: jnp.zeros(sh, jnp.int32)
+    st = {
+        "tick": jnp.zeros((), jnp.int32),
+        "role": jnp.where(jnp.asarray(static["is_voter"]),
+                          jnp.full((N,), FOLLOWER, jnp.int32),
+                          jnp.full((N,), DEAD, jnp.int32)),
+        "alive": jnp.asarray(static["is_voter"]),
+        "term": z(N),
+        "voted_for": jnp.full((N,), -1, jnp.int32),
+        "votes_received": z(N),
+        "log_term": z(N, L),
+        "log_key": z(N, L),
+        "log_val": z(N, L),
+        "log_len": z(N),
+        "commit_len": z(N),          # commit *length* known at node
+        "applied_len": z(N),
+        "kv": z(N, K),
+        # timers
+        # staggered initial timers: avoids simultaneous-candidate storms
+        "election_timer": (jnp.int32(cfg.election_timeout_min) +
+                           (jnp.arange(N, dtype=jnp.int32) * 7) %
+                           jnp.int32(cfg.election_timeout_max -
+                                     cfg.election_timeout_min + 1)),
+        "heartbeat_timer": z(N),
+        # leader bookkeeping (valid for current leader row semantics)
+        "match_len": z(N),           # replicated length per node (leader view)
+        # in-flight append batches (one slot per node)
+        "app_arrive_t": jnp.full((N,), -1, jnp.int32),
+        "app_from_len": z(N),        # sender match_len when shipped
+        "app_upto": z(N),            # shipped log length
+        "app_term": z(N),            # sender's term
+        "app_commit": z(N),          # sender's commit length (piggyback)
+        # in-flight acks to the commit authority (leader or via secretary)
+        "ack_arrive_t": jnp.full((N,), -1, jnp.int32),
+        "ack_upto": z(N),
+        # vote traffic (one in-flight request slot per voter)
+        "vreq_t": jnp.full((N,), -1, jnp.int32),
+        "vreq_from": jnp.full((N,), -1, jnp.int32),
+        "vreq_term": z(N),
+        "vreq_lastterm": z(N),
+        "vreq_lastlen": z(N),
+        "grant_t": jnp.full((N,), -1, jnp.int32),   # per-voter grant arrival
+        "grant_to": jnp.full((N,), -1, jnp.int32),
+        "grant_term": z(N),
+        # role wiring
+        "sec_of": jnp.full((N,), -1, jnp.int32),    # follower -> secretary id
+        "obs_of": jnp.full((N,), -1, jnp.int32),    # observer -> follower id
+        # queueing / service accounting
+        "read_queue": z(N),
+        "write_pending": jnp.zeros((), jnp.int32),   # global client queue
+        "leader_work": z(N),
+        # per-entry timing (global logical log, window L)
+        "entry_submit_t": jnp.full((L,), -1, jnp.int32),
+        "entry_commit_t": jnp.full((L,), -1, jnp.int32),
+        # spot market
+        "spot_price": jnp.asarray(
+            [cfg.sites[s].spot_price_mean for s in range(S)], jnp.float32),
+        "spot_bid": jnp.asarray(
+            [cfg.sites[s].spot_price_mean * 1.5 for s in range(S)],
+            jnp.float32),
+        # workload stats accumulators (reset each period by the manager)
+        "reads_arrived": jnp.zeros((), jnp.int32),
+        "writes_arrived": jnp.zeros((), jnp.int32),
+        "reads_served": jnp.zeros((), jnp.int32),
+        "writes_committed": jnp.zeros((), jnp.int32),
+        # read latency accounting (aggregate)
+        "read_lat_sum": jnp.zeros((), jnp.float32),
+        "read_lat_max": jnp.zeros((), jnp.float32),
+        "cost_accrued": jnp.zeros((), jnp.float32),
+    }
+    return st
+
+
+def leader_id(state, static):
+    """Current leader id or -1 (max over one-hot; at most one by safety)."""
+    is_leader = (state["role"] == LEADER) & state["alive"]
+    ids = jnp.arange(is_leader.shape[0])
+    return jnp.max(jnp.where(is_leader, ids, -1))

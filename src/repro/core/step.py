@@ -1,0 +1,583 @@
+"""One BW-Raft protocol tick — pure, branch-free, jit/vmap/scan-able.
+
+Implements the paper's §3 mechanics with an explicit latency model
+(per-link RTT classes) and per-node work-capacity accounting:
+
+  1. spot-market dynamics: price step, revocations kill secretaries/observers
+  2. client arrivals: Poisson reads (to observers/followers) + writes (to
+     the leader's queue)
+  3. leader: accept writes into the log (capacity-bounded), ship
+     AppendEntries batches — to its secretaries (BW-Raft) or directly to
+     every follower (plain Raft) — heartbeats included
+  4. secretary relay: forward leader batches to assigned followers,
+     aggregate acks, report counts to the leader
+  5. followers: log-matching check on (prev_idx, prev_term), truncate
+     conflicts, append, ack; forward uncommitted appends to observers
+  6. leader commit: majority of *voters* (secretaries/observers never
+     count — Property 3.4 state irrelevancy), entry commit times recorded
+  7. all nodes: apply committed entries to the KV state machine
+  8. reads: served by observers that applied >= readindex, else rerouted
+     to their follower (queueing latency tracked)
+  9. elections: randomized timeouts, RequestVote with log-up-to-date
+     restriction, majority-of-voters win (Property 3.1)
+
+Every rule is masked array math, so thousands of clusters step in parallel
+under vmap and 1e5+ ticks run under lax.scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import (CANDIDATE, DEAD, FOLLOWER, LEADER, OBSERVER,
+                              SECRETARY, leader_id)
+
+
+def _rand(rng, n):
+    return jax.random.split(rng, n)
+
+
+def spot_step(state, static, cfg_c, rng):
+    """Mean-reverting site price processes + revocation of spot nodes."""
+    S = state["spot_price"].shape[0]
+    r_price, r_revoke, r_fail = _rand(rng, 3)
+    mean = cfg_c["spot_price_mean"]
+    vol = cfg_c["spot_price_vol"]
+    noise = jax.random.normal(r_price, (S,)) * vol * mean
+    price = state["spot_price"] + 0.2 * (mean - state["spot_price"]) + \
+        0.15 * noise
+    price = jnp.maximum(price, 0.1 * mean)
+
+    revoked_site = price > state["spot_bid"]                  # (S,)
+    site = jnp.asarray(static["site"])
+    is_spot = ~jnp.asarray(static["is_voter"])
+    # i.i.d. failure knob phi on top of price-driven revocation
+    iid_fail = jax.random.uniform(r_fail, site.shape) < cfg_c["phi"]
+    killed = is_spot & state["alive"] & (revoked_site[site] | iid_fail)
+
+    alive = state["alive"] & ~killed
+    role = jnp.where(killed, DEAD, state["role"])
+    return dict(state, spot_price=price, alive=alive, role=role), killed
+
+
+def workload_step(state, static, cfg_c, rng):
+    """Client arrivals this tick: writes -> leader queue, reads -> per-node
+    read queues (observers first, at their site, else followers)."""
+    r_w, r_r, r_key = _rand(rng, 3)
+    lam_w = cfg_c["write_rate"]
+    lam_r = cfg_c["read_rate"]
+    n_writes = jax.random.poisson(r_w, lam_w).astype(jnp.int32)
+    n_reads = jax.random.poisson(r_r, lam_r).astype(jnp.int32)
+
+    N = state["role"].shape[0]
+    # read routing: spread over alive observers; overflow to followers
+    is_obs = (state["role"] == OBSERVER) & state["alive"]
+    is_fol = ((state["role"] == FOLLOWER) | (state["role"] == LEADER)) & \
+        state["alive"]
+    n_obs = jnp.maximum(jnp.sum(is_obs), 0)
+    n_fol = jnp.maximum(jnp.sum(is_fol), 1)
+    cap = jnp.int32(static["work_capacity"])
+    # offload up to 90% of reads, but never beyond observer service capacity
+    # (headroom x2 absorbs bursts; the rest goes to followers)
+    obs_share = jnp.where(n_obs > 0,
+                          jnp.minimum((n_reads * 9) // 10, n_obs * cap),
+                          0)
+    fol_share = n_reads - obs_share
+    per_obs = jnp.where(is_obs, obs_share // jnp.maximum(n_obs, 1), 0)
+    per_fol = jnp.where(is_fol, fol_share // n_fol, 0)
+    read_queue = state["read_queue"] + per_obs + per_fol
+
+    return dict(state,
+                read_queue=read_queue,
+                write_pending=state["write_pending"] + n_writes,
+                reads_arrived=state["reads_arrived"] + n_reads,
+                writes_arrived=state["writes_arrived"] + n_writes), \
+        (n_writes, n_reads, r_key)
+
+
+def leader_step(state, static, cfg_c, rng_key):
+    """Leader accepts queued writes into its log and ships append batches."""
+    N = state["role"].shape[0]
+    L = state["log_term"].shape[1]
+    lid = leader_id(state, static)
+    has_leader = lid >= 0
+    lid_c = jnp.maximum(lid, 0)
+    tick = state["tick"]
+
+    # --- accept writes into the leader log (bounded by capacity & space) --
+    cap = jnp.int32(static["work_capacity"])
+    space = L - state["log_len"][lid_c]
+    n_accept = jnp.where(has_leader,
+                         jnp.minimum(jnp.minimum(state["write_pending"],
+                                                 cap), space), 0)
+    start = state["log_len"][lid_c]
+    idxs = start + jnp.arange(64)                             # static window
+    take = jnp.arange(64) < n_accept
+    keys = jax.random.randint(rng_key, (64,), 0, state["kv"].shape[1])
+    vals = jax.random.randint(jax.random.fold_in(rng_key, 1), (64,),
+                              0, 2**20)
+    safe_idx = jnp.where(take, idxs, L - 1)
+    log_term = state["log_term"].at[lid_c, safe_idx].set(
+        jnp.where(take, state["term"][lid_c], state["log_term"][lid_c,
+                                                                safe_idx]),
+        mode="drop")
+    log_key = state["log_key"].at[lid_c, safe_idx].set(
+        jnp.where(take, keys, state["log_key"][lid_c, safe_idx]),
+        mode="drop")
+    log_val = state["log_val"].at[lid_c, safe_idx].set(
+        jnp.where(take, vals, state["log_val"][lid_c, safe_idx]),
+        mode="drop")
+    entry_submit = state["entry_submit_t"].at[safe_idx].set(
+        jnp.where(take & has_leader, tick, state["entry_submit_t"][safe_idx]),
+        mode="drop")
+    new_len = jnp.where(has_leader, start + n_accept, start)
+    log_len = state["log_len"].at[lid_c].set(new_len)
+
+    state = dict(state, log_term=log_term, log_key=log_key, log_val=log_val,
+                 log_len=log_len,
+                 write_pending=state["write_pending"] - n_accept,
+                 entry_submit_t=entry_submit)
+
+    # --- ship AppendEntries (budgeted fan-out: THE leader bottleneck) ----
+    rtt = jnp.asarray(static["rtt"])
+
+    # secretary relay wiring: follower f's batch goes via sec_of[f] if that
+    # secretary is alive, else directly from the leader.
+    sec = state["sec_of"]                                     # (N,)
+    sec_alive = (sec >= 0) & state["alive"][jnp.maximum(sec, 0)] & \
+        (state["role"][jnp.maximum(sec, 0)] == SECRETARY)
+    relay = jnp.where(sec_alive, sec, lid_c)                  # hop node
+    is_target = ((state["role"] == FOLLOWER) | (state["role"] == CANDIDATE)) \
+        & state["alive"] & (jnp.arange(N) != lid_c)
+    # delivery latency: leader->relay + relay->target (direct: leader->target)
+    lat = rtt[lid_c, relay] * (relay != lid_c) + \
+        rtt[relay, jnp.arange(N)]
+    arrive = tick + lat
+    # Shipping is continuous (slot-free gating paces it to one batch per
+    # RTT), but the LEADER can emit at most `msg_budget` direct messages
+    # per tick: plain Raft pays one per follower, BW-Raft pays one per
+    # secretary (the offload, paper §3/Fig 4).  Relayed batches spend the
+    # secretary's capacity instead, which is bounded by fanout f by
+    # construction.
+    want = has_leader & is_target & (state["app_arrive_t"] < 0)
+    direct = want & (relay == lid_c)
+    relayed = want & (relay != lid_c)
+    n_sec_msgs = jnp.sum(jnp.any(relayed) &
+                         ((state["role"] == SECRETARY) & state["alive"]))
+    msg_budget = jnp.maximum(
+        jnp.int32(static["msg_budget"]) - n_sec_msgs, 0)
+    # cost of a batch scales with its payload (network/CPU bytes): this is
+    # what makes the single leader the bottleneck at scale (paper §1)
+    pending = jnp.maximum(state["log_len"][lid_c] - state["match_len"], 0)
+    batch_cost = 1 + jnp.minimum(pending, static["max_ship"]) //         static["entries_per_msg"]
+    rank = jnp.cumsum(jnp.where(direct, batch_cost, 0))
+    ship = relayed | (direct & (rank <= msg_budget))
+    app_arrive_t = jnp.where(ship, arrive, state["app_arrive_t"])
+    app_from_len = jnp.where(ship, state["match_len"], state["app_from_len"])
+    app_upto = jnp.where(
+        ship, jnp.minimum(state["log_len"][lid_c],
+                          state["match_len"] + static["max_ship"]),
+        state["app_upto"])
+    app_term = jnp.where(ship, state["term"][lid_c], state["app_term"])
+    app_commit = jnp.where(ship, state["commit_len"][lid_c],
+                           state["app_commit"])
+    # leader work accounting: direct messages + one per active secretary
+    leader_work = state["leader_work"].at[lid_c].add(
+        jnp.sum(ship & direct) + n_sec_msgs)
+
+    return dict(state, app_arrive_t=app_arrive_t, app_from_len=app_from_len,
+                app_upto=app_upto, app_term=app_term, app_commit=app_commit,
+                leader_work=leader_work)
+
+
+def follower_step(state, static, cfg_c):
+    """Deliver due append batches: log-matching check, truncate-adopt,
+    schedule acks; followers forward to observers eagerly (Step 6, Fig. 5)."""
+    N = state["role"].shape[0]
+    L = state["log_term"].shape[1]
+    tick = state["tick"]
+    lid = leader_id(state, static)
+    lid_c = jnp.maximum(lid, 0)
+    rtt = jnp.asarray(static["rtt"])
+
+    delivered = (state["app_arrive_t"] >= 0) & \
+        (state["app_arrive_t"] <= tick) & state["alive"]
+    # term check: reject stale-term appends (Property 3.1/3.3); the slot
+    # clears on ANY delivery, else stale batches deadlock the link
+    ok_term = state["app_term"] >= state["term"]
+    due = delivered & ok_term & (lid >= 0)
+
+    # log-matching at prev = app_from_len-1: follower's term at that index
+    # must equal the leader's (content is the leader's log row).
+    prev = state["app_from_len"] - 1
+    prev_c = jnp.clip(prev, 0, L - 1)
+    my_prev_term = jnp.take_along_axis(
+        state["log_term"], prev_c[:, None], axis=1)[:, 0]
+    ldr_prev_term = state["log_term"][lid_c, prev_c]
+    match = (prev < 0) | (my_prev_term == ldr_prev_term)
+    accept = due & match
+    # mismatch: nack -> leader will retry from an earlier match point; we
+    # model the optimized backtrack by halving match_len
+    nack = due & ~match
+
+    # adopt leader entries [from_len, upto) — window-bounded copy
+    W = static["max_ship"]
+    base = jnp.where(accept, state["app_from_len"], 0)
+    widx = base[:, None] + jnp.arange(W)[None, :]             # (N,W)
+    valid = accept[:, None] & (widx < state["app_upto"][:, None]) & \
+        (widx < L)
+    widx_c = jnp.clip(widx, 0, L - 1)
+    ldr_terms = state["log_term"][lid_c][widx_c]
+    ldr_keys = state["log_key"][lid_c][widx_c]
+    ldr_vals = state["log_val"][lid_c][widx_c]
+    rows = jnp.broadcast_to(jnp.arange(N)[:, None], widx.shape)
+    put = lambda dst, src: dst.at[
+        jnp.where(valid, rows, N), jnp.where(valid, widx_c, L)].set(
+        src, mode="drop")
+    log_term = put(state["log_term"], ldr_terms)
+    log_key = put(state["log_key"], ldr_keys)
+    log_val = put(state["log_val"], ldr_vals)
+    new_len = jnp.where(accept,
+                        jnp.minimum(state["app_upto"],
+                                    state["app_from_len"] + W),
+                        state["log_len"])
+    new_len = jnp.where(accept & (state["log_len"] > new_len) &
+                        (my_prev_term == ldr_prev_term),
+                        jnp.maximum(state["log_len"], new_len), new_len)
+    # followers adopt term & learn commit (piggybacked)
+    term = jnp.where(due, jnp.maximum(state["term"], state["app_term"]),
+                     state["term"])
+    role = jnp.where(due & (state["role"] == CANDIDATE), FOLLOWER,
+                     state["role"])
+    commit_len = jnp.where(accept,
+                           jnp.maximum(state["commit_len"],
+                                       jnp.minimum(state["app_commit"],
+                                                   new_len)),
+                           state["commit_len"])
+    # heartbeat resets election timer (deterministic jitter from tick+id)
+    span = cfg_c["election_timeout_max"] - cfg_c["election_timeout_min"] + 1
+    jitter = (tick + jnp.arange(N) * 7) % span
+    election_timer = jnp.where(
+        due, cfg_c["election_timeout_min"] + jitter,
+        state["election_timer"])
+
+    # ack back via the same relay path
+    sec = state["sec_of"]
+    sec_alive = (sec >= 0) & state["alive"][jnp.maximum(sec, 0)] & \
+        (state["role"][jnp.maximum(sec, 0)] == SECRETARY)
+    relay = jnp.where(sec_alive, sec, lid_c)
+    lat = rtt[jnp.arange(N), relay] + rtt[relay, lid_c] * (relay != lid_c)
+    ack_arrive_t = jnp.where(accept | nack, tick + lat,
+                             state["ack_arrive_t"])
+    ack_upto = jnp.where(accept, new_len,
+                         jnp.where(nack, state["app_from_len"] // 2,
+                                   state["ack_upto"]))
+
+    app_arrive_t = jnp.where(delivered, -1, state["app_arrive_t"])
+    return dict(state, log_term=log_term, log_key=log_key, log_val=log_val,
+                log_len=new_len, term=term, role=role, commit_len=commit_len,
+                election_timer=election_timer, ack_arrive_t=ack_arrive_t,
+                ack_upto=ack_upto, app_arrive_t=app_arrive_t)
+
+
+def commit_step(state, static, cfg_c):
+    """Leader ingests due acks -> match_len; commits majority-replicated
+    prefix (voters only); records entry commit times."""
+    N = state["role"].shape[0]
+    L = state["log_term"].shape[1]
+    tick = state["tick"]
+    lid = leader_id(state, static)
+    lid_c = jnp.maximum(lid, 0)
+    has_leader = lid >= 0
+
+    ack_due = (state["ack_arrive_t"] >= 0) & (state["ack_arrive_t"] <= tick)
+    # ack ingestion is budgeted the same way: direct acks consume leader
+    # capacity, secretary-aggregated reports are O(#secretaries)
+    sec = state["sec_of"]
+    sec_alive = (sec >= 0) & state["alive"][jnp.maximum(sec, 0)] & \
+        (state["role"][jnp.maximum(sec, 0)] == SECRETARY)
+    direct_ack = ack_due & ~sec_alive
+    rank = jnp.cumsum(direct_ack.astype(jnp.int32))
+    ingest = (ack_due & sec_alive) | \
+        (direct_ack & (rank <= static["msg_budget"]))
+    match_len = jnp.where(ingest, jnp.maximum(state["match_len"],
+                                              state["ack_upto"]),
+                          state["match_len"])
+    # nacks shrink match (ack_upto < match): allow decrease for retry
+    match_len = jnp.where(ingest & (state["ack_upto"] <
+                                    state["match_len"]),
+                          state["ack_upto"], match_len)
+    ack_arrive_t = jnp.where(ingest, -1, state["ack_arrive_t"])
+    match_len = match_len.at[lid_c].set(
+        jnp.where(has_leader, state["log_len"][lid_c], match_len[lid_c]))
+
+    # commit = largest l such that #voters with match>=l is a majority,
+    # restricted to entries of the current term (Raft §5.4.2)
+    is_voter = jnp.asarray(static["is_voter"])
+    counts = jnp.sum((match_len[None, :] >=
+                      (jnp.arange(L) + 1)[:, None]) &
+                     is_voter[None, :] & state["alive"][None, :], axis=1)
+    can = counts >= static["majority"]
+    lens = jnp.arange(L) + 1
+    term_ok = state["log_term"][lid_c, jnp.arange(L)] == state["term"][lid_c]
+    commit = jnp.max(jnp.where(can & term_ok, lens, 0))
+    new_commit = jnp.where(has_leader,
+                           jnp.maximum(state["commit_len"][lid_c], commit),
+                           0)
+    newly = (jnp.arange(L) >= state["commit_len"][lid_c]) & \
+        (jnp.arange(L) < new_commit) & has_leader
+    entry_commit_t = jnp.where(newly & (state["entry_commit_t"] < 0),
+                               tick, state["entry_commit_t"])
+    commit_len = state["commit_len"].at[lid_c].set(
+        jnp.where(has_leader, new_commit, state["commit_len"][lid_c]))
+    n_new = jnp.where(has_leader,
+                      new_commit - state["commit_len"][lid_c], 0)
+    return dict(state, match_len=match_len, ack_arrive_t=ack_arrive_t,
+                commit_len=commit_len, entry_commit_t=entry_commit_t,
+                writes_committed=state["writes_committed"] + n_new)
+
+
+def apply_step(state, static, cfg_c):
+    """All nodes apply committed entries to their KV state machine
+    (bounded per tick; Property 3.2 order = log order)."""
+    N, L = state["log_term"].shape
+    A = static["max_apply"]
+    base = state["applied_len"]                               # (N,)
+    todo = jnp.minimum(state["commit_len"] - base, A)
+    offs = jnp.arange(A)[None, :]
+    idx = base[:, None] + offs
+    valid = (offs < todo[:, None]) & (idx < L) & state["alive"][:, None]
+    idx_c = jnp.clip(idx, 0, L - 1)
+    keys = jnp.take_along_axis(state["log_key"], idx_c, axis=1)
+    vals = jnp.take_along_axis(state["log_val"], idx_c, axis=1)
+    rows = jnp.broadcast_to(jnp.arange(N)[:, None], keys.shape)
+    K = state["kv"].shape[1]
+    # later entries win: scatter in index order (at most A per row, A small —
+    # apply sequentially over the A offsets to preserve order)
+    kv = state["kv"]
+    for a in range(A):
+        kv = kv.at[jnp.where(valid[:, a], jnp.arange(N), N),
+                   jnp.where(valid[:, a], keys[:, a], K)].set(
+            vals[:, a], mode="drop")
+    applied = base + jnp.maximum(todo, 0)
+    return dict(state, kv=kv, applied_len=applied)
+
+
+def observer_sync_step(state, static, cfg_c):
+    """Followers eagerly forward appended entries to their observers
+    (paper Fig. 5 / §3.1 Step 6): observers mirror their follower's applied
+    state machine with intra-site lag (rtt_intra=1 tick)."""
+    is_obs = (state["role"] == OBSERVER) & state["alive"]
+    fol = jnp.maximum(state["obs_of"], 0)
+    fol_ok = (state["obs_of"] >= 0) & state["alive"][fol]
+    sync = is_obs & fol_ok
+    applied = jnp.where(sync, state["applied_len"][fol],
+                        state["applied_len"])
+    commit = jnp.where(sync, state["commit_len"][fol], state["commit_len"])
+    log_len = jnp.where(sync, state["log_len"][fol], state["log_len"])
+    kv = jnp.where(sync[:, None], state["kv"][fol], state["kv"])
+    # observers mirror the log too (they apply the same commands in the
+    # same order — Property 3.2 holds across observer replicas)
+    lt = jnp.where(sync[:, None], state["log_term"][fol], state["log_term"])
+    lk = jnp.where(sync[:, None], state["log_key"][fol], state["log_key"])
+    lv = jnp.where(sync[:, None], state["log_val"][fol], state["log_val"])
+    return dict(state, applied_len=applied, commit_len=commit,
+                log_len=log_len, kv=kv, log_term=lt, log_key=lk, log_val=lv)
+
+
+def read_step(state, static, cfg_c):
+    """Serve queued reads.  Observers serve only if applied >= readindex
+    (= leader commit at request time; approximated by current leader commit);
+    otherwise the read reroutes to the observer's follower (+rtt).  Latency
+    = service wait (queue/capacity) + routing RTTs (readindex via global
+    secretary when present — §4.3)."""
+    N = state["role"].shape[0]
+    lid = leader_id(state, static)
+    lid_c = jnp.maximum(lid, 0)
+    rtt = jnp.asarray(static["rtt"])
+    cap = jnp.int32(static["work_capacity"])
+
+    is_obs = (state["role"] == OBSERVER) & state["alive"]
+    is_srv = ((state["role"] == FOLLOWER) | (state["role"] == LEADER)) & \
+        state["alive"]
+    readindex = state["commit_len"][lid_c]
+    fresh = state["applied_len"] >= readindex
+    can_serve = (is_obs & fresh) | is_srv
+
+    served = jnp.where(can_serve, jnp.minimum(state["read_queue"], cap), 0)
+    # stale observers reroute to their follower (1 extra hop)
+    fol = jnp.maximum(state["obs_of"], 0)
+    reroute = jnp.where(is_obs & ~fresh, state["read_queue"], 0)
+    read_queue = state["read_queue"] - served - reroute
+    read_queue = read_queue.at[fol].add(
+        jnp.where(is_obs & ~fresh, reroute, 0), mode="drop")
+
+    # latency model: queue wait + readindex confirmation.  With a global
+    # secretary alive the leader needs no self-confirmation round (§4.3),
+    # halving the observer readindex trip.
+    any_sec = jnp.any((state["role"] == SECRETARY) & state["alive"])
+    ri_rtt = rtt[jnp.arange(N), lid_c] * jnp.where(any_sec, 1, 2)
+    wait = state["read_queue"] // jnp.maximum(cap, 1)
+    lat = (wait + 1 + jnp.where(is_obs, ri_rtt, rtt[jnp.arange(N), lid_c]))
+    lat_sum = jnp.sum(jnp.where(served > 0,
+                                lat.astype(jnp.float32) * served, 0.0))
+    lat_max = jnp.max(jnp.where(served > 0, lat.astype(jnp.float32), 0.0))
+    return dict(state, read_queue=read_queue,
+                reads_served=state["reads_served"] + jnp.sum(served),
+                read_lat_sum=state["read_lat_sum"] + lat_sum,
+                read_lat_max=jnp.maximum(state["read_lat_max"], lat_max))
+
+
+def election_step(state, static, cfg_c, rng):
+    """Timeouts -> candidacy; RequestVote/grants with log restriction;
+    majority of voters -> leader (Property 3.1)."""
+    N = state["role"].shape[0]
+    L = state["log_term"].shape[1]
+    tick = state["tick"]
+    rtt = jnp.asarray(static["rtt"])
+    is_voter = jnp.asarray(static["is_voter"])
+    r_timeout, = _rand(rng, 1)
+
+    # --- timers ----------------------------------------------------------
+    lid = leader_id(state, static)
+    et = state["election_timer"] - 1
+    timed_out = (et <= 0) & is_voter & state["alive"] & \
+        ((state["role"] == FOLLOWER) | (state["role"] == CANDIDATE))
+    # become candidate
+    term = jnp.where(timed_out, state["term"] + 1, state["term"])
+    role = jnp.where(timed_out, CANDIDATE, state["role"])
+    voted_for = jnp.where(timed_out, jnp.arange(N), state["voted_for"])
+    new_timeout = jax.random.randint(
+        r_timeout, (N,), cfg_c["election_timeout_min"],
+        cfg_c["election_timeout_max"] + 1)
+    et = jnp.where(timed_out | (et <= 0), new_timeout, et)
+
+    # candidates broadcast vote requests (one in-flight slot per voter;
+    # higher term wins the slot)
+    is_cand = (role == CANDIDATE) & state["alive"]
+    cand_term = jnp.where(is_cand, term, -1)
+    best_cand = jnp.argmax(cand_term)                         # highest term
+    have_cand = jnp.max(cand_term) >= 0
+    last_len = state["log_len"][best_cand]
+    last_term = state["log_term"][best_cand,
+                                  jnp.clip(last_len - 1, 0, L - 1)]
+    newer = term[best_cand] > state["vreq_term"]
+    place = have_cand & is_voter & newer & state["alive"]
+    vreq_t = jnp.where(place, tick + rtt[best_cand], state["vreq_t"])
+    vreq_from = jnp.where(place, best_cand, state["vreq_from"])
+    vreq_term = jnp.where(place, term[best_cand], state["vreq_term"])
+    vreq_lastterm = jnp.where(place, last_term, state["vreq_lastterm"])
+    vreq_lastlen = jnp.where(place, last_len, state["vreq_lastlen"])
+
+    # --- process due vote requests --------------------------------------
+    due = (vreq_t >= 0) & (vreq_t <= tick) & state["alive"] & is_voter
+    req_term = vreq_term
+    higher = req_term > term
+    term = jnp.where(due & higher, req_term, term)
+    role = jnp.where(due & higher & (role == LEADER), FOLLOWER, role)
+    role = jnp.where(due & higher & (role == CANDIDATE), FOLLOWER, role)
+    voted_for = jnp.where(due & higher, -1, voted_for)
+    my_last_len = state["log_len"]
+    my_last_term = jnp.take_along_axis(
+        state["log_term"], jnp.clip(my_last_len - 1, 0, L - 1)[:, None],
+        axis=1)[:, 0]
+    log_ok = (vreq_lastterm > my_last_term) | \
+        ((vreq_lastterm == my_last_term) & (vreq_lastlen >= my_last_len))
+    can_grant = due & (req_term >= term) & log_ok & \
+        ((voted_for == -1) | (voted_for == vreq_from))
+    voted_for = jnp.where(can_grant, vreq_from, voted_for)
+    et = jnp.where(can_grant, new_timeout, et)      # granting defers timeout
+    # schedule grant arrival at candidate
+    grant_t = jnp.where(can_grant,
+                        tick + rtt[jnp.arange(N),
+                                   jnp.maximum(vreq_from, 0)],
+                        state["grant_t"])
+    grant_to = jnp.where(can_grant, vreq_from, state["grant_to"])
+    grant_term = jnp.where(can_grant, req_term, state["grant_term"])
+    vreq_t = jnp.where(due, -1, vreq_t)
+
+    # --- candidates tally grants (accumulated across ticks) --------------
+    g_due = (grant_t >= 0) & (grant_t <= tick)
+    tgt = jnp.maximum(grant_to, 0)
+    term_match = grant_term == term[tgt]
+    arrivals = jnp.zeros((N,), jnp.int32).at[
+        jnp.where(g_due & term_match, tgt, N)].add(1, mode="drop")
+    vr = jnp.where(timed_out, 0, state["votes_received"])   # new candidacy
+    vr = jnp.where(role == CANDIDATE, vr + arrivals, 0)
+    votes = vr + 1                                           # self-vote
+    win = (role == CANDIDATE) & state["alive"] & \
+        (votes >= static["majority"])
+    role = jnp.where(win, LEADER, role)
+    grant_t = jnp.where(g_due, -1, grant_t)
+    # demote any older-term leader the moment a newer one exists
+    max_leader_term = jnp.max(jnp.where((role == LEADER) & state["alive"],
+                                        term, -1))
+    role = jnp.where((role == LEADER) & (term < max_leader_term),
+                     FOLLOWER, role)
+    # new leader: reset bookkeeping, stop secretaries (paper Step 1); the
+    # manager re-provisions them next period (Step 2)
+    any_new = jnp.any(win)
+    match_len = jnp.where(any_new, jnp.zeros_like(state["match_len"]),
+                          state["match_len"])
+    role = jnp.where(any_new & (role == SECRETARY), DEAD, role)
+    alive = state["alive"] & ~(any_new & (state["role"] == SECRETARY))
+    heartbeat_timer = jnp.where(win, 0, state["heartbeat_timer"])
+
+    return dict(state, alive=alive, term=term, role=role,
+                voted_for=voted_for, votes_received=vr,
+                election_timer=et, vreq_t=vreq_t, vreq_from=vreq_from,
+                vreq_term=vreq_term, vreq_lastterm=vreq_lastterm,
+                vreq_lastlen=vreq_lastlen, grant_t=grant_t,
+                grant_to=grant_to, grant_term=grant_term,
+                match_len=match_len, heartbeat_timer=heartbeat_timer)
+
+
+def cost_step(state, static, cfg_c):
+    """Accrue $ cost: on-demand voters + alive spot nodes (eq. 1)."""
+    site = jnp.asarray(static["site"])
+    is_voter = jnp.asarray(static["is_voter"])
+    od_price = cfg_c["on_demand_price"][site]
+    sp_price = state["spot_price"][site]
+    per_tick = jnp.sum(jnp.where(is_voter & state["alive"], od_price, 0.0)) \
+        + jnp.sum(jnp.where(~is_voter & state["alive"], sp_price, 0.0))
+    per_tick = per_tick / cfg_c["ticks_per_hour"]
+    # + C: linear network cost in total instances
+    per_tick = per_tick * (1.0 + cfg_c["network_cost_coef"] *
+                           jnp.sum(state["alive"]))
+    return dict(state, cost_accrued=state["cost_accrued"] + per_tick)
+
+
+def tick(state, static, cfg_c, rng) -> Tuple[Dict, Dict]:
+    """One full protocol tick. Returns (state, per-tick metrics)."""
+    r_spot, r_work, r_lead, r_elec = jax.random.split(rng, 4)
+    state, killed = spot_step(state, static, cfg_c, r_spot)
+    state, (n_w, n_r, r_key) = workload_step(state, static, cfg_c, r_work)
+    state = election_step(state, static, cfg_c, r_elec)
+    state = leader_step(state, static, cfg_c, r_lead)
+    state = follower_step(state, static, cfg_c)
+    state = commit_step(state, static, cfg_c)
+    state = apply_step(state, static, cfg_c)
+    state = observer_sync_step(state, static, cfg_c)
+    state = read_step(state, static, cfg_c)
+    state = cost_step(state, static, cfg_c)
+    state = dict(state, tick=state["tick"] + 1)
+
+    lid = leader_id(state, static)
+    metrics = {
+        "has_leader": (lid >= 0).astype(jnp.int32),
+        "leader_term": jnp.where(lid >= 0, state["term"][jnp.maximum(lid, 0)],
+                                 -1),
+        "n_leaders": jnp.sum((state["role"] == LEADER) & state["alive"]),
+        "n_secretaries": jnp.sum((state["role"] == SECRETARY) &
+                                 state["alive"]),
+        "n_observers": jnp.sum((state["role"] == OBSERVER) & state["alive"]),
+        "commit_len": jnp.max(state["commit_len"]),
+        "write_queue": state["write_pending"],
+        "read_queue": jnp.sum(state["read_queue"]),
+        "killed": jnp.sum(killed),
+        "cost": state["cost_accrued"],
+    }
+    return state, metrics

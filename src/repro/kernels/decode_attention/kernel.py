@@ -1,0 +1,91 @@
+"""Pallas TPU flash-decode: single query token vs a long KV cache.
+
+Grid: (batch, heads, num_kv_blocks); the KV-block axis is sequential with
+running (max, denom, acc) scratch — the kernel analogue of the
+sequence-sharded decode path in repro.models.attention (there the
+partial-softmax combine happens across devices; here across VMEM tiles).
+A length mask handles caches filled to `cache_len < T`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, block_k: int, num_kv: int, sm_scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                    # (1, hd)
+    k = k_ref[0, 0]                    # (block_k, hd)
+    v = v_ref[0, 0]
+    clen = len_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale    # (1, bk)
+    pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    s = jnp.where(pos < clen, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kv - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, cache_len, *,
+                            block_k: int = 512, interpret: bool = True):
+    """q: (B,1,H,hd); caches: (B,T,KV,hd); cache_len: (B,) int32."""
+    B, _, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    group = H // KV
+    bk = min(block_k, T)
+    assert T % bk == 0
+    nk = T // bk
+    qt = q.transpose(0, 2, 1, 3)                   # (B,H,1,hd)
+    kt = k_cache.transpose(0, 2, 1, 3)             # (B,KV,T,hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    kernel = functools.partial(_decode_kernel, block_k=bk, num_kv=nk,
+                               sm_scale=1.0 / (hd ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, cache_len.astype(jnp.int32))
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,12 @@
+"""jit'd public wrapper for the decode-attention kernel."""
+import functools
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512):
+    interpret = jax.default_backend() != "tpu"
+    return decode_attention_kernel(q, k_cache, v_cache, cache_len,
+                                   block_k=block_k, interpret=interpret)

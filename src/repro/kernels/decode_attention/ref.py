@@ -1,0 +1,17 @@
+"""Oracle for flash-decode (mask + full softmax)."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q, k_cache, v_cache, cache_len):
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    k = jnp.repeat(k_cache, H // KV, axis=2) if KV != H else k_cache
+    v = jnp.repeat(v_cache, H // KV, axis=2) if KV != H else v_cache
+    s = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32) / (hd ** 0.5)
+    T = k.shape[1]
+    valid = (jnp.arange(T)[None] < cache_len[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthk->bshk", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

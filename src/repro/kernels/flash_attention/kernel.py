@@ -1,0 +1,109 @@
+"""Pallas TPU flash attention (blocked online-softmax, causal, GQA).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the last axis runs
+sequentially on TPU, carrying the running max / denominator / accumulator
+in VMEM scratch.  BlockSpecs tile q into (block_q, head_dim) and k/v into
+(block_k, head_dim) VMEM-resident tiles; head_dim and block sizes should
+be multiples of 128 on real hardware (the MXU lane width) — tests sweep
+smaller shapes in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, num_kv: int, causal: bool,
+                  sm_scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                               # (block_q, hd)
+    k = k_ref[0, 0]                               # (block_k, hd)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale   # (bq, bk)
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, block_q: int = 128,
+                           block_k: int = 128, causal: bool = True,
+                           interpret: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) with H % KV == 0. Returns (B,S,H,hd).
+
+    interpret=True runs the kernel body on CPU (validation); on TPU pass
+    interpret=False to compile with Mosaic.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    group = H // KV
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    # layout: (B, H, S, hd) blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=bq, block_k=bk, num_kv=nk, causal=causal,
+        sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

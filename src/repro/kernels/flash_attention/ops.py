@@ -1,0 +1,13 @@
+"""jit'd public wrapper: TPU -> Mosaic kernel, CPU -> interpret mode."""
+import functools
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal"))
+def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                    causal: bool = True):
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_kernel(q, k, v, block_q=block_q, block_k=block_k,
+                                  causal=causal, interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash attention (naive full-materialization)."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd). fp32 softmax, GQA via repeat."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32) / (hd ** 0.5)
+    if causal:
+        S_, T_ = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((S_, T_), bool), T_ - S_)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthk->bshk", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

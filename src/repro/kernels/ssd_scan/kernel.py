@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: (batch, heads, num_chunks) — the chunk axis runs sequentially,
+carrying the inter-chunk SSM state (head_dim x d_state) in VMEM scratch.
+Each step does the intra-chunk quadratic piece (two MXU matmuls over the
+(Q,Q) decay-masked score matrix) plus the state update — the TPU-native
+SSD formulation (matmuls, not elementwise scans).
+
+Inputs (pre-projected, pre-conv, pre-activation — the block does that):
+  x:  (B, nc, Q, H, P)   dt-scaled inputs
+  Bm: (B, nc, Q, N)
+  Cm: (B, nc, Q, N)
+  dt: (B, nc, Q, H)      softplus'd
+  A:  (H,)               -exp(A_log), i.e. negative decay rate
+Outputs: y: (B, nc, Q, H, P), final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, state_out_ref,
+                h_ref, *, Q: int, num_chunks: int):
+    ci = pl.program_id(2)
+    h_id = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, :, 0, :]           # (Q, P)
+    Bm = b_ref[0, 0]                   # (Q, N)
+    Cm = c_ref[0, 0]                   # (Q, N)
+    dt = dt_ref[0, 0, :, 0]            # (Q,)
+    a = a_ref[0]                       # scalar: -exp(A_log) for this head
+
+    loga = a * dt                                    # (Q,) negative
+    cs = jnp.cumsum(loga)                            # (Q,)
+    # intra-chunk: w[i,j] = exp(cs_i - cs_j) * dt_j  for i >= j
+    diff = cs[:, None] - cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)           # (Q, Q)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q, Q)
+    w = scores * L * dt[None, :]
+    y_diag = jax.lax.dot_general(
+        w.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q, P)
+
+    # off-diagonal: y_off_i = exp(cs_i) * C_i . h_prev
+    h_prev = h_ref[...]                              # (P, N)
+    y_off = jax.lax.dot_general(
+        Cm.astype(jnp.float32), h_prev,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q, P)
+    y_off = y_off * jnp.exp(cs)[:, None]
+    y_ref[0, 0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: h = decay * h_prev + sum_j exp(cs_Q - cs_j) dt_j x_j B_j^T
+    decay_chunk = jnp.exp(cs[-1])
+    wB = Bm * (jnp.exp(cs[-1] - cs) * dt)[:, None]   # (Q, N)
+    s_chunk = jax.lax.dot_general(
+        x, wB.astype(x.dtype), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (P, N)
+    h_ref[...] = h_prev * decay_chunk + s_chunk
+
+    @pl.when(ci == num_chunks - 1)
+    def _out():
+        state_out_ref[0, 0] = h_ref[...]
+
+
+def ssd_scan_kernel(x, Bm, Cm, dt, A, *, interpret: bool = True):
+    """x:(B,nc,Q,H,P), Bm/Cm:(B,nc,Q,N), dt:(B,nc,Q,H), A:(H,) ->
+    (y:(B,nc,Q,H,P), state:(B,H,P,N))."""
+    B, nc, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    kernel = functools.partial(_ssd_kernel, Q=Q, num_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, Bm, Cm, dt.astype(jnp.float32), A.astype(jnp.float32))
+    return y, state

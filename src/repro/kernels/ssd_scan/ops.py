@@ -1,0 +1,11 @@
+"""jit'd public wrapper for the SSD scan kernel."""
+import functools
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+@jax.jit
+def ssd_scan(x, Bm, Cm, dt, A):
+    interpret = jax.default_backend() != "tpu"
+    return ssd_scan_kernel(x, Bm, Cm, dt, A, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Sequential per-token oracle for the SSD scan."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_ref(x, Bm, Cm, dt, A):
+    """Same contract as ssd_scan_kernel, computed as the literal
+    recurrence h_t = a_t h_{t-1} + dt_t (B_t x_t^T); y_t = C_t . h_t."""
+    B, nc, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    x = np.asarray(x, np.float32).reshape(B, nc * Q, H, P)
+    Bf = np.asarray(Bm, np.float32).reshape(B, nc * Q, N)
+    Cf = np.asarray(Cm, np.float32).reshape(B, nc * Q, N)
+    dtf = np.asarray(dt, np.float32).reshape(B, nc * Q, H)
+    Af = np.asarray(A, np.float32)
+    h = np.zeros((B, H, P, N), np.float32)
+    ys = np.zeros((B, nc * Q, H, P), np.float32)
+    for t in range(nc * Q):
+        a = np.exp(Af[None, :] * dtf[:, t])               # (B,H)
+        upd = (dtf[:, t, :, None] * x[:, t])[..., None] * \
+            Bf[:, t, None, None, :]                       # (B,H,P,N)
+        h = h * a[:, :, None, None] + upd
+        ys[:, t] = np.einsum("bhpn,bn->bhp", h, Cf[:, t])
+    return ys.reshape(B, nc, Q, H, P), h

@@ -1,0 +1,131 @@
+"""BW-KV: the paper's key-value service API over the consensus core.
+
+Mirrors Listing 1's client surface:
+    revision_id <- put(key, value)
+    (value, revision_id) <- get(key)
+
+String keys hash into the bounded integer key space of the jitted state
+machine (DESIGN.md §6).  `put` submits through the leader write path and
+returns once the entry commits; `get` follows the observer/readindex path.
+This is the host-facing service layer used by the examples; throughput-
+scale experiments drive the simulator's aggregate workload instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as SM
+from repro.core.runtime import BWRaftSim
+
+
+class NotLeader(Exception):
+    pass
+
+
+class Timeout(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class PutResult:
+    revision: int
+    latency_ticks: int
+
+
+class BWKVService:
+    """Synchronous client over an in-process BW-Raft cluster."""
+
+    def __init__(self, sim: BWRaftSim, *, timeout_ticks: int = 400):
+        self.sim = sim
+        self.timeout = timeout_ticks
+        self._tickfn = None
+
+    def _key_id(self, key: str) -> int:
+        K = self.sim.cfg.key_space
+        return int(hashlib.sha1(key.encode()).hexdigest(), 16) % K
+
+    def _step(self, n: int = 1) -> None:
+        import repro.core.step as step_mod
+        if self._tickfn is None:
+            static, cfg_c = self.sim.static, self.sim.cfg_c
+            self._tickfn = jax.jit(
+                lambda s, r: step_mod.tick(s, static, cfg_c, r))
+        for _ in range(n):
+            self.sim.rng, sub = jax.random.split(self.sim.rng)
+            self.sim.state, _ = self._tickfn(self.sim.state, sub)
+
+    def put(self, key: str, value: int) -> PutResult:
+        """Submit a write through the leader; block until committed."""
+        kid = self._key_id(key)
+        st = self.sim.state
+        lid = int(SM.leader_id(st, self.sim.static))
+        waited = 0
+        while lid < 0:
+            self._step(5)
+            waited += 5
+            if waited > self.timeout:
+                raise Timeout("no leader elected")
+            lid = int(SM.leader_id(self.sim.state, self.sim.static))
+        st = self.sim.state
+        # append directly at the leader (bypasses the random workload gen —
+        # this is the explicit-client path)
+        pos = int(st["log_len"][lid])
+        if pos >= self.sim.cfg.max_log:
+            raise Timeout("log window full; run an epoch to compact")
+        term = st["term"][lid]
+        self.sim.state = dict(
+            st,
+            log_term=st["log_term"].at[lid, pos].set(term),
+            log_key=st["log_key"].at[lid, pos].set(kid),
+            log_val=st["log_val"].at[lid, pos].set(value),
+            log_len=st["log_len"].at[lid].set(pos + 1),
+            entry_submit_t=st["entry_submit_t"].at[pos].set(st["tick"]),
+        )
+        t0 = int(self.sim.state["tick"])
+        while True:
+            self._step(1)
+            st = self.sim.state
+            lid_now = int(SM.leader_id(st, self.sim.static))
+            if lid_now >= 0 and int(st["commit_len"][lid_now]) > pos:
+                return PutResult(revision=pos,
+                                 latency_ticks=int(st["tick"]) - t0)
+            if int(st["tick"]) - t0 > self.timeout:
+                raise Timeout(f"put({key}) not committed "
+                              f"after {self.timeout} ticks")
+
+    def get(self, key: str, *, allow_observer: bool = True
+            ) -> Tuple[int, int]:
+        """Read via an observer when one has caught up to readindex,
+        else via a follower (paper §3.1 step 6 / §4.3)."""
+        kid = self._key_id(key)
+        st = self.sim.state
+        role = np.asarray(st["role"])
+        alive = np.asarray(st["alive"])
+        lid = int(SM.leader_id(st, self.sim.static))
+        if lid < 0:
+            raise NotLeader("no leader for readindex")
+        readindex = int(st["commit_len"][lid])
+        applied = np.asarray(st["applied_len"])
+        if allow_observer:
+            obs = np.where((role == SM.OBSERVER) & alive &
+                           (applied >= readindex))[0]
+            if obs.size:
+                node = int(obs[0])
+                return int(st["kv"][node, kid]), readindex
+        fol = np.where(((role == SM.FOLLOWER) | (role == SM.LEADER)) &
+                       alive & (applied >= readindex))[0]
+        node = int(fol[0]) if fol.size else lid
+        # wait for the serving node to apply up to readindex
+        waited = 0
+        while int(self.sim.state["applied_len"][node]) < readindex:
+            self._step(1)
+            waited += 1
+            if waited > self.timeout:
+                raise Timeout("read: node never reached readindex")
+        return int(self.sim.state["kv"][node, kid]), readindex

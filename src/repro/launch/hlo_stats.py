@@ -1,0 +1,103 @@
+"""Parse collective ops + shapes from optimized HLO text (per-device).
+
+Used by the dry-run report and the roofline harness.  The optimized HLO
+inlines only *result* shapes (operands are bare ``%name`` refs), so we
+account collective traffic from the result shape plus the participant
+count n (parsed from ``replica_groups=[G,n]``), using standard ring
+algorithm wire-byte models *per device*:
+
+  all-gather          result x (n-1)/n        (operand = result/n)
+  reduce-scatter      result x (n-1)          (operand = result x n)
+  all-reduce          2 x result x (n-1)/n    (RS + AG phases)
+  all-to-all          result x (n-1)/n
+  collective-permute  result                  (one hop)
+
+``-done`` ops are skipped; bytes are counted once at ``-start``/plain ops.
+Tuple results (tuple all-to-all/all-gather) sum their element shapes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_INSTR_RE = re.compile(
+    r"%\S+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """{kind: {count, result_bytes, wire_bytes}} per device."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result, kind = m.group(1), m.group(2)
+        nbytes = sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result))
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            lm = _GROUPS_LIST_RE.search(line)
+            n = len(lm.group(1).split(",")) if lm else 2
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += nbytes
+        out[kind]["wire_bytes"] += nbytes * _wire_factor(kind, n)
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    """Total wire bytes per device."""
+    return int(sum(v["wire_bytes"]
+                   for v in collective_stats(hlo_text).values()))
+
+
+def render_stats(stats: Dict[str, Dict[str, float]]) -> str:
+    if not stats:
+        return "  (no collectives)"
+    lines = []
+    for k in sorted(stats):
+        v = stats[k]
+        lines.append(f"  {k:20s} count={int(v['count']):4d} "
+                     f"result={v['result_bytes'] / 1e6:10.2f} MB "
+                     f"wire={v['wire_bytes'] / 1e6:10.2f} MB")
+    return "\n".join(lines)

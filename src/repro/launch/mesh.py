@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant, so importing this module never
+touches jax device state.  The single-pod production mesh is 16x16 = 256
+chips (TPU v5e pod slice); the multi-pod mesh adds a leading "pod" axis
+(2 pods = 512 chips).  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import so these meshes can be built on the CPU container.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+HW = {
+    "name": "TPU v5e",
+    "peak_flops_bf16": 197e12,      # per chip
+    "hbm_gbps": 819e9,              # bytes/s per chip
+    "ici_link_gbps": 50e9,          # bytes/s per link (~100GB/s bidir / 2)
+    "hbm_bytes": 16 * 2**30,
+    "vmem_bytes": 128 * 2**20,
+}

@@ -1,0 +1,188 @@
+"""Step builders: train_step / prefill_step / decode_step for any arch,
+plus abstract state/spec construction shared by train.py, serve.py and the
+dry-run.  Nothing here allocates device memory for full-size configs —
+everything also works on ShapeDtypeStructs via jax.eval_shape/lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import lm
+from repro.models.common import ParamSpec, abstract_tree
+from repro.optim import adamw
+from repro.sharding import axes as axes_mod
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def resolve_rules(cfg: ModelConfig, profile: str) -> Dict[str, Any]:
+    rules = dict(axes_mod.PROFILES[profile])
+    rules.update(dict(cfg.sharding_overrides))
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, runcfg: RunConfig):
+    return lm.build_param_specs(cfg, DTYPES[runcfg.param_dtype])
+
+
+def train_state_specs(cfg: ModelConfig, runcfg: RunConfig):
+    ps = param_specs(cfg, runcfg)
+    opt = adamw.abstract_opt_state(ps, DTYPES[runcfg.opt_state_dtype])
+    return {"params": ps, "opt": opt}
+
+
+def state_shardings(spec_tree, rules, mesh, prune_log=None):
+    return axes_mod.tree_shardings(spec_tree, rules, mesh,
+                                   prune_log=prune_log)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                act_dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    """ParamSpec tree for one input batch of the given shape."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": ParamSpec((B, S), jnp.int32, ("batch", "seq")),
+        "labels": ParamSpec((B, S), jnp.int32, ("batch", "seq")),
+    }
+    if cfg.family == "vlm":
+        out["img_embeds"] = ParamSpec((B, cfg.num_image_tokens, cfg.d_model),
+                                      act_dtype, ("batch", "img_seq", None))
+    if cfg.family == "audio_encdec":
+        out["frames"] = ParamSpec((B, S, cfg.d_model), act_dtype,
+                                  ("batch", "seq", None))
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, runcfg: RunConfig):
+    """Serving state: KV/SSM caches + position counter."""
+    B, T = shape.global_batch, shape.seq_len
+    layers = lm.cache_specs(cfg, B, T, DTYPES[runcfg.activation_dtype])
+    return {"pos": ParamSpec((B,), jnp.int32, ("batch",), "zeros"),
+            "layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, runcfg: RunConfig, mesh):
+    rules = resolve_rules(cfg, runcfg.sharding_profile)
+
+    def loss(params, batch):
+        return lm.loss_fn(params, batch, cfg, runcfg, mesh, rules)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if runcfg.num_microbatches > 1:
+            M = runcfg.num_microbatches
+
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                    b)
+
+            mb = micro(batch)
+
+            def acc_body(carry, b):
+                gsum, lsum = carry
+                (tot, (l, aux)), g = jax.value_and_grad(
+                    loss, has_aux=True)(params, b)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            carry0 = (g0, jnp.zeros((), jnp.float32))
+            if runcfg.scan_layers:
+                (grads, lsum), _ = jax.lax.scan(acc_body, carry0, mb)
+            else:  # roofline path: unrolled so cost_analysis counts all M
+                carry = carry0
+                for i in range(M):
+                    carry, _ = acc_body(
+                        carry, jax.tree.map(lambda x: x[i], mb))
+                grads, lsum = carry
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss_val = lsum / M
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            (tot, (loss_val, aux)), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+
+        new_params, new_opt, om = adamw.adamw_update(
+            params, grads, state["opt"], lr=runcfg.learning_rate,
+            weight_decay=runcfg.weight_decay, grad_clip=runcfg.grad_clip)
+        metrics = {"loss": loss_val, "aux": aux, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step, rules
+
+
+def make_prefill_step(cfg: ModelConfig, runcfg: RunConfig, mesh):
+    profile = runcfg.sharding_profile
+    rules = resolve_rules(cfg, profile)
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        logits, layer_caches, _ = lm.forward(
+            params, tokens, cfg, runcfg, mesh, rules, mode="prefill",
+            img_embeds=batch.get("img_embeds"), frames=batch.get("frames"))
+        B, S = tokens.shape
+        caches = {"pos": jnp.full((B,), S, jnp.int32), "layers": layer_caches}
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step, rules
+
+
+def make_decode_step(cfg: ModelConfig, runcfg: RunConfig, mesh):
+    rules = resolve_rules(cfg, runcfg.sharding_profile)
+
+    def decode_step(params, caches, tokens):
+        """tokens: (B,1) int32. Returns (next_token, new_caches)."""
+        pos = caches["pos"]
+        logits, new_layers, _ = lm.forward(
+            params, tokens, cfg, runcfg, mesh, rules, mode="decode",
+            caches=caches["layers"], cache_len=pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, {"pos": pos + 1, "layers": new_layers}
+
+    return decode_step, rules
+
+
+def make_step(cfg, runcfg, mesh, kind: str):
+    if kind == "train":
+        return make_train_step(cfg, runcfg, mesh)
+    if kind == "prefill":
+        return make_prefill_step(cfg, runcfg, mesh)
+    if kind == "decode":
+        return make_decode_step(cfg, runcfg, mesh)
+    raise ValueError(kind)
+
+
+def default_runcfg(cfg: ModelConfig, shape: ShapeConfig, **overrides):
+    """Shape-appropriate RunConfig (profile, remat) for an arch."""
+    kw: Dict[str, Any] = {}
+    if shape.kind == "train":
+        # grad accumulation so per-device activations fit 16GB HBM
+        mb = 8 if cfg.d_model >= 8192 else 4
+        kw.update(sharding_profile="train", num_microbatches=mb)
+    elif shape.kind == "prefill":
+        kw.update(sharding_profile="train", remat=False)
+    else:
+        prof = "long" if shape.global_batch == 1 else "decode"
+        kw.update(sharding_profile=prof, remat=False)
+    # precedence: shape defaults < per-arch run_overrides < explicit caller
+    kw.update(dict(cfg.run_overrides))
+    kw.update(overrides)
+    return RunConfig(**kw)

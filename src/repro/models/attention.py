@@ -1,0 +1,212 @@
+"""Attention: GQA self/cross attention with full, chunked (online-softmax,
+flash-style) and decode (sequence-sharded KV cache) paths — pure JAX.
+
+The chunked path is the XLA analogue of the Pallas `flash_attention`
+kernel in `repro.kernels`: it never materializes the S×S score matrix.
+With ``unroll=True`` the chunk loops become Python loops and causally
+masked-out (q,k) chunk pairs are skipped entirely — that variant is what
+the roofline harness lowers (exact FLOPs, no scan undercount); the
+``lax.scan`` variant is what the dry-run compiles (compile-time friendly).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm, apply_rope
+
+NEG_INF = -1e30
+
+
+def attention_params(cfg, *, cross: bool = False, dtype=jnp.bfloat16):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamSpec((D, H, hd), dtype, ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, KV, hd), dtype, ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((D, KV, hd), dtype, ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, D), dtype, ("heads", "head_dim", "embed")),
+        "pre_norm": ParamSpec((D,), jnp.float32, ("unsharded",), "ones"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((H, hd), dtype, ("heads", "head_dim"), "zeros")
+        p["bk"] = ParamSpec((KV, hd), dtype, ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = ParamSpec((KV, hd), dtype, ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), jnp.float32, ("unsharded",), "ones")
+        p["k_norm"] = ParamSpec((hd,), jnp.float32, ("unsharded",), "ones")
+    return p
+
+
+def _project_qkv(p, x, ctx, cfg, positions, ctx_positions, *, rope: bool):
+    """x:(B,S,D) -> q:(B,S,H,hd); ctx:(B,T,D) -> k,v:(B,T,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", ctx, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", ctx, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, ctx_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def repeat_kv(k, num_heads: int):
+    """(B,T,KV,hd) -> (B,T,H,hd). XLA lowers to a broadcast-gather; with H
+    sharded on "model" each device materializes only its head slice."""
+    kv = k.shape[2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention paths (all take q:(B,S,H,hd), k/v:(B,T,H,hd))
+# ---------------------------------------------------------------------------
+
+def full_attention(q, k, v, *, q_pos=None, k_pos=None, causal=True):
+    """Materializes (B,H,S,T) scores — short-sequence / decode path."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32) / (hd ** 0.5)
+    if q_pos is not None:
+        mask = k_pos[:, None, :] <= q_pos[:, :, None] if causal else \
+            jnp.ones((1, q.shape[1], k.shape[1]), bool)
+        s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+    elif causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((S, T), bool), T - S)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthk->bshk", p.astype(q.dtype), v)
+
+
+def _chunk_update(q, kc, vc, m, l, acc, smask, acc_dtype=jnp.float32):
+    """One online-softmax update. q:(B,S,H,hd), kc/vc:(B,ck,H,hd),
+    smask:(B,S,ck) bool or None. m/l/acc carries stay fp32; with
+    acc_dtype=bf16 the (B,H,S,ck) score/exp intermediates are bf16
+    (halves the dominant memory-roofline bytes; ~1e-2 logit noise)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bshk,bthk->bhst", q, kc).astype(jnp.float32) / (hd ** 0.5)
+    if smask is not None:
+        s = jnp.where(smask[:, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    corr = jnp.exp(m - m_new)
+    e = jnp.exp((s - m_new[..., None]).astype(acc_dtype)
+                .astype(jnp.float32)).astype(acc_dtype)
+    l_new = l * corr + jnp.sum(e, axis=-1, dtype=jnp.float32)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhst,bthk->bhsk", e, vc.astype(acc_dtype)).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q, k, v, *, q_pos, k_pos, causal=True,
+                      chunk_k=2048, unroll=False, acc_dtype=jnp.float32):
+    """Flash-style attention, scanning KV chunks with a running softmax.
+
+    unroll=False: lax.scan over all KV chunks with masks (dry-run path).
+    unroll=True : Python loop; fully-masked chunks are skipped statically
+                  when positions are statically known (roofline path).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    ck = min(chunk_k, T)
+    nk = (T + ck - 1) // ck
+    Tp = nk * ck
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, Tp - T)), constant_values=2**30)
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd), jnp.float32)
+
+    def smask_for(kp):
+        if causal:
+            return kp[:, None, :] <= q_pos[:, :, None]
+        # non-causal: only exclude padded key slots
+        return jnp.broadcast_to((kp < 2**30)[:, None, :],
+                                (B, S, kp.shape[1]))
+
+    if unroll:
+        m, l, acc = m0, l0, a0
+        import numpy as np
+        qp = np.asarray(q_pos) if isinstance(q_pos, (np.ndarray,)) else None
+        for i in range(nk):
+            kc = jax.lax.slice_in_dim(k, i * ck, (i + 1) * ck, axis=1)
+            vc = jax.lax.slice_in_dim(v, i * ck, (i + 1) * ck, axis=1)
+            kp = jax.lax.slice_in_dim(k_pos, i * ck, (i + 1) * ck, axis=1)
+            m, l, acc = _chunk_update(q, kc, vc, m, l, acc, smask_for(kp),
+                                      acc_dtype)
+    else:
+        ks = k.reshape(B, nk, ck, H, hd).transpose(1, 0, 2, 3, 4)
+        vs = v.reshape(B, nk, ck, H, hd).transpose(1, 0, 2, 3, 4)
+        kps = k_pos.reshape(B, nk, ck).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kc, vc, kp = xs
+            m, l, acc = _chunk_update(q, kc, vc, m, l, acc, smask_for(kp),
+                                      acc_dtype)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,S,H,hd)
+
+
+def causal_blocked_attention(q, k, v, *, chunk_q=2048, chunk_k=2048,
+                             unroll=False, acc_dtype=jnp.float32):
+    """Self-attention over aligned q/k (prefill, training): q chunked too so
+    the unrolled path skips future (fully masked) KV blocks — ~2× FLOPs saved
+    vs. the rectangle. Used when q and k cover the same [0,S) positions."""
+    B, S, H, hd = q.shape
+    if not unroll:
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return chunked_attention(q, k, v, q_pos=pos, k_pos=pos, causal=True,
+                                 chunk_k=chunk_k, unroll=False,
+                                 acc_dtype=acc_dtype)
+    cq = min(chunk_q, S)
+    nq = (S + cq - 1) // cq
+    outs = []
+    for i in range(nq):
+        qi = jax.lax.slice_in_dim(q, i * cq, (i + 1) * cq, axis=1)
+        hi = (i + 1) * cq                      # causal horizon for this block
+        ki = jax.lax.slice_in_dim(k, 0, hi, axis=1)
+        vi = jax.lax.slice_in_dim(v, 0, hi, axis=1)
+        qp = jnp.broadcast_to(jnp.arange(i * cq, i * cq + qi.shape[1])[None],
+                              (B, qi.shape[1]))
+        kp = jnp.broadcast_to(jnp.arange(hi)[None], (B, hi))
+        outs.append(chunked_attention(qi, ki, vi, q_pos=qp, k_pos=kp,
+                                      causal=True, chunk_k=chunk_k,
+                                      unroll=True, acc_dtype=acc_dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, cn=None):
+    """q:(B,1,H,hd); caches:(B,T,KV,hd) (seq-shardable). Partial-softmax over
+    the sharded T axis — GSPMD inserts small all-reduces (flash-decode).
+    cn pins the repeated K/V to the cache's sequence sharding — without it
+    the einsum partitioner reshards the whole cache to head-sharded every
+    layer (measured 328 ms collective term vs 62 ms memory, EXPERIMENTS §Perf
+    cell 3)."""
+    B, _, H, hd = q.shape
+    T = k_cache.shape[1]
+    k = repeat_kv(k_cache, H)
+    v = repeat_kv(v_cache, H)
+    if cn is not None:
+        k = cn(k, "batch", "kv_seq", None, "head_dim")
+        v = cn(v, "batch", "kv_seq", None, "head_dim")
+    s = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32) / (hd ** 0.5)
+    valid = (jnp.arange(T)[None] < cache_len[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,116 @@
+"""Parameter descriptors, initialization, and shared layer math.
+
+The model zoo is deliberately framework-free: a model is (1) a pytree of
+`ParamSpec` descriptors built from its config and (2) pure apply
+functions.  Descriptors materialize to real arrays (`init_tree`), abstract
+ShapeDtypeStructs (`abstract_tree`, used by the dry-run so nothing is ever
+allocated), or NamedShardings (`sharding.axes.tree_shardings`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple[Optional[str], ...]      # logical axis names, len == ndim
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def abstract_tree(tree):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree, is_leaf=_is_spec)
+
+
+def init_tree(rng, tree, *, mesh=None, shardings=None):
+    """Materialize parameters. fan-in scaled normal by default."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for r, p in zip(rngs, leaves):
+        if p.init == "zeros":
+            a = jnp.zeros(p.shape, p.dtype)
+        elif p.init == "ones":
+            a = jnp.ones(p.shape, p.dtype)
+        else:
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            std = p.scale / math.sqrt(max(fan_in, 1))
+            a = (jax.random.normal(r, p.shape, jnp.float32) * std).astype(p.dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(tree, is_leaf=_is_spec))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+               for p in jax.tree.leaves(tree, is_leaf=_is_spec))
+
+
+# ---------------------------------------------------------------------------
+# Shared layer math
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, wg, wu, wd, *, bg=None, bu=None, bd=None):
+    g = jnp.einsum("...d,df->...f", x, wg)
+    u = jnp.einsum("...d,df->...f", x, wu)
+    if bg is not None:
+        g = g + bg
+        u = u + bu
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("...f,fd->...d", h, wd)
+    if bd is not None:
+        out = out + bd
+    return out
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean xent; logits may carry padded vocab entries (masked to -inf)."""
+    padded = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if padded != vocab_size:
+        mask = jnp.arange(padded) < vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return ((v + multiple - 1) // multiple) * multiple

@@ -1,0 +1,468 @@
+"""Model assembly: heterogeneous layer stacks (dense / MoE / SSD / hybrid /
+VLM cross-attention / encoder-decoder) with scan-over-layers.
+
+Layers are grouped by the config's repeating *period* P: position r in
+[0,P) determines the layer kind (mixer = attn|ssd, ffn = mlp|moe, optional
+cross-attention), and all L/P layers sharing a position are stacked on a
+leading "groups" axis so the whole stack runs under one `lax.scan`
+(compile-time O(P), not O(L)).  With ``runcfg.scan_layers=False`` the stack
+unrolls (the roofline path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssd as ssd_mod
+from repro.models.common import (ParamSpec, cross_entropy, rms_norm, swiglu)
+
+
+class LayerKind(NamedTuple):
+    mixer: str          # "attn" | "ssd"
+    ffn: str            # "mlp" | "moe" | "none"
+    cross: bool = False
+
+
+def layer_kinds(cfg) -> Tuple[LayerKind, ...]:
+    P = cfg.layer_period
+    kinds = []
+    for r in range(P):
+        mixer = "attn" if cfg.is_attn_layer(r) else "ssd"
+        ffn = "moe" if cfg.is_moe_layer(r) else ("mlp" if cfg.d_ff else "none")
+        kinds.append(LayerKind(mixer, ffn, cfg.is_cross_attn_layer(r)))
+    return tuple(kinds)
+
+
+# ---------------------------------------------------------------------------
+# Parameter trees
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wg": ParamSpec((D, F), dtype, ("embed", "mlp")),
+        "wu": ParamSpec((D, F), dtype, ("embed", "mlp")),
+        "wd": ParamSpec((F, D), dtype, ("mlp", "embed")),
+        "pre_norm": ParamSpec((D,), jnp.float32, ("unsharded",), "ones"),
+    }
+
+
+def block_params(cfg, kind: LayerKind, dtype):
+    p: Dict[str, Any] = {}
+    if kind.mixer == "attn":
+        p["attn"] = attn_mod.attention_params(cfg, dtype=dtype)
+    else:
+        p["ssd"] = ssd_mod.ssd_params(cfg, dtype)
+    if kind.cross:
+        p["xattn"] = attn_mod.attention_params(cfg, cross=True, dtype=dtype)
+        p["xattn_gate"] = ParamSpec((1,), jnp.float32, ("unsharded",), "zeros")
+    if kind.ffn == "mlp":
+        p["mlp"] = mlp_params(cfg, dtype)
+    elif kind.ffn == "moe":
+        p["moe"] = moe_mod.moe_params(cfg, dtype)
+    return p
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(
+        lambda ps: ParamSpec((n,) + ps.shape, ps.dtype, ("layers",) + ps.axes,
+                             ps.init, ps.scale),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def build_param_specs(cfg, dtype=jnp.bfloat16):
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    kinds = layer_kinds(cfg)
+    P = len(kinds)
+    assert cfg.num_layers % P == 0, (cfg.name, cfg.num_layers, P)
+    G = cfg.num_layers // P
+    params: Dict[str, Any] = {
+        "embed": ParamSpec((Vp, D), dtype, ("vocab", "embed"), "normal"),
+        "final_norm": ParamSpec((D,), jnp.float32, ("unsharded",), "ones"),
+        "blocks": {f"r{r}": _stack(block_params(cfg, k, dtype), G)
+                   for r, k in enumerate(kinds)},
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = ParamSpec((D, Vp), dtype, ("embed", "vocab"))
+    if cfg.encoder_layers:
+        enc_kind = LayerKind("attn", "mlp", False)
+        params["encoder"] = {
+            "blocks": {"r0": _stack(block_params(cfg, enc_kind, dtype),
+                                    cfg.encoder_layers)},
+            "final_norm": ParamSpec((D,), jnp.float32, ("unsharded",), "ones"),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _attn_mixer(p, h, cfg, cn, runcfg, *, mode, cache, positions, causal=True,
+                ctx=None, ctx_positions=None, rope=True, cache_len=None):
+    """Self- or cross-attention mixer. Returns (h, new_cache)."""
+    x = rms_norm(h, p["pre_norm"], cfg.norm_eps)
+    src = x if ctx is None else ctx
+    q, k, v = attn_mod._project_qkv(p, x, src, cfg, positions,
+                                    ctx_positions if ctx is not None
+                                    else positions, rope=rope)
+    q = cn(q, "batch", "seq", "heads", "head_dim")
+    new_cache = cache
+    if mode == "decode" and ctx is None:
+        B = h.shape[0]
+        ck, cv = cache["k"], cache["v"]
+        # one-hot masked insert: elementwise over the (possibly sequence-
+        # sharded) cache, so GSPMD never sees a scatter on a sharded dim
+        hit = (jnp.arange(ck.shape[1])[None, :] ==
+               cache_len[:, None])[..., None, None]
+        ck = jnp.where(hit, k[:, :1], ck)
+        cv = jnp.where(hit, v[:, :1], cv)
+        ck = cn(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = cn(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        o = attn_mod.decode_attention(q, ck, cv, cache_len + 1, cn=cn)
+        new_cache = {"k": ck, "v": cv}
+    elif mode == "decode":                                   # cross, cached
+        o = attn_mod.decode_attention(q, cache["k"], cache["v"], cache["len"])
+    else:
+        kk = attn_mod.repeat_kv(k, cfg.num_heads)
+        vv = attn_mod.repeat_kv(v, cfg.num_heads)
+        kk = cn(kk, "batch", "seq", "heads", "head_dim")
+        vv = cn(vv, "batch", "seq", "heads", "head_dim")
+        if ctx is None and causal and runcfg.attention_impl == "pallas":
+            from repro.kernels.flash_attention.ops import flash_attention
+            o = flash_attention(q, kk, vv,
+                                block_q=min(runcfg.attn_chunk_q, 128),
+                                block_k=min(runcfg.attn_chunk_k, 128))
+        elif ctx is None and causal:
+            o = attn_mod.causal_blocked_attention(
+                q, kk, vv, chunk_q=runcfg.attn_chunk_q,
+                chunk_k=runcfg.attn_chunk_k, unroll=runcfg.unroll_attn,
+                acc_dtype=jnp.dtype(runcfg.attn_acc_dtype))
+        elif q.shape[1] * kk.shape[1] > 2 ** 22:
+            # large non-causal (32k encoder self-attn / long cross-attn):
+            # flash-style chunking, never materialize (S,T) scores
+            B, Sq = q.shape[:2]
+            T = kk.shape[1]
+            qp = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+            kp = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+            o = attn_mod.chunked_attention(
+                q, kk, vv, q_pos=qp, k_pos=kp, causal=False,
+                chunk_k=runcfg.attn_chunk_k, unroll=runcfg.unroll_attn,
+                acc_dtype=jnp.dtype(runcfg.attn_acc_dtype))
+        else:
+            o = attn_mod.full_attention(q, kk, vv, causal=False)
+        if mode == "prefill":
+            new_cache = {"k": cn(k, "batch", "kv_seq", "kv_heads", "head_dim"),
+                         "v": cn(v, "batch", "kv_seq", "kv_heads", "head_dim")}
+    o = cn(o, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "gate" in p:
+        out = out * jnp.tanh(p["gate"]).astype(out.dtype)
+    return out, new_cache
+
+
+def apply_block(kind: LayerKind, p, h, cfg, runcfg, mesh, cn, *,
+                mode, cache, positions, img_ctx=None, cache_len=None):
+    """One layer. cache is a dict (possibly with dummy leaves). Returns
+    (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache else {}
+
+    if kind.mixer == "attn":
+        o, nc = _attn_mixer(p["attn"], h, cfg, cn, runcfg, mode=mode,
+                            cache=cache.get("self") if cache else None,
+                            positions=positions, cache_len=cache_len)
+        h = cn(h + o, "batch", "seq", "embed_tp")
+        if mode in ("prefill", "decode"):
+            new_cache["self"] = nc
+    else:
+        x = rms_norm(h, p["ssd"]["pre_norm"], cfg.norm_eps)
+        if mode == "decode":
+            o, st = ssd_mod.ssd_decode(p["ssd"], x, cache["ssm"], cfg)
+            new_cache["ssm"] = st
+        else:
+            o, st = ssd_mod.ssd_apply(p["ssd"], x, cfg,
+                                      unroll=not runcfg.scan_layers, cn=cn)
+            if mode == "prefill":
+                new_cache["ssm"] = st
+        h = cn(h + o, "batch", "seq", "embed_tp")
+
+    if kind.cross:
+        xp = dict(p["xattn"])
+        xp["gate"] = p["xattn_gate"]
+        if mode == "decode":
+            xc = cache["cross"]
+            x = rms_norm(h, xp["pre_norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x, xp["wq"])
+            if "bq" in xp:
+                q = q + xp["bq"]
+            o = attn_mod.decode_attention(q, xc["k"], xc["v"], xc["len"])
+            o = jnp.einsum("bshk,hkd->bsd", o, xp["wo"])
+            o = o * jnp.tanh(xp["gate"]).astype(o.dtype)
+            new_cache["cross"] = xc
+        else:
+            octx = img_ctx
+            o, _ = _attn_mixer(xp, h, cfg, cn, runcfg, mode="train",
+                               cache=None, positions=positions, ctx=octx,
+                               causal=False, rope=False)
+            if mode == "prefill":
+                k = jnp.einsum("btd,dhk->bthk", octx, xp["wk"])
+                v = jnp.einsum("btd,dhk->bthk", octx, xp["wv"])
+                new_cache["cross"] = {
+                    "k": k, "v": v,
+                    "len": jnp.full((h.shape[0],), octx.shape[1], jnp.int32)}
+        h = cn(h + o, "batch", "seq", "embed_tp")
+
+    if kind.ffn == "mlp":
+        x = rms_norm(h, p["mlp"]["pre_norm"], cfg.norm_eps)
+        x = swiglu(x, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
+        h = cn(h + x, "batch", "seq", "embed_tp")
+    elif kind.ffn == "moe":
+        x = rms_norm(h, p["moe"]["pre_norm"], cfg.norm_eps)
+        y, a = moe_mod.moe_apply(p["moe"], x, cfg, mesh)
+        aux = aux + a
+        h = cn(h + y, "batch", "seq", "embed_tp")
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack runner (scan / unrolled)
+# ---------------------------------------------------------------------------
+
+def run_stack(blocks, kinds, h, cfg, runcfg, mesh, cn, *, mode, caches,
+              positions, img_ctx=None, cache_len=None, use_shardings=None):
+    """Apply all num_layers layers. blocks[f"r{r}"] leaves have leading G.
+    caches: same structure (leading G) for decode, None otherwise.
+    Returns (h, new_caches_or_None, aux)."""
+    P = len(kinds)
+    G = cfg.num_layers // P
+
+    def one_block(r, kind, h, bp_r, c_r):
+        return apply_block(kind, bp_r, h, cfg, runcfg, mesh, cn, mode=mode,
+                           cache=c_r, positions=positions, img_ctx=img_ctx,
+                           cache_len=cache_len)
+
+    def period_body(h, bp, cc):
+        aux = jnp.zeros((), jnp.float32)
+        new_cc = {}
+        for r, kind in enumerate(kinds):
+            c_r = cc.get(f"r{r}") if cc is not None else None
+            bp_r = bp[f"r{r}"]
+            if use_shardings is not None:
+                # ZeRO-3 unshard-at-use: all-gather this layer's weights
+                # (small) instead of letting GSPMD all-reduce activations
+                bp_r = jax.tree.map(jax.lax.with_sharding_constraint,
+                                    bp_r, use_shardings[f"r{r}"])
+            bp = dict(bp, **{f"r{r}": bp_r})
+            blk = functools.partial(one_block, r, kind)
+            if runcfg.remat and mode == "train" and \
+                    runcfg.remat_policy == "block":
+                blk = jax.checkpoint(blk)
+            h, nc, a = blk(h, bp[f"r{r}"], c_r)
+            new_cc[f"r{r}"] = nc
+            aux = aux + a
+        return h, new_cc, aux
+
+    # Default remat wraps the whole repeating period: measured 31.4GB vs
+    # 50.9GB temp for per-block remat on vision-90b train (EXPERIMENTS §Perf)
+    if runcfg.remat and mode == "train" and runcfg.remat_policy != "block":
+        period_body = jax.checkpoint(period_body)
+
+    if not runcfg.scan_layers or G == 1:
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        body = period_body
+        for g in range(G):
+            bp = jax.tree.map(lambda a: a[g], blocks)
+            cc = (jax.tree.map(lambda a: a[g], caches)
+                  if caches is not None else None)
+            h, nc, a = body(h, bp, cc)
+            new_caches.append(nc)
+            aux = aux + a
+        out_caches = None
+        if mode in ("prefill", "decode"):
+            out_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return h, out_caches, aux
+
+    if mode == "decode":
+        def body(carry, xs):
+            h, aux = carry
+            bp, cc = xs
+            h, nc, a = period_body(h, bp, cc)
+            return (h, aux + a), nc
+        (h, aux), new_caches = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), (blocks, caches))
+        return h, new_caches, aux
+
+    def body(carry, bp):
+        h, aux = carry
+        h, nc, a = period_body(h, bp, None if mode == "train" else {})
+        y = nc if mode == "prefill" else 0.0
+        return (h, aux + a), y
+
+    (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), blocks)
+    new_caches = ys if mode == "prefill" else None
+    return h, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg, cn):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return cn(h, "batch", "seq", "embed_tp")
+
+
+def _unembed(params, h, cfg, cn):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return cn(logits, "batch", "seq", "vocab")
+
+
+def encode(params, frames, cfg, runcfg, mesh, cn):
+    """Encoder stack over stub frontend embeddings (B,S,D)."""
+    kinds = (LayerKind("attn", "mlp", False),)
+    h = cn(frames, "batch", "seq", "embed_tp")
+    enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                                  attn_layer_period=0, moe_num_experts=0,
+                                  cross_attn_period=0)
+
+    B, S, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def noncausal_block(h, bp):
+        o, _ = _attn_mixer(bp["attn"], h, enc_cfg, cn, runcfg, mode="train",
+                           cache=None, positions=pos, causal=False)
+        h = cn(h + o, "batch", "seq", "embed_tp")
+        x = rms_norm(h, bp["mlp"]["pre_norm"], enc_cfg.norm_eps)
+        x = swiglu(x, bp["mlp"]["wg"], bp["mlp"]["wu"], bp["mlp"]["wd"])
+        return cn(h + x, "batch", "seq", "embed_tp")
+
+    blocks = params["encoder"]["blocks"]["r0"]
+    if runcfg.scan_layers and cfg.encoder_layers > 1:
+        def body(h, bp):
+            f = noncausal_block
+            if runcfg.remat:
+                f = jax.checkpoint(noncausal_block)
+            return f(h, bp), 0.0
+        h, _ = jax.lax.scan(body, h, blocks)
+    else:
+        for g in range(cfg.encoder_layers):
+            h = noncausal_block(h, jax.tree.map(lambda a: a[g], blocks))
+    return rms_norm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens, cfg, runcfg, mesh, rules, *, mode,
+            caches=None, img_embeds=None, frames=None, cache_len=None):
+    """tokens: (B,S) int32.  Returns (logits, new_caches, aux)."""
+    from repro.sharding.axes import make_constrainer
+    cn = make_constrainer(rules, mesh)
+    kinds = layer_kinds(cfg)
+
+    ctx = None
+    if cfg.encoder_layers and frames is not None:
+        ctx = encode(params, frames, cfg, runcfg, mesh, cn)
+    elif img_embeds is not None:
+        ctx = cn(img_embeds, "batch", "img_seq", "embed_tp")
+
+    use_shardings = None
+    if runcfg.zero3_at_use and mesh is not None and "data" in mesh.shape:
+        from repro.sharding.axes import tree_shardings
+        use_rules = dict(rules)
+        use_rules["embed"] = None            # weights gather over "data"
+        use_shardings = {
+            f"r{r}": jax.tree.map(
+                lambda ns: ns,
+                tree_shardings(block_params(cfg, k,
+                                            params["embed"].dtype),
+                               use_rules, mesh))
+            for r, k in enumerate(layer_kinds(cfg))}
+
+    B, S = tokens.shape
+    if mode == "decode":
+        positions = cache_len[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    h = _embed(params, tokens, cfg, cn)
+    h, new_caches, aux = run_stack(params["blocks"], kinds, h, cfg, runcfg,
+                                   mesh, cn, mode=mode, caches=caches,
+                                   positions=positions, img_ctx=ctx,
+                                   cache_len=cache_len,
+                                   use_shardings=use_shardings)
+    logits = _unembed(params, h, cfg, cn)
+    return logits, new_caches, aux
+
+
+def loss_fn(params, batch, cfg, runcfg, mesh, rules):
+    """Next-token xent (+ MoE aux). batch: tokens, labels[, img/frames]."""
+    logits, _, aux = forward(
+        params, batch["tokens"], cfg, runcfg, mesh, rules, mode="train",
+        img_embeds=batch.get("img_embeds"), frames=batch.get("frames"))
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return loss + 0.01 * aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (abstract or concrete via like=)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg, batch: int, cache_cap: int, dtype=jnp.bfloat16):
+    """ParamSpec tree for decode caches (leading G per position)."""
+    kinds = layer_kinds(cfg)
+    G = cfg.num_layers // len(kinds)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def stack(spec_tree):
+        return jax.tree.map(
+            lambda ps: ParamSpec((G,) + ps.shape, ps.dtype,
+                                 ("layers",) + ps.axes, "zeros"),
+            spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    out = {}
+    for r, kind in enumerate(kinds):
+        c = {}
+        if kind.mixer == "attn":
+            c["self"] = {
+                "k": ParamSpec((batch, cache_cap, KV, hd), dtype,
+                               ("batch", "kv_seq", "kv_heads", "head_dim"),
+                               "zeros"),
+                "v": ParamSpec((batch, cache_cap, KV, hd), dtype,
+                               ("batch", "kv_seq", "kv_heads", "head_dim"),
+                               "zeros"),
+            }
+        else:
+            H, P_, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            W, DI = cfg.ssm_conv, cfg.d_inner
+            c["ssm"] = {
+                "ssm": ParamSpec((batch, H, P_, N), jnp.float32,
+                                 ("batch", "ssm_heads", None, "ssm_state"),
+                                 "zeros"),
+                "conv_x": ParamSpec((batch, W - 1, DI), dtype,
+                                    ("batch", None, "ssm_inner"), "zeros"),
+                "conv_B": ParamSpec((batch, W - 1, N), dtype,
+                                    ("batch", None, "ssm_state"), "zeros"),
+                "conv_C": ParamSpec((batch, W - 1, N), dtype,
+                                    ("batch", None, "ssm_state"), "zeros"),
+            }
+        if kind.cross:
+            T = cfg.num_image_tokens or cache_cap
+            c["cross"] = {
+                "k": ParamSpec((batch, T, KV, hd), dtype,
+                               ("batch", None, "kv_heads", "head_dim"),
+                               "zeros"),
+                "v": ParamSpec((batch, T, KV, hd), dtype,
+                               ("batch", None, "kv_heads", "head_dim"),
+                               "zeros"),
+                "len": ParamSpec((batch,), jnp.int32, ("batch",), "zeros"),
+            }
+        out[f"r{r}"] = stack(c)
+    return out

@@ -1,0 +1,229 @@
+"""Mixture-of-Experts with explicit expert parallelism under shard_map.
+
+Two production strategies (chosen automatically):
+
+* ``a2a``  — tokens are sequence-sharded across the "model" (EP) axis; each
+  device routes its local tokens, packs per-destination capacity buffers and
+  exchanges them with ``lax.all_to_all`` (forward + return trip), computes its
+  local experts as one batched matmul, and combines locally.  This is the
+  DeepSeek/Switch dispatch mapped onto ICI all-to-all; every shape is static,
+  all scatters are device-local (no GSPMD scatter fallback).
+* ``psum`` — when the token axis cannot shard over the EP axis (decode steps,
+  batch=1 long-context), tokens are replicated over "model"; each device
+  computes only its local experts' contribution and a single small
+  ``psum(T,D)`` combines.  Collective volume is O(T·D), ideal for decode.
+
+A dense reference path (`moe_apply_dense`) computes every expert for every
+token and is used as the correctness oracle in tests and for tiny smoke
+configs.  Over-capacity tokens drop (standard capacity-factor semantics);
+the auxiliary load-balance loss is the Switch formulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec
+
+
+def padded_experts(e: int, multiple: int = 16) -> int:
+    return ((e + multiple - 1) // multiple) * multiple
+
+
+def moe_params(cfg, dtype=jnp.bfloat16):
+    D, F = cfg.d_model, cfg.moe_d_ff
+    E = padded_experts(cfg.moe_num_experts)
+    p = {
+        "pre_norm": ParamSpec((D,), jnp.float32, ("unsharded",), "ones"),
+        "router": ParamSpec((D, E), jnp.float32, ("embed", "experts")),
+        "wg": ParamSpec((E, D, F), dtype, ("experts", "embed", "expert_mlp")),
+        "wu": ParamSpec((E, D, F), dtype, ("experts", "embed", "expert_mlp")),
+        "wd": ParamSpec((E, F, D), dtype, ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.moe_shared_d_ff:
+        Fs = cfg.moe_shared_d_ff
+        p["shared_wg"] = ParamSpec((D, Fs), dtype, ("embed", "shared_mlp"))
+        p["shared_wu"] = ParamSpec((D, Fs), dtype, ("embed", "shared_mlp"))
+        p["shared_wd"] = ParamSpec((Fs, D), dtype, ("shared_mlp", "embed"))
+    return p
+
+
+def _route(x_flat, router, cfg):
+    """x_flat:(T,D) -> top-k (weights (T,k) f32, ids (T,k) i32, aux loss)."""
+    E = cfg.moe_num_experts
+    logits = (x_flat.astype(jnp.float32) @ router)          # (T, E_pad)
+    pad_mask = jnp.arange(logits.shape[-1]) < E
+    logits = jnp.where(pad_mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.moe_top_k)            # (T,k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e f_e * p_e
+    k_onehot = jax.nn.one_hot(ids, logits.shape[-1], dtype=jnp.float32)
+    frac = jnp.mean(jnp.sum(k_onehot, axis=1), axis=0)       # tokens per expert
+    mean_p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mean_p) / cfg.moe_top_k
+    return w, ids, aux
+
+
+def _expert_ffn(wg, wu, wd, xb):
+    """Batched per-expert SwiGLU. xb:(E_loc, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", xb, wg)
+    u = jnp.einsum("ecd,edf->ecf", xb, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _positions_in_bins(bins_onehot):
+    """bins_onehot:(N, M) 0/1 -> position of each row within its bin (N,)."""
+    cum = jnp.cumsum(bins_onehot, axis=0) * bins_onehot
+    return jnp.sum(cum, axis=-1).astype(jnp.int32) - 1
+
+
+def _moe_local_a2a(x_loc, router, wg, wu, wd, cfg, ep: int, axis: str):
+    """shard_map body, tokens sharded over `axis` (size ep)."""
+    B, S, D = x_loc.shape
+    T = B * S
+    k = cfg.moe_top_k
+    E_pad = wg.shape[0] * ep
+    E_loc = wg.shape[0]
+    xf = x_loc.reshape(T, D)
+    w, ids, aux = _route(xf, router, cfg)
+
+    # --- pack per-destination send buffers -------------------------------
+    cap = int(-(-T * k // ep) * cfg.moe_capacity_factor)
+    cap = max(cap, 1)
+    flat_ids = ids.reshape(T * k)
+    dest = flat_ids // E_loc                                  # (T*k,)
+    dest_onehot = jax.nn.one_hot(dest, ep, dtype=jnp.int32)
+    pos = _positions_in_bins(dest_onehot)                     # rank within dest
+    valid = pos < cap
+    # invalid entries park at (ep, cap): out of bounds, dropped by scatter
+    d_idx = jnp.where(valid, dest, ep)
+    p_idx = jnp.where(valid, pos, cap)
+    src_token = jnp.repeat(jnp.arange(T), k)
+    send_x = jnp.zeros((ep, cap, D), x_loc.dtype)
+    send_x = send_x.at[d_idx, p_idx].set(xf[src_token], mode="drop")
+    send_eid = jnp.full((ep, cap), E_loc, jnp.int32)          # E_loc = invalid
+    send_eid = send_eid.at[d_idx, p_idx].set(flat_ids % E_loc, mode="drop")
+
+    # --- exchange, local expert compute, exchange back --------------------
+    recv_x = jax.lax.all_to_all(send_x, axis, 0, 0, tiled=True)
+    recv_eid = jax.lax.all_to_all(send_eid, axis, 0, 0, tiled=True)
+
+    R = ep * cap
+    rx = recv_x.reshape(R, D)
+    reid = recv_eid.reshape(R)                                # E_loc marks empty
+    eo = jax.nn.one_hot(reid, E_loc, dtype=jnp.int32)         # zero row if empty
+    cap2 = int(-(-R // E_loc))
+    pos2 = _positions_in_bins(eo)
+    ok2 = (pos2 < cap2) & (reid < E_loc)
+    e_idx = jnp.where(ok2, reid, E_loc)
+    q_idx = jnp.where(ok2, pos2, cap2)
+    buf = jnp.zeros((E_loc, cap2, D), x_loc.dtype)
+    buf = buf.at[e_idx, q_idx].set(rx, mode="drop")
+    buf = _expert_ffn(wg, wu, wd, buf)
+    y = jnp.where(ok2[:, None],
+                  buf[jnp.where(ok2, reid, 0), jnp.where(ok2, pos2, 0)], 0)
+    y_send = jax.lax.all_to_all(y.reshape(ep, cap, D), axis, 0, 0, tiled=True)
+
+    # --- combine ----------------------------------------------------------
+    gathered = y_send[jnp.where(valid, dest, 0), jnp.where(valid, pos, 0)]
+    gathered = jnp.where(valid[:, None], gathered, 0).reshape(T, k, D)
+    out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
+                     w).astype(x_loc.dtype)
+    aux = jax.lax.pmean(aux, axis)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_local_psum(x_rep, router, wg, wu, wd, cfg, ep: int, axis: str):
+    """shard_map body, tokens replicated over `axis`; local experts only."""
+    B, S, D = x_rep.shape
+    T = B * S
+    E_loc = wg.shape[0]
+    my = jax.lax.axis_index(axis)
+    xf = x_rep.reshape(T, D)
+    w, ids, aux = _route(xf, router, cfg)
+    local = ids // E_loc == my                               # (T,k) mine?
+    lids = jnp.where(local, ids % E_loc, E_loc)
+    eo = jax.nn.one_hot(lids.reshape(-1), E_loc, dtype=jnp.int32)
+    cap = max(int(-(-T * cfg.moe_top_k // max(E_loc, 1)) *
+                  cfg.moe_capacity_factor), 1)
+    pos = _positions_in_bins(eo)
+    ok = (pos < cap) & local.reshape(-1)
+    src = jnp.repeat(jnp.arange(T), cfg.moe_top_k)
+    eidx = jnp.where(ok, lids.reshape(-1), E_loc)            # park invalid OOB
+    pidx = jnp.where(ok, pos, cap)
+    buf = jnp.zeros((E_loc, cap, D), x_rep.dtype)
+    buf = buf.at[eidx, pidx].set(xf[src], mode="drop")
+    buf = _expert_ffn(wg, wu, wd, buf)
+    y = jnp.where(ok[:, None], buf[eidx, pidx], 0).reshape(T, cfg.moe_top_k, D)
+    out = jnp.einsum("tkd,tk->td", y.astype(jnp.float32),
+                     jnp.where(local, w, 0)).astype(x_rep.dtype)
+    out = jax.lax.psum(out, axis)
+    aux = jax.lax.pmean(aux, axis)
+    return out.reshape(B, S, D), aux
+
+
+def moe_apply(p, x, cfg, mesh, *, ep_axis: str = "model",
+              dp_axes: Tuple[str, ...] = ("pod", "data")):
+    """Production MoE layer. x:(B,S,D) -> (y, aux_loss)."""
+    from jax import shard_map
+
+    if mesh is None or ep_axis not in mesh.shape:
+        return moe_apply_dense(p, x, cfg)
+    ep = mesh.shape[ep_axis]
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    B, S, D = x.shape
+    batch_div = B % max(1, _extent(mesh, dp)) == 0
+    bspec = dp if batch_div and dp else None
+    if ep == 1:
+        y, aux = moe_apply_dense(p, x, cfg)
+        return y, aux
+
+    wspecs = (P(), P(ep_axis), P(ep_axis), P(ep_axis))
+    if S % ep == 0:
+        body = functools.partial(_moe_local_a2a, cfg=cfg, ep=ep, axis=ep_axis)
+        xspec = P(bspec, ep_axis, None)
+    else:
+        body = functools.partial(_moe_local_psum, cfg=cfg, ep=ep, axis=ep_axis)
+        xspec = P(bspec, None, None)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(xspec,) + wspecs,
+                   out_specs=(xspec, P()),
+                   check_vma=False)
+    y, aux = fn(x, p["router"], p["wg"], p["wu"], p["wd"])
+    if "shared_wg" in p:
+        from repro.models.common import swiglu
+        y = y + swiglu(x, p["shared_wg"], p["shared_wu"], p["shared_wd"])
+    return y, aux
+
+
+def _extent(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def moe_apply_dense(p, x, cfg):
+    """Oracle: every expert on every token, masked combine. O(E·T·D·F)."""
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    w, ids, aux = _route(xf, p["router"], cfg)
+    E_pad = p["wg"].shape[0]
+    comb = jnp.zeros((xf.shape[0], E_pad), jnp.float32).at[
+        jnp.arange(xf.shape[0])[:, None], ids].add(w)
+    g = jnp.einsum("td,edf->tef", xf, p["wg"])
+    u = jnp.einsum("td,edf->tef", xf, p["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y_all = jnp.einsum("tef,efd->ted", h, p["wd"])
+    y = jnp.einsum("ted,te->td", y_all.astype(jnp.float32), comb)
+    y = y.astype(x.dtype).reshape(B, S, D)
+    if "shared_wg" in p:
+        from repro.models.common import swiglu
+        y = y + swiglu(x, p["shared_wg"], p["shared_wu"], p["shared_wd"])
+    return y, aux

@@ -1,0 +1,209 @@
+"""Mamba2-style SSD (state-space duality) block — chunked scan, pure JAX.
+
+Faithful to the SSD formulation of arXiv:2405.21060: per-head scalar decay
+``a_t = exp(-softplus(dt) * exp(A_log))``, rank-1 state updates
+``h_t = a_t h_{t-1} + dt_t (B_t ⊗ x_t)`` with shared (G=1) B/C projections,
+computed chunk-parallel: quadratic attention-like term inside chunks of Q
+tokens plus a sequential inter-chunk state recurrence.  ``unroll=True``
+turns the chunk recurrence into a Python loop (roofline path).
+
+Jamba note (DESIGN.md §3): Jamba-1.5 uses Mamba-1 internals; we adapt both
+assigned SSM archs to the SSD formulation, which is the TPU-native choice
+(MXU-friendly chunk matmuls instead of elementwise scans).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm
+
+
+def ssd_params(cfg, dtype=jnp.bfloat16):
+    D = cfg.d_model
+    DI = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    W = cfg.ssm_conv
+    return {
+        "wz": ParamSpec((D, DI), dtype, ("embed", "ssm_inner")),
+        "wx": ParamSpec((D, DI), dtype, ("embed", "ssm_inner")),
+        "wB": ParamSpec((D, N), dtype, ("embed", "ssm_state")),
+        "wC": ParamSpec((D, N), dtype, ("embed", "ssm_state")),
+        "wdt": ParamSpec((D, H), dtype, ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((W, DI), dtype, ("conv", "ssm_inner"), "normal", 0.5),
+        "conv_B": ParamSpec((W, N), dtype, ("conv", "ssm_state"), "normal", 0.5),
+        "conv_C": ParamSpec((W, N), dtype, ("conv", "ssm_state"), "normal", 0.5),
+        "A_log": ParamSpec((H,), jnp.float32, ("ssm_heads",), "zeros"),
+        "D_skip": ParamSpec((H,), jnp.float32, ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((H,), jnp.float32, ("ssm_heads",), "zeros"),
+        "gate_norm": ParamSpec((DI,), jnp.float32, ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((DI, D), dtype, ("ssm_inner", "embed")),
+        "pre_norm": ParamSpec((D,), jnp.float32, ("unsharded",), "ones"),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x:(B,S,C), w:(W,C). state:(B,W-1,C) or None.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xp[:, xp.shape[1] - (W - 1):, :]
+    return y, new_state
+
+
+def _project(p, x, cfg):
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_apply(p, x, cfg, *, unroll: bool = False, cn=None):
+    """Training/prefill path. x:(B,S,D) -> (y:(B,S,D), final_state).
+
+    cn: optional logical-axis constrainer — shards the SSD head dim so the
+    (B,nc,Q,Q,H) intra-chunk decay tensor tiles over the "model" axis."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    if cn is None:
+        cn = lambda t, *a: t
+    S_pad = -(-S // Q) * Q
+
+    z, xs, Bm, Cm, dt = _project(p, x, cfg)
+    xs, conv_x_st = _causal_conv(xs, p["conv_x"])
+    Bm, conv_B_st = _causal_conv(Bm, p["conv_B"])
+    Cm, conv_C_st = _causal_conv(Cm, p["conv_C"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    Bm = jax.nn.silu(Bm.astype(jnp.float32)).astype(x.dtype)
+    Cm = jax.nn.silu(Cm.astype(jnp.float32)).astype(x.dtype)
+    S_orig = S
+    if S_pad != S:
+        # pad the tail AFTER projection with dt=0: padded steps are exact
+        # no-ops in the recurrence (a=exp(0)=1, update dt·Bx=0)
+        pad = ((0, 0), (0, S_pad - S), (0, 0))
+        xs, Bm, Cm = (jnp.pad(t, pad) for t in (xs, Bm, Cm))
+        dt = jnp.pad(dt, pad)
+        S = S_pad
+    nc = S // Q
+
+    xh = xs.reshape(B, nc, Q, H, P)
+    xh = cn(xh, "batch", None, None, "ssm_heads", None)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+    dtc = dt.reshape(B, nc, Q, H)
+    dtc = cn(dtc, "batch", None, None, "ssm_heads")
+    loga = (-jnp.exp(p["A_log"]) * dtc)                      # (B,nc,Q,H) f32
+    cs = jnp.cumsum(loga, axis=2)                             # within-chunk
+    cs = cn(cs, "batch", None, None, "ssm_heads")
+
+    # intra-chunk (diagonal) term: decay L[i,j] = exp(cs_i - cs_j + loga_j?)
+    # h contribution of step j to output i (i>=j): exp(cs_i - cs_j) * dt_j
+    Lij = cs[:, :, :, None, :] - cs[:, :, None, :, :]         # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.where(tri[None, None, :, :, None], jnp.exp(Lij), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)            # (B,nc,Q,Q)
+    w_ij = scores[..., None] * Ldec * dtc[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w_ij.astype(x.dtype), xh)
+
+    # chunk summary states: s_c = sum_j exp(cs_Q - cs_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)             # (B,nc,Q,H)
+    wB = (Bc[..., None, :] * (decay_to_end * dtc)[..., :, None])  # (B,nc,Q,H,N)
+    s_chunk = jnp.einsum("bcqhn,bcqhp->bchpn", wB.astype(x.dtype), xh)
+
+    # inter-chunk recurrence over running state
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                    # (B,nc,H)
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    if unroll:
+        hs = []
+        h = h0
+        for c in range(nc):
+            hs.append(h)
+            h = (h * chunk_decay[:, c, :, None, None]
+                 + s_chunk[:, c].astype(jnp.float32))
+        h_prev = jnp.stack(hs, axis=1)                        # (B,nc,H,P,N)
+        h_last = h
+    else:
+        def body(h, inp):
+            dec, sc = inp
+            h_new = h * dec[:, :, None, None] + sc.astype(jnp.float32)
+            return h_new, h
+        (h_last, h_prev) = jax.lax.scan(
+            body, h0, (chunk_decay.transpose(1, 0, 2),
+                       s_chunk.transpose(1, 0, 2, 3, 4)))
+        h_prev = h_prev.transpose(1, 0, 2, 3, 4)
+
+    # off-diagonal term: y_off_i = exp(cs_i) * C_i . h_prev
+    decay_in = jnp.exp(cs)                                    # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp",
+                       Cc.astype(jnp.float32), h_prev)
+    y_off = y_off * decay_in[..., None]
+
+    y = y_diag.astype(jnp.float32) + y_off
+    y = y + xh.astype(jnp.float32) * p["D_skip"][None, None, None, :, None]
+    y = y.reshape(B, S, H * P)[:, :S_orig]
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+    state = {"ssm": h_last, "conv_x": conv_x_st.astype(x.dtype),
+             "conv_B": conv_B_st.astype(x.dtype),
+             "conv_C": conv_C_st.astype(x.dtype)}
+    return out, state
+
+
+def ssd_init_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W, DI = cfg.ssm_conv, cfg.d_inner
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, W - 1, DI), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, cfg.ssm_state), dtype),
+    }
+
+
+def ssd_decode(p, x, cache, cfg):
+    """Single-token step. x:(B,1,D), cache from ssd_init_cache."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, Bm, Cm, dt = _project(p, x, cfg)
+    xs, cx = _causal_conv(xs, p["conv_x"], cache["conv_x"])
+    Bm, cb = _causal_conv(Bm, p["conv_B"], cache["conv_B"])
+    Cm, cc = _causal_conv(Cm, p["conv_C"], cache["conv_C"])
+    xs = jax.nn.silu(xs.astype(jnp.float32))[:, 0]            # (B,DI)
+    Bm = jax.nn.silu(Bm.astype(jnp.float32))[:, 0]            # (B,N)
+    Cm = jax.nn.silu(Cm.astype(jnp.float32))[:, 0]
+    dt = dt[:, 0]                                             # (B,H)
+    xh = xs.reshape(B, H, P)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                    # (B,H)
+    upd = (dt[..., None] * xh)[..., None] * Bm[:, None, None, :]  # (B,H,P,N)
+    h = cache["ssm"] * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(B, 1, H * P)
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"ssm": h, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+
+
+def ssd_reference(p, x, cfg):
+    """Sequential per-token oracle (O(S) scan) for tests."""
+    B, S, D = x.shape
+    cache = ssd_init_cache(cfg, B, x.dtype)
+    ys = []
+    for t in range(S):
+        y, cache = ssd_decode(p, x[:, t:t + 1], cache, cfg)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

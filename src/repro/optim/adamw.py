@@ -1,0 +1,72 @@
+"""AdamW with global-norm clipping — framework-free, sharding-friendly.
+
+Optimizer state mirrors the parameter tree (same logical axes, so the same
+sharding rules apply); the dtype of m/v is configurable (`opt_state_dtype`)
+— bf16 state halves optimizer HBM for the ≥90B archs (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_opt_state(params, dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(param_specs, dtype=jnp.float32):
+    """ShapeDtypeStruct/ParamSpec mirror for the dry-run path."""
+    from repro.models.common import ParamSpec
+    conv = lambda p: ParamSpec(p.shape, dtype, p.axes, "zeros")
+    return {"m": jax.tree.map(conv, param_specs,
+                              is_leaf=lambda x: isinstance(x, ParamSpec)),
+            "v": jax.tree.map(conv, param_specs,
+                              is_leaf=lambda x: isinstance(x, ParamSpec)),
+            "step": ParamSpec((), jnp.int32, (), "zeros")}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, opt_state, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.0, grad_clip=0.0):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    if grad_clip:
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+            p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), \
+            v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}

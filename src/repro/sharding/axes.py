@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility pruning.
+
+Every parameter / activation carries a tuple of *logical* axis names.
+A profile maps logical names to mesh axis names; `logical_to_spec`
+resolves them against a concrete mesh, dropping any mesh axis that does
+not evenly divide the corresponding dimension (JAX rejects uneven input
+shardings).  The pruning decisions are recorded so the dry-run report can
+show which dims fell back to replication (e.g. smollm's 15 heads on a
+16-way "model" axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Sharding profiles.  Values are mesh-axis names or tuples of them; names not
+# present in the mesh are silently skipped (so the same profile serves the
+# single-pod ("data","model") and the multi-pod ("pod","data","model") mesh).
+# ---------------------------------------------------------------------------
+
+#: Default training profile: DP over (pod, data), ZeRO-3 style weight
+#: sharding over "data" on the embed dim, tensor parallelism over "model".
+TRAIN_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,                 # set to "model" by the sequence-parallel profile
+    "embed": "data",             # FSDP shard of weight d_model dims
+    "embed_tp": None,            # second d_model dim on square weights
+    "heads": "model",
+    "kv_heads": "model",         # pruned to None when kv < |model|
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",          # expert parallelism
+    "expert_mlp": None,
+    "shared_mlp": "model",
+    "layers": None,
+    "conv": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "img_seq": None,
+    "frames": None,
+    "kv_seq": None,
+    "unsharded": None,
+}
+
+#: Serving (decode) profile: batch over data, KV caches sharded over the
+#: sequence axis on "model" (flash-decode style), weights as in training but
+#: without the FSDP embed shard (decode is latency-bound; keep weights TP).
+DECODE_RULES: dict[str, Any] = dict(
+    TRAIN_RULES,
+    batch=("pod", "data"),
+    kv_seq="model",
+    embed="data",
+)
+
+#: Long-context (batch=1) profile: nothing can shard on batch; KV/sequence
+#: state shards over both axes.
+LONG_RULES: dict[str, Any] = dict(
+    TRAIN_RULES,
+    batch=None,
+    seq=("data", "model"),
+    kv_seq=("data", "model"),
+)
+
+#: Sequence-parallel training profile (hillclimb lever): residual-stream
+#: activations shard the sequence dim on "model" between blocks, turning the
+#: two per-block all-reduces into reduce-scatter + all-gather pairs.
+TRAIN_SP_RULES: dict[str, Any] = dict(TRAIN_RULES, seq="model")
+
+PROFILES: dict[str, dict[str, Any]] = {
+    "train": TRAIN_RULES,
+    "train_sp": TRAIN_SP_RULES,
+    "decode": DECODE_RULES,
+    "long": LONG_RULES,
+}
+
+
+@dataclasses.dataclass
+class PruneLog:
+    """Records (path, dim, logical, mesh_axes, size) replication fallbacks."""
+    entries: list = dataclasses.field(default_factory=list)
+
+    def add(self, name: str, dim: int, logical: str, axes, size: int) -> None:
+        self.entries.append((name, dim, logical, axes, size))
+
+    def render(self) -> str:
+        if not self.entries:
+            return "(no sharding fallbacks)"
+        lines = ["sharding fallbacks (dim -> replicated):"]
+        for name, dim, logical, axes, size in self.entries:
+            lines.append(f"  {name} dim{dim} [{logical}]={size} !% mesh{axes}")
+        return "\n".join(lines)
+
+
+def _mesh_extent(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: Mapping[str, Any],
+    mesh: Mesh,
+    *,
+    name: str = "?",
+    prune_log: Optional[PruneLog] = None,
+) -> P:
+    """Resolve logical axes -> PartitionSpec on `mesh`, pruning uneven dims.
+
+    Mesh axes already used by an earlier dim of the same tensor are dropped
+    (a mesh axis may appear at most once in a PartitionSpec).
+    """
+    assert len(logical_axes) == len(shape), (name, logical_axes, shape)
+    used: set = set()
+    out = []
+    for dim, (logical, size) in enumerate(zip(logical_axes, shape)):
+        if logical is None:
+            out.append(None)
+            continue
+        mapped = rules.get(logical)
+        if mapped is None:
+            out.append(None)
+            continue
+        axes = mapped if isinstance(mapped, tuple) else (mapped,)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes:
+            out.append(None)
+            continue
+        extent = _mesh_extent(mesh, axes)
+        if size % extent != 0:
+            # try progressively shorter prefixes before giving up
+            while axes and size % _mesh_extent(mesh, axes) != 0:
+                axes = axes[:-1]
+            if not axes:
+                if prune_log is not None:
+                    prune_log.add(name, dim, logical, mapped, size)
+                out.append(None)
+                continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def tree_shardings(
+    param_tree,
+    rules: Mapping[str, Any],
+    mesh: Mesh,
+    *,
+    prune_log: Optional[PruneLog] = None,
+):
+    """Map a tree of ParamSpec -> tree of NamedSharding."""
+    from repro.models.common import ParamSpec  # circular-free local import
+
+    def one(path, p: ParamSpec):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        spec = logical_to_spec(p.axes, p.shape, rules, mesh,
+                               name=name, prune_log=prune_log)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(
+        one, param_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def constrain(x, logical_axes, rules, mesh):
+    """with_sharding_constraint via logical names (no-op outside mesh dims)."""
+    spec = logical_to_spec(logical_axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def make_constrainer(rules, mesh):
+    def f(x, *logical_axes):
+        return constrain(x, logical_axes, rules, mesh)
+    return f

@@ -1,0 +1,83 @@
+"""Chunked/blocked attention == full attention, all variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+@pytest.mark.parametrize("S,T,ck,unroll", [
+    (64, 64, 16, False), (64, 64, 16, True),
+    (128, 128, 32, True), (96, 96, 32, False),
+])
+def test_chunked_causal_matches_full(S, T, ck, unroll):
+    rng = jax.random.PRNGKey(0)
+    B, H, hd = 2, 4, 32
+    q = jax.random.normal(rng, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, T, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o1 = A.chunked_attention(q, k, v, q_pos=pos, k_pos=pos, causal=True,
+                             chunk_k=ck, unroll=unroll)
+    o2 = A.full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("unroll", [False, True])
+def test_blocked_causal_q_chunks(unroll):
+    rng = jax.random.PRNGKey(3)
+    B, S, H, hd = 2, 128, 2, 16
+    q = jax.random.normal(rng, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, H, hd))
+    o1 = A.causal_blocked_attention(q, k, v, chunk_q=32, chunk_k=32,
+                                    unroll=unroll)
+    o2 = A.full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+def test_noncausal_chunked():
+    rng = jax.random.PRNGKey(4)
+    B, S, T, H, hd = 2, 48, 80, 2, 16
+    q = jax.random.normal(rng, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, T, H, hd))
+    qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kp = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    o1 = A.chunked_attention(q, k, v, q_pos=qp, k_pos=kp, causal=False,
+                             chunk_k=32)
+    o2 = A.full_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_masks_cache_tail():
+    rng = jax.random.PRNGKey(5)
+    B, T, H, KV, hd = 3, 64, 4, 2, 16
+    q = jax.random.normal(rng, (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, T, KV, hd))
+    clen = jnp.array([10, 32, 64], jnp.int32)
+    o = A.decode_attention(q, k, v, clen)
+    # oracle: full attention over the valid prefix per example
+    for b in range(B):
+        kk = jnp.repeat(k[b:b+1, :clen[b]], H // KV, axis=2)
+        vv = jnp.repeat(v[b:b+1, :clen[b]], H // KV, axis=2)
+        ref = A.full_attention(q[b:b+1], kk, vv, causal=False)
+        np.testing.assert_allclose(o[b:b+1], ref, rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_repeat_equivalence():
+    rng = jax.random.PRNGKey(6)
+    B, S, H, KV, hd = 1, 32, 8, 2, 16
+    q = jax.random.normal(rng, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, KV, hd))
+    o1 = A.full_attention(q, A.repeat_kv(k, H), A.repeat_kv(v, H))
+    # manual per-group
+    for h in range(H):
+        g = h // (H // KV)
+        o_ref = A.full_attention(q[:, :, h:h+1], k[:, :, g:g+1],
+                                 v[:, :, g:g+1])
+        np.testing.assert_allclose(o1[:, :, h:h+1], o_ref, rtol=1e-5,
+                                   atol=1e-5)

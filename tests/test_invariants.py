@@ -1,0 +1,32 @@
+"""Safety properties 3.1-3.4 under failures (hypothesis over seeds/phi)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import invariants as inv
+
+
+@pytest.mark.parametrize("phi", [0.0, 0.02, 0.2])
+def test_safety_under_spot_failure(sim_trace_factory, phi):
+    trace, _ = sim_trace_factory(seed=11, ticks=260, every=4, phi=phi)
+    inv.check_all(trace)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_safety_random_seeds(sim_trace_factory, seed):
+    trace, _ = sim_trace_factory(seed=seed, ticks=150, every=6, phi=0.05)
+    inv.check_election_safety(trace)
+    inv.check_commit_durability(trace)
+
+
+def test_state_irrelevancy(sim_trace_factory):
+    """Property 3.4: killing every secretary/observer mid-run leaves the
+    voters' committed prefix untouched."""
+    trace_a, state = sim_trace_factory(seed=21, ticks=200, every=4, phi=0.0)
+    inv.check_all(trace_a)
+    commit_before = int(np.asarray(state["commit_len"]).max())
+    # continue with all spot nodes dead
+    trace_b, state2 = sim_trace_factory(seed=21, ticks=200, every=4, phi=1.0)
+    inv.check_all(trace_b)
+    assert int(np.asarray(state2["commit_len"]).max()) > 0

@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_ref
+
+TOLS = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+        jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,bq,bk", [
+    (1, 128, 2, 2, 32, 64, 64),
+    (2, 256, 4, 2, 64, 128, 64),
+    (2, 192, 6, 3, 32, 64, 32),     # uneven head group
+    (1, 64, 8, 1, 16, 32, 16),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, hd, bq, bk, dtype):
+    rng = jax.random.PRNGKey(B * S + H)
+    q = jax.random.normal(rng, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, KV, hd), dtype)
+    out = flash_attention_kernel(q, k, v, block_q=bq, block_k=bk,
+                                 interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_flash_attention_noncausal():
+    rng = jax.random.PRNGKey(9)
+    q = jax.random.normal(rng, (1, 128, 2, 32), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 128, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, 128, 2, 32))
+    out = flash_attention_kernel(q, k, v, block_q=64, block_k=64,
+                                 causal=False, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,nc,Q,H,P,N", [
+    (1, 2, 16, 2, 8, 8),
+    (2, 4, 16, 3, 8, 16),
+    (2, 8, 32, 4, 16, 32),
+])
+def test_ssd_scan_sweep(B, nc, Q, H, P, N):
+    rng = jax.random.PRNGKey(nc * Q)
+    x = jax.random.normal(rng, (B, nc, Q, H, P), jnp.float32) * 0.5
+    Bm = jax.random.normal(jax.random.fold_in(rng, 1), (B, nc, Q, N)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(rng, 2), (B, nc, Q, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 3),
+                                           (B, nc, Q, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(rng, 4), (H,)) * 0.3)
+    y, st = ssd_scan_kernel(x, Bm, Cm, dt, A, interpret=True)
+    y_ref, st_ref = ssd_ref(x, Bm, Cm, dt, A)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), st_ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,T,H,KV,hd,bk", [
+    (2, 256, 4, 2, 32, 64),
+    (3, 512, 8, 4, 64, 128),
+    (1, 128, 2, 1, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, T, H, KV, hd, bk, dtype):
+    rng = jax.random.PRNGKey(T + H)
+    q = jax.random.normal(rng, (B, 1, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, KV, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, T, KV, hd), dtype)
+    clen = jnp.asarray(np.random.RandomState(0).randint(1, T + 1, B),
+                       jnp.int32)
+    out = decode_attention_kernel(q, k, v, clen, block_k=bk, interpret=True)
+    ref = decode_ref(q, k, v, clen)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_kernel_matches_model_attention_path():
+    """The Pallas kernel and the model's chunked-jnp path agree."""
+    from repro.models import attention as A
+    rng = jax.random.PRNGKey(0)
+    B, S, H, hd = 2, 128, 4, 32
+    q = jax.random.normal(rng, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, H, hd))
+    o_kernel = flash_attention_kernel(q, k, v, block_q=64, block_k=64,
+                                      interpret=True)
+    o_jnp = A.causal_blocked_attention(q, k, v, chunk_q=64, chunk_k=64)
+    np.testing.assert_allclose(o_kernel, o_jnp, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,105 @@
+"""Algorithm 1 ("peek"), eq. 1/2, MCSA ("peak") properties."""
+import math
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.bwraft_kv import CONFIG as CC
+from repro.core import manager as mgr
+from repro.core import mcsa
+
+
+@settings(max_examples=100, deadline=None)
+@given(reads_prev=st.integers(0, 10_000), reads_now=st.integers(0, 10_000),
+       writes=st.integers(0, 10_000), k_s=st.integers(0, 16),
+       k_o=st.integers(0, 64), budget=st.floats(0, 10))
+def test_algorithm1_invariants(reads_prev, reads_now, writes, k_s, k_o,
+                               budget):
+    stats = mgr.PeekStats(
+        reads_prev=reads_prev, reads_now=reads_now, writes_now=writes,
+        followers_per_site=[s.followers for s in CC.sites],
+        k_s=k_s, k_o=k_o, budget=budget, spot_price=0.0125,
+        on_demand_price=0.0416)
+    d = mgr.algorithm1(CC, stats)
+    assert d.budget_left >= 0, "budget never goes negative (lines 13-20)"
+    assert d.k_s == k_s + d.dk_s and d.k_o == k_o + d.dk_o
+    assert d.k == max(d.dk_s, 0) + max(d.dk_o, 0)
+    assert d.k_s >= 0
+    assert d.dk_o <= CC.num_sites, "at most one new observer per site"
+    # spend respects budget: new leases cost <= initial budget PLUS budget
+    # freed by released observers (paper line 13: theta -= rho*dk_o with
+    # dk_o<0 reinvests the released spend)
+    freed = max(-d.dk_o, 0) * 0.0125
+    assert (max(d.dk_s, 0) + max(d.dk_o, 0)) * 0.0125 <= \
+        budget + freed + 0.0126
+
+
+def test_priority_by_write_ratio():
+    base = dict(reads_prev=100, followers_per_site=[2, 2, 2, 1],
+                k_s=0, k_o=0, budget=1.0, spot_price=0.0125,
+                on_demand_price=0.0416)
+    read_heavy = mgr.algorithm1(CC, mgr.PeekStats(
+        reads_now=1000, writes_now=10, **base))
+    write_heavy = mgr.algorithm1(CC, mgr.PeekStats(
+        reads_now=100, writes_now=1000, **base))
+    assert read_heavy.dk_o > 0, "read growth -> lease observers"
+    assert write_heavy.dk_s > 0, "write heavy -> secretaries first"
+
+
+def test_deadband_no_churn():
+    d = mgr.algorithm1(CC, mgr.PeekStats(
+        reads_prev=1000, reads_now=1050, writes_now=10,
+        followers_per_site=[2, 2, 2, 1], k_s=2, k_o=4, budget=1.0,
+        spot_price=0.0125, on_demand_price=0.0416))
+    assert d.dk_o == 0, "|A| <= 10% must not churn observers"
+
+
+def test_cost_model_monotonic():
+    c0 = mgr.estimated_cost(CC, 0, 0)
+    c1 = mgr.estimated_cost(CC, 4, 8)
+    assert c1 > c0
+    # eq 1 structure: beta*F + beta + rho*(ks+ko) + C
+    assert abs((c1 - c0) - (0.0125 * 12 + 0.001 * 12)) < 0.05
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 8), st.integers(16, 128))
+def test_mcsa_valid_and_competitive(seed, k, n):
+    rng = np.random.default_rng(seed)
+    scores = rng.uniform(0, 100, n)
+    picked = mcsa.mcsa_topk(scores, k, rng)
+    assert len(picked) <= k
+    assert len(set(picked)) == len(picked)
+    assert all(0 <= i < n for i in picked)
+
+
+def test_mcsa_competitive_ratio_on_average():
+    """MCSA should capture a decent fraction of the offline top-k sum."""
+    rng = np.random.default_rng(0)
+    ratios = []
+    for trial in range(200):
+        scores = rng.uniform(0, 1, 64)
+        k = 4
+        picked = mcsa.mcsa_topk(scores, k, rng)
+        best = sum(sorted(scores)[-k:])
+        ratios.append(sum(scores[i] for i in picked) / best)
+    assert np.mean(ratios) > 0.55, np.mean(ratios)
+
+
+def test_secretary_stream_beats_random():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    wins = 0
+    for _ in range(100):
+        s = rng.uniform(0, 1, 50).astype(np.float32)
+        idx = int(mcsa.secretary_1e_stream(jnp.asarray(s)))
+        if s[idx] >= np.quantile(s, 0.6):
+            wins += 1
+    assert wins > 55
+
+
+def test_revocation_predictor_converges():
+    p = mgr.RevocationPredictor(2, alpha=0.5)
+    for _ in range(20):
+        p.update(np.array([5.0, 0.0]), np.array([10.0, 10.0]))
+    rate = p.predict()
+    assert rate[0] > 0.4 and rate[1] < 0.05

@@ -1,0 +1,68 @@
+"""Logical-axis rules: divisibility pruning, profile merging."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import axes as ax
+from repro.launch.mesh import make_host_mesh
+
+
+def _mesh22():
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_prune_uneven_dim():
+    mesh = _mesh22()
+    log = ax.PruneLog()
+    spec = ax.logical_to_spec(("heads", "head_dim"), (15, 64),
+                              {"heads": "model", "head_dim": None}, mesh,
+                              name="wq", prune_log=log)
+    # 15 % 1 == 0 on the 1x1 test mesh -> no prune; simulate a 16-way axis
+    import repro.sharding.axes as axes_mod
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = ax.logical_to_spec(("heads", "head_dim"), (15, 64),
+                              {"heads": "model", "head_dim": None},
+                              FakeMesh(), name="wq", prune_log=log)
+    assert spec == P(None, None)
+    assert log.entries, "fallback must be recorded"
+
+
+def test_tuple_axes_prefix_prune():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    # 32 % (2*16*16) != 0 -> falls back to ("pod","data") = 32
+    spec = ax.logical_to_spec(
+        ("batch",), (32,), {"batch": ("pod", "data", "model")}, FakeMesh())
+    assert spec == P(("pod", "data"))
+
+
+def test_axis_used_once_per_tensor():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = ax.logical_to_spec(
+        ("kv_seq", "kv_heads"), (512, 16),
+        {"kv_seq": ("data", "model"), "kv_heads": "model"}, FakeMesh())
+    assert spec == P(("data", "model"), None), spec
+
+
+def test_profiles_complete():
+    needed = {"batch", "embed", "heads", "kv_heads", "mlp", "vocab",
+              "experts", "ssm_inner", "kv_seq"}
+    for name, prof in ax.PROFILES.items():
+        assert needed <= set(prof), (name, needed - set(prof))
+
+
+def test_constrainer_noop_off_mesh():
+    mesh = _mesh22()
+    cn = ax.make_constrainer(ax.TRAIN_RULES, mesh)
+    x = jnp.ones((4, 8))
+    y = cn(x, "batch", "embed")
+    assert y.shape == x.shape

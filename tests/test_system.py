@@ -1,0 +1,68 @@
+"""End-to-end behaviour: the BW-Raft system does its job."""
+import numpy as np
+import pytest
+
+from repro.configs.bwraft_kv import CONFIG as CC
+from repro.core.runtime import BWRaftSim
+from repro.core.multiraft import MultiRaftSim
+
+
+def test_bwraft_reaches_steady_state():
+    sim = BWRaftSim(CC, write_rate=8.0, read_rate=32.0, seed=3)
+    reps = sim.run(5)
+    last = reps[-1]
+    assert last.no_leader_ticks == 0, "leadership must stabilize"
+    assert last.writes_committed > 0
+    assert last.reads_served > 0.5 * last.reads_arrived
+    assert np.isfinite(last.write_lat_p95)
+    assert last.n_secretaries > 0 and last.n_observers > 0, \
+        "Algorithm 1 must lease spot roles"
+
+
+def test_raft_mode_never_uses_spot():
+    sim = BWRaftSim(CC, mode="raft", write_rate=8.0, read_rate=16.0, seed=1)
+    reps = sim.run(3)
+    assert all(r.n_secretaries == 0 and r.n_observers == 0 for r in reps)
+    assert reps[-1].writes_committed > 0
+
+
+def test_secretary_offload_scales_writes():
+    """The paper's core claim: at large follower counts plain Raft's
+    leader chokes on fan-out; BW-Raft holds throughput (Fig. 7)."""
+    import dataclasses
+    from repro.core.cluster_config import ClusterConfig, SiteConfig
+    sites = tuple(SiteConfig(n, followers=8, rtt_intra=1, rtt_inter=r,
+                             on_demand_price=0.0416, spot_price_mean=0.0125)
+                  for n, r in [("eu", 8), ("asia", 10), ("us-e", 6),
+                               ("us-w", 7)])
+    cfg = ClusterConfig(name="scale", sites=sites)
+    raft = BWRaftSim(cfg, mode="raft", write_rate=16.0, read_rate=8.0,
+                     seed=5).run(5)[-1]
+    bw = BWRaftSim(cfg, mode="bwraft", write_rate=16.0, read_rate=8.0,
+                   seed=5).run(5)[-1]
+    assert bw.writes_committed > 1.5 * raft.writes_committed
+
+
+def test_all_spot_loss_reverts_to_raft():
+    """Extreme case (paper §3.2): all spot instances fail -> plain Raft."""
+    sim = BWRaftSim(CC, write_rate=8.0, read_rate=16.0, seed=7)
+    sim.run(2)
+    sim.set_rates(phi=1.0)       # kill every spot node each tick
+    rep = sim.run_epoch()
+    assert rep.n_secretaries == 0 and rep.n_observers == 0
+    sim.set_rates(phi=0.0)
+    sim.manage = True
+    rep2 = sim.run_epoch()
+    assert rep2.writes_committed > 0, "consensus survives total spot loss"
+
+
+def test_multiraft_costs_more_per_goodput():
+    bw = BWRaftSim(CC, write_rate=8.0, read_rate=32.0, seed=3)
+    mr = MultiRaftSim(CC, shards=2, write_rate=8.0, read_rate=32.0, seed=3)
+    bw_r = bw.run(4)[-1]
+    mr_r = mr.run_epoch()
+    for _ in range(3):
+        mr_r = mr.run_epoch()
+    bw_cpg = bw_r.cost / max(bw_r.goodput, 1)
+    mr_cpg = mr_r.cost / max(mr_r.goodput, 1)
+    assert bw_cpg < mr_cpg, (bw_cpg, mr_cpg)
