@@ -1,4 +1,13 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers.
+
+By default the consensus benchmarks drive their grids through
+`core/fleet.FleetSim`: every (system, load) point in a figure becomes one
+member of a single batched program, so a whole grid costs one jit compile
+and one vmapped scan per epoch (DESIGN.md §7).  `benchmarks.run
+--sequential` flips `USE_FLEET` off to fall back to one-`BWRaftSim`-per-
+point (useful for A/B-ing the two paths — same seeds, same results at
+equal shapes).
+"""
 from __future__ import annotations
 
 import time
@@ -7,9 +16,13 @@ from typing import Callable, List, Tuple
 from repro.configs.bwraft_kv import CONFIG as PAPER_CLUSTER
 from repro.core.cluster_config import ClusterConfig, SiteConfig
 from repro.core.runtime import BWRaftSim
-from repro.core.multiraft import MultiRaftSim
+from repro.core import multiraft
+from repro.core.fleet import FleetSim, MemberSpec
 
 Row = Tuple[str, float, str]
+
+# toggled by `python -m benchmarks.run --sequential`
+USE_FLEET = True
 
 
 def scaled_cluster(f_per_site: int) -> ClusterConfig:
@@ -28,17 +41,52 @@ def timed(fn: Callable, *args, **kw):
 
 
 def tick_ms(ticks: float) -> float:
-    """Convert sim ticks to milliseconds (1 tick = 10 ms, DESIGN.md §3)."""
+    """Convert sim ticks to milliseconds (1 tick = 10 ms, DESIGN.md §2)."""
     return ticks * 10.0
+
+
+def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
+                 shards=2) -> List[MemberSpec]:
+    """Fleet members for one (bwraft, raft, multiraft-shards) comparison
+    point: 2 + `shards` members, batched into whatever FleetSim they join.
+    """
+    return ([MemberSpec(cfg=cfg, mode="bwraft", write_rate=write_rate,
+                        read_rate=read_rate, phi=phi, seed=seed),
+             MemberSpec(cfg=cfg, mode="raft", write_rate=write_rate,
+                        read_rate=read_rate, phi=phi, seed=seed)]
+            + multiraft.shard_specs(cfg, shards=shards,
+                                    write_rate=write_rate,
+                                    read_rate=read_rate, seed=seed))
+
+
+def collect_systems(cfg, member_reports, *, shards, epoch):
+    """Inverse of `system_specs`: slice one comparison point's member
+    report lists back into (bwraft, raft, multiraft) final reports."""
+    bw = member_reports[0][-1]
+    og = member_reports[1][-1]
+    mr = multiraft.aggregate_shards(
+        epoch, [member_reports[2 + i][-1] for i in range(shards)], cfg)
+    return bw, og, mr
 
 
 def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
                 shards=2):
-    """(bwraft, raft, multiraft) steady-state reports."""
-    bw = BWRaftSim(cfg, mode="bwraft", write_rate=write_rate,
-                   read_rate=read_rate, phi=phi, seed=seed)
-    og = BWRaftSim(cfg, mode="raft", write_rate=write_rate,
-                   read_rate=read_rate, phi=phi, seed=seed)
-    mr = MultiRaftSim(cfg, shards=shards, write_rate=write_rate,
-                      read_rate=read_rate, seed=seed)
-    return bw.run(epochs)[-1], og.run(epochs)[-1], mr.run(epochs)[-1]
+    """(bwraft, raft, multiraft) steady-state reports.
+
+    Fleet path: all three systems (2 + `shards` members) advance in one
+    batched program.  Sequential path: the pre-fleet per-system loop.
+    """
+    if not USE_FLEET:
+        bw = BWRaftSim(cfg, mode="bwraft", write_rate=write_rate,
+                       read_rate=read_rate, phi=phi, seed=seed)
+        og = BWRaftSim(cfg, mode="raft", write_rate=write_rate,
+                       read_rate=read_rate, phi=phi, seed=seed)
+        mr = multiraft.MultiRaftSim(cfg, shards=shards,
+                                    write_rate=write_rate,
+                                    read_rate=read_rate, seed=seed)
+        return bw.run(epochs)[-1], og.run(epochs)[-1], mr.run(epochs)[-1]
+
+    specs = system_specs(cfg, write_rate=write_rate, read_rate=read_rate,
+                         seed=seed, phi=phi, shards=shards)
+    reports = FleetSim(specs).run(epochs)
+    return collect_systems(cfg, reports, shards=shards, epoch=epochs - 1)

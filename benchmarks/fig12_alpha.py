@@ -1,5 +1,12 @@
-"""Fig. 12: impact of the R/W ratio alpha on goodput + expense."""
+"""Fig. 12: impact of the R/W ratio alpha on goodput + expense.
+
+All alpha points share one topology (the paper cluster), so the sweep is
+a single FleetSim: per-alpha write/read rates are just batched jit
+arguments — zero recompiles across the grid (DESIGN.md §7).
+"""
+from benchmarks import common
 from benchmarks.common import PAPER_CLUSTER
+from repro.core.fleet import FleetSim, MemberSpec
 from repro.core.runtime import BWRaftSim
 
 
@@ -7,10 +14,20 @@ def run(quick: bool = True):
     rows = []
     total = 64.0
     alphas = [0.5, 0.9] if quick else [0.1, 0.3, 0.5, 0.7, 0.9, 0.99]
-    for alpha in alphas:
-        sim = BWRaftSim(PAPER_CLUSTER, write_rate=total * (1 - alpha),
-                        read_rate=total * alpha, seed=10)
-        r = sim.run(5 if quick else 15)[-1]
+    epochs = 5 if quick else 15
+
+    if common.USE_FLEET:
+        specs = [MemberSpec(cfg=PAPER_CLUSTER,
+                            write_rate=total * (1 - alpha),
+                            read_rate=total * alpha, seed=10)
+                 for alpha in alphas]
+        finals = [reps[-1] for reps in FleetSim(specs).run(epochs)]
+    else:
+        finals = [BWRaftSim(PAPER_CLUSTER, write_rate=total * (1 - alpha),
+                            read_rate=total * alpha, seed=10)
+                  .run(epochs)[-1] for alpha in alphas]
+
+    for alpha, r in zip(alphas, finals):
         rows.append((f"fig12.goodput.alpha{int(alpha*100)}", r.goodput,
                      "ops_per_epoch"))
         rows.append((f"fig12.cost.alpha{int(alpha*100)}", r.cost * 1e6,

@@ -1,15 +1,31 @@
-"""Fig. 13: impact of the spot failure rate phi."""
+"""Fig. 13: impact of the spot failure rate phi.
+
+The kill-rate grid runs as one `FleetSim.sweep` over the phi axis: phi is
+a per-member jit argument, so every point shares the single compiled
+batched epoch (DESIGN.md §7).
+"""
+from benchmarks import common
 from benchmarks.common import PAPER_CLUSTER
+from repro.core.fleet import FleetSim
 from repro.core.runtime import BWRaftSim
 
 
 def run(quick: bool = True):
     rows = []
     phis = [0.0, 0.05] if quick else [0.0, 0.01, 0.05, 0.1, 0.2]
-    for phi in phis:
-        sim = BWRaftSim(PAPER_CLUSTER, write_rate=12.0, read_rate=48.0,
-                        phi=phi, seed=12)
-        r = sim.run(5 if quick else 15)[-1]
+    epochs = 5 if quick else 15
+
+    if common.USE_FLEET:
+        reports = FleetSim.sweep(PAPER_CLUSTER, {"phi": phis},
+                                 epochs=epochs, write_rate=12.0,
+                                 read_rate=48.0, seed=12)
+        finals = [reps[-1] for reps in reports]
+    else:
+        finals = [BWRaftSim(PAPER_CLUSTER, write_rate=12.0, read_rate=48.0,
+                            phi=phi, seed=12).run(epochs)[-1]
+                  for phi in phis]
+
+    for phi, r in zip(phis, finals):
         rows.append((f"fig13.goodput.phi{int(phi*100)}", r.goodput,
                      "ops_per_epoch"))
         rows.append((f"fig13.killed.phi{int(phi*100)}", r.killed,

@@ -1,23 +1,45 @@
-"""Fig. 7: performance + cost as the workload scales out."""
-import numpy as np
+"""Fig. 7: performance + cost as the workload scales out.
 
-from benchmarks.common import Row, run_systems, scaled_cluster
+The whole grid — every follower count x {bwraft, original, multiraft
+shards} — runs as ONE FleetSim: the smaller clusters are padded to the
+largest topology's static shape, so the entire figure costs a single jit
+compile (DESIGN.md §7) instead of one per (load, system) point.
+"""
+from benchmarks import common
+from benchmarks.common import (collect_systems, run_systems,
+                               scaled_cluster, system_specs)
+from repro.core.fleet import FleetSim
 
 
 def run(quick: bool = True):
     rows = []
     loads = [(2, 8.0), (4, 24.0)] if quick else \
         [(2, 8.0), (4, 24.0), (8, 48.0), (12, 96.0)]
-    for f_per_site, w in loads:
-        cfg = scaled_cluster(f_per_site)
-        bw, og, mr = run_systems(cfg, write_rate=w, read_rate=w * 3,
-                                 epochs=4 if quick else 10,
-                                 shards=max(f_per_site // 2, 2))
+    epochs = 4 if quick else 10
+    points = [(f, w, scaled_cluster(f), max(f // 2, 2)) for f, w in loads]
+
+    if common.USE_FLEET:
+        specs, spans = [], []
+        for f, w, cfg, shards in points:
+            spans.append((len(specs), shards))
+            specs += system_specs(cfg, write_rate=w, read_rate=w * 3,
+                                  shards=shards)
+        reports = FleetSim(specs).run(epochs)
+        results = [
+            collect_systems(cfg, reports[lo:lo + 2 + shards],
+                            shards=shards, epoch=epochs - 1)
+            for (f, w, cfg, shards), (lo, _) in zip(points, spans)]
+    else:
+        results = [run_systems(cfg, write_rate=w, read_rate=w * 3,
+                               epochs=epochs, shards=shards)
+                   for f, w, cfg, shards in points]
+
+    for (f_per_site, w, cfg, shards), (bw, og, mr) in zip(points, results):
         scale = 4 * f_per_site
         for name, r in [("bwraft", bw), ("original", og),
                         ("multiraft", mr)]:
             rows.append((f"fig7.goodput.F{scale}.{name}", r.goodput,
-                         f"ops_per_epoch"))
+                         "ops_per_epoch"))
             rows.append((f"fig7.cost.F{scale}.{name}", r.cost * 1e6,
-                         f"usd_per_epoch_x1e6"))
+                         "usd_per_epoch_x1e6"))
     return rows

@@ -1,10 +1,19 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Consensus benchmarks run inline
-(1 CPU device); the roofline/dry-run benchmarks need 512 host devices and
-run as subprocesses (their results are also cached under results/).
+(1 CPU device) and, by default, drive their sweep grids through the
+batched fleet simulator (`core/fleet.FleetSim`): every (system, load)
+point in a figure is one member of a single vmapped program, so a grid
+costs one jit compile instead of one per point (DESIGN.md §7).  The
+roofline/dry-run benchmarks need 512 host devices and run as subprocesses
+(their results are also cached under results/).
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--with-roofline]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--sequential]
+                                          [--with-roofline] [--only NAME]
+
+--sequential falls back to the pre-fleet one-BWRaftSim-per-point path
+(same seeds; identical results at equal static shapes) — useful for
+A/B-ing the batched path or isolating a fleet regression.
 """
 from __future__ import annotations
 
@@ -24,10 +33,16 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (slow)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="one BWRaftSim per grid point instead of one "
+                         "batched FleetSim per figure")
     ap.add_argument("--with-roofline", action="store_true",
                     help="also run one roofline cell as a subprocess")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
+
+    from benchmarks import common
+    common.USE_FLEET = not args.sequential
 
     rows = []
     mods = [m for m in MODULES if not args.only or args.only in m]
@@ -42,6 +57,11 @@ def main(argv=None) -> None:
         dt = (time.perf_counter() - t0) * 1e6
         rows.extend(out)
         rows.append((f"{name}.wall", dt / max(len(out), 1), "us_per_row"))
+
+    if common.USE_FLEET:
+        from repro.core import fleet
+        rows.append(("fleet.compiled_epoch_programs",
+                     float(fleet.total_compile_count()), "count"))
 
     if args.with_roofline:
         cmd = [sys.executable, "-m", "benchmarks.roofline",

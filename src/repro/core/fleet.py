@@ -1,0 +1,304 @@
+"""Batched fleet simulator: B independent BW-Raft clusters in ONE program.
+
+The paper's headline results are sweep-shaped — goodput/cost versus node
+count, write ratio, spot volatility, and kill rate — yet a sequential
+`BWRaftSim` pays one Python-driven jitted epoch per point.  `FleetSim`
+vmaps the same `core/step.tick` over a leading batch axis of B clusters so
+an entire sweep grid advances in a single `lax.scan` epoch.
+
+Compilation contract (DESIGN.md §7): the batched epoch function is
+compiled **once per static shape**.  The cache key is
+
+    (B, N, S, L, K, period_ticks, shared capacity scalars)
+
+where N/S/L/K are the node/site/log/key-space sizes **padded to the max
+across the batch**.  Everything else — per-cluster rates, phi, prices,
+volatility, timeouts, voter majorities, RTT matrices — enters as jit
+*arguments*, so changing the sweep grid, the seeds, or even the member
+topologies (at equal padded shapes) never recompiles.  Check
+`FleetSim.compile_count` (the example `examples/sweep_fleet.py` asserts
+it is exactly 1 for a 32-cluster sweep).
+
+Padding/masking rules (DESIGN.md §7): smaller clusters are padded with
+inert node slots (non-voter, non-leasable, forever DEAD — every step rule
+masks on `alive`), price-only padded sites, and dead log/key tail space.
+Batched results are element-wise equal to sequential `BWRaftSim` runs of
+the same padded shapes and seeds (`tests/test_fleet.py` proves it): the
+per-member RNG streams are split identically, and member dynamics never
+couple across the batch axis.
+
+The host-side control plane (Algorithm 1 "peek", MCSA "peak" leasing, log
+compaction) still runs per member between epochs, reusing
+`runtime.ClusterController` — only the tick-scan hot path is batched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as state_mod
+from repro.core import step as step_mod
+from repro.core.cluster_config import ClusterConfig
+from repro.core.runtime import (ClusterController, EpochReport,
+                                build_report, compact_state,
+                                make_cfg_arrays)
+
+# static scalars every member must agree on (baked into the compiled
+# program; per-node capacities from state.build_static)
+_SHARED_STATIC_KEYS = ("work_capacity", "msg_budget", "entries_per_msg",
+                       "max_ship", "max_apply")
+# per-member static arrays that become jit arguments (batch axis 0)
+_BATCHED_STATIC_KEYS = ("site", "is_voter", "rtt", "majority")
+
+# spec fields sweepable via FleetSim.from_sweep axes
+_SWEEP_AXES = ("mode", "write_rate", "read_rate", "phi", "seed",
+               "manage_resources", "spot_price_vol", "budget_per_period")
+
+
+@dataclasses.dataclass(frozen=True)
+class MemberSpec:
+    """One cluster in the fleet: topology + workload knobs + seed."""
+    cfg: ClusterConfig
+    mode: str = "bwraft"
+    write_rate: float = 8.0
+    read_rate: float = 32.0
+    phi: float = 0.0
+    seed: int = 0
+    manage_resources: bool = True
+    spot_price_vol: Optional[float] = None      # None -> cfg.sites[0]
+    budget_per_period: Optional[float] = None   # None -> cfg value
+
+    @property
+    def manage(self) -> bool:
+        return self.manage_resources and self.mode == "bwraft"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetShapes:
+    B: int
+    N: int   # nodes, padded to max over members
+    S: int   # sites, padded
+    L: int   # log window, padded
+    K: int   # KV key space, padded
+    T: int   # period_ticks (must be equal across members)
+
+
+_FLEET_EPOCH_CACHE: Dict = {}
+
+
+def total_compile_count() -> int:
+    """Compiled batched-epoch programs across every fleet shape this
+    process has run — the one place that touches jit cache internals."""
+    return sum(int(fn._cache_size()) for fn in _FLEET_EPOCH_CACHE.values())
+
+
+def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict):
+    """The one-compile-per-static-shape entry point: a jitted, vmapped
+    `period_ticks`-scan over the whole fleet.  `shared` (python ints) is
+    closed over; batched statics and cfg_c are runtime arguments."""
+    key = (shapes, tuple(sorted(shared.items())))
+    if key not in _FLEET_EPOCH_CACHE:
+        @jax.jit
+        def epoch_fn(state, rngs, bstatic, cfg_c):
+            def one_epoch(st, rng, bstat, cc):
+                static = {**shared, **bstat}
+
+                def body(carry, r):
+                    s, m = step_mod.tick(carry, static, cc, r)
+                    return s, m
+                ticks = jax.random.split(rng, shapes.T)
+                return jax.lax.scan(body, st, ticks)
+            return jax.vmap(one_epoch)(state, rngs, bstatic, cfg_c)
+        _FLEET_EPOCH_CACHE[key] = epoch_fn
+    return _FLEET_EPOCH_CACHE[key]
+
+
+class _Member:
+    """Host-side bookkeeping for one fleet slot."""
+
+    def __init__(self, spec: MemberSpec, shapes: FleetShapes):
+        assert spec.mode in ("bwraft", "raft")
+        cfg = spec.cfg
+        if spec.budget_per_period is not None:
+            cfg = dataclasses.replace(
+                cfg, budget_per_period=spec.budget_per_period)
+        self.spec = spec
+        self.cfg = cfg
+        self.pads = {
+            "pad_nodes": shapes.N - cfg.max_nodes,
+            "pad_sites": shapes.S - cfg.num_sites,
+            "pad_log": shapes.L - cfg.max_log,
+            "pad_keys": shapes.K - cfg.key_space,
+        }
+        assert all(p >= 0 for p in self.pads.values()), \
+            f"member {cfg.name} exceeds fleet shapes {shapes}"
+        self.static = state_mod.build_static(
+            cfg, pad_nodes=self.pads["pad_nodes"],
+            pad_sites=self.pads["pad_sites"])
+        self.state0 = state_mod.init_state(
+            cfg, self.static, pad_log=self.pads["pad_log"],
+            pad_keys=self.pads["pad_keys"])
+        self.cfg_c = make_cfg_arrays(
+            cfg, write_rate=spec.write_rate, read_rate=spec.read_rate,
+            phi=spec.phi, pad_sites=self.pads["pad_sites"],
+            spot_price_vol=spec.spot_price_vol)
+        self.rng = jax.random.PRNGKey(spec.seed)
+        self.controller = ClusterController(cfg, self.static,
+                                            seed=spec.seed)
+        self.manage = spec.manage
+        self.epoch = 0
+        self.reports: List[EpochReport] = []
+
+
+class FleetSim:
+    """B independent clusters stepped in one jitted, vmapped program.
+
+    Per-member dynamics are identical to a sequential `BWRaftSim` with the
+    same padded shapes and seed; the control plane runs per member on the
+    host between epochs.
+    """
+
+    def __init__(self, specs: Sequence[MemberSpec]):
+        specs = list(specs)
+        assert specs, "fleet needs at least one member"
+        periods = {s.cfg.period_ticks for s in specs}
+        assert len(periods) == 1, \
+            f"all members must share period_ticks, got {periods}"
+        self.shapes = FleetShapes(
+            B=len(specs),
+            N=max(s.cfg.max_nodes for s in specs),
+            S=max(s.cfg.num_sites for s in specs),
+            L=max(s.cfg.max_log for s in specs),
+            K=max(s.cfg.key_space for s in specs),
+            T=periods.pop(),
+        )
+        self.members = [_Member(s, self.shapes) for s in specs]
+
+        self._shared = {k: self.members[0].static[k]
+                        for k in _SHARED_STATIC_KEYS}
+        for m in self.members[1:]:
+            for k in _SHARED_STATIC_KEYS:
+                assert m.static[k] == self._shared[k], \
+                    f"member {m.cfg.name} disagrees on static {k}"
+
+        self._bstatic = {
+            k: (jnp.asarray([m.static[k] for m in self.members], jnp.int32)
+                if k == "majority" else                      # scalar per member
+                jnp.stack([jnp.asarray(m.static[k]) for m in self.members]))
+            for k in _BATCHED_STATIC_KEYS
+        }
+        self._state = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[m.state0 for m in self.members])
+        self._cfg_c = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[m.cfg_c for m in self.members])
+        self._epoch_fn = _fleet_epoch_fn(self.shapes, self._shared)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_sweep(cls, configs, axes: Optional[Dict] = None,
+                   **defaults) -> "FleetSim":
+        """Cross-product sweep constructor.
+
+        `configs`: one ClusterConfig or a sequence of them.  `axes`: dict
+        mapping a MemberSpec field name (write_rate / read_rate / phi /
+        seed / mode / spot_price_vol / budget_per_period / ...) to the
+        values to sweep; the member list is configs x product(axes).
+        `defaults` fill the remaining MemberSpec fields.
+        """
+        if isinstance(configs, ClusterConfig):
+            configs = [configs]
+        axes = dict(axes or {})
+        for name in axes:
+            assert name in _SWEEP_AXES, \
+                f"unknown sweep axis {name!r}; valid: {_SWEEP_AXES}"
+        names = list(axes.keys())
+        specs = []
+        for cfg in configs:
+            for combo in itertools.product(*axes.values()):
+                specs.append(MemberSpec(cfg=cfg, **defaults,
+                                        **dict(zip(names, combo))))
+        return cls(specs)
+
+    @classmethod
+    def sweep(cls, configs, axes: Optional[Dict] = None, *,
+              epochs: int = 5, **defaults) -> List[List[EpochReport]]:
+        """One-call sweep: build the fleet and run it.  Returns reports
+        indexed [member][epoch]; member order is configs-major, then the
+        cross product of `axes` in insertion order."""
+        return cls.from_sweep(configs, axes, **defaults).run(epochs)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def compile_count(self) -> int:
+        """How many programs the underlying epoch function has compiled
+        (1 after any number of epochs/sweeps at this static shape)."""
+        return int(self._epoch_fn._cache_size())
+
+    def pads_for(self, i: int) -> Dict[str, int]:
+        """Padding a solo BWRaftSim needs to reproduce member i exactly."""
+        return dict(self.members[i].pads)
+
+    @property
+    def state(self) -> Dict:
+        """Batched state pytree (leading axis = member)."""
+        return self._state
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self) -> List[EpochReport]:
+        subs = []
+        for m in self.members:
+            m.rng, sub = jax.random.split(m.rng)
+            subs.append(sub)
+        rngs = jnp.stack(subs)
+        cost_before = np.asarray(self._state["cost_accrued"])
+
+        self._state, ms = self._epoch_fn(self._state, rngs, self._bstatic,
+                                         self._cfg_c)
+        st_np = jax.tree.map(np.asarray, self._state)
+        ms_np = jax.tree.map(np.asarray, ms)
+
+        role = st_np["role"].copy()
+        alive = st_np["alive"].copy()
+        sec_of = st_np["sec_of"].copy()
+        obs_of = st_np["obs_of"].copy()
+
+        out = []
+        for i, m in enumerate(self.members):
+            sti = {k: v[i] for k, v in st_np.items()}
+            msi = {k: v[i] for k, v in ms_np.items()}
+            rep = build_report(m.epoch, sti, msi, float(cost_before[i]))
+            if m.manage:
+                dec = m.controller.decide(
+                    rep,
+                    float(np.mean(sti["spot_price"][:m.cfg.num_sites])))
+                rep.decision = dec
+                role[i], alive[i], sec_of[i], obs_of[i] = m.controller.lease(
+                    role[i], alive[i], max(dec.dk_s, 0), max(dec.dk_o, 0))
+            m.controller.end_epoch(rep)
+            m.epoch += 1
+            m.reports.append(rep)
+            out.append(rep)
+
+        self._state = compact_state(dict(
+            self._state,
+            role=jnp.asarray(role), alive=jnp.asarray(alive),
+            sec_of=jnp.asarray(sec_of), obs_of=jnp.asarray(obs_of)))
+        return out
+
+    def run(self, epochs: int) -> List[List[EpochReport]]:
+        """Run `epochs` epochs; returns the reports of *this call* indexed
+        [member][epoch] (matching BWRaftSim.run; the full history stays on
+        `self.reports`)."""
+        start = len(self.members[0].reports)
+        for _ in range(epochs):
+            self.run_epoch()
+        return [list(m.reports[start:]) for m in self.members]
+
+    @property
+    def reports(self) -> List[List[EpochReport]]:
+        return [list(m.reports) for m in self.members]

@@ -6,11 +6,20 @@ step replicates the entire footprint — the cost problem), with 2-phase
 commit between shard leaders for cross-shard writes.  2PC is modeled as a
 latency/capacity tax (DESIGN.md §6): a cross-shard write consumes commit
 capacity in both shards and pays two extra inter-site commit rounds.
+
+Two entry points share the same shard model and aggregation:
+
+- `MultiRaftSim` — sequential: one `BWRaftSim` (mode="raft") per shard,
+  stepped one after another on the host.
+- `shard_specs` + `aggregate_shards` — batched: the same shards expressed
+  as `fleet.MemberSpec`s, so a `FleetSim` can step every baseline shard in
+  the same compiled program as the BW-Raft clusters it is compared
+  against (see `benchmarks/common.run_systems`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Sequence
 
 import numpy as np
 
@@ -36,6 +45,63 @@ class MultiRaftReport:
         return self.reads_served + self.writes_committed
 
 
+def shard_workload(write_rate: float, read_rate: float, shards: int,
+                   cross_shard_frac: float) -> tuple:
+    """Per-shard effective rates: cross-shard writes execute in both
+    shards, so the duplicated prepares inflate the write rate."""
+    w_eff = write_rate * (1 + cross_shard_frac) / shards
+    return w_eff, read_rate / shards
+
+
+def two_pc_penalty(cfg: ClusterConfig) -> int:
+    """2PC tax in ticks: prepare + commit round between shard leaders."""
+    rtts = [s.rtt_inter for s in cfg.sites]
+    return 2 * int(np.mean(rtts))
+
+
+def shard_specs(cfg: ClusterConfig, *, shards: int = 2,
+                write_rate: float = 8.0, read_rate: float = 32.0,
+                cross_shard_frac: float = 0.1, seed: int = 0) -> List:
+    """The batched entry point: this Multi-Raft instance as `shards`
+    fleet members (mode="raft", unmanaged) for a single vmapped program.
+    Feed the resulting per-shard EpochReports to `aggregate_shards`."""
+    from repro.core.fleet import MemberSpec  # deferred: fleet imports runtime
+    w_eff, r_eff = shard_workload(write_rate, read_rate, shards,
+                                  cross_shard_frac)
+    return [MemberSpec(cfg=cfg, mode="raft", write_rate=w_eff,
+                       read_rate=r_eff, seed=seed + 17 * i,
+                       manage_resources=False)
+            for i in range(shards)]
+
+
+def aggregate_shards(epoch: int, reps: Sequence[EpochReport],
+                     cfg: ClusterConfig,
+                     cross_shard_frac: float = 0.1) -> MultiRaftReport:
+    """Blend per-shard reports into one Multi-Raft report, applying the
+    2PC latency tax and deduplicating the cross-shard write prepares."""
+    chi = cross_shard_frac
+    tax = two_pc_penalty(cfg)
+    lat_mean = float(np.nanmean([r.write_lat_mean for r in reps]))
+    lat_p95 = float(np.nanmax([r.write_lat_p95 for r in reps]))
+    lat_p99 = float(np.nanmax([r.write_lat_p99 for r in reps]))
+    # cross-shard writes pay the 2PC penalty; the blended mean/p95 shift
+    lat_mean = lat_mean + chi * tax
+    lat_p95 = lat_p95 + tax                       # tail is cross-shard
+    lat_p99 = lat_p99 + tax
+    return MultiRaftReport(
+        epoch=epoch,
+        writes_committed=int(sum(r.writes_committed for r in reps) /
+                             (1 + chi)),
+        writes_arrived=int(sum(r.writes_arrived for r in reps) / (1 + chi)),
+        reads_served=sum(r.reads_served for r in reps),
+        reads_arrived=sum(r.reads_arrived for r in reps),
+        write_lat_mean=lat_mean, write_lat_p95=lat_p95,
+        write_lat_p99=lat_p99,
+        read_lat_mean=float(np.mean([r.read_lat_mean for r in reps])),
+        cost=sum(r.cost for r in reps),
+    )
+
+
 class MultiRaftSim:
     """S independent Raft shards + 2PC cross-shard write model."""
 
@@ -45,44 +111,21 @@ class MultiRaftSim:
         self.cfg = cfg
         self.shards = shards
         self.chi = cross_shard_frac
-        # cross-shard writes execute in both shards: effective per-shard
-        # write rate includes the duplicated prepares
-        w_eff = write_rate * (1 + cross_shard_frac) / shards
+        w_eff, r_eff = shard_workload(write_rate, read_rate, shards,
+                                      cross_shard_frac)
         self.sims = [
             BWRaftSim(cfg, mode="raft", write_rate=w_eff,
-                      read_rate=read_rate / shards, seed=seed + 17 * i,
+                      read_rate=r_eff, seed=seed + 17 * i,
                       manage_resources=False)
             for i in range(shards)
         ]
-        # 2PC penalty: prepare + commit round between shard leaders
-        rtts = [s.rtt_inter for s in cfg.sites]
-        self.two_pc_penalty = 2 * int(np.mean(rtts))
+        self.two_pc_penalty = two_pc_penalty(cfg)
         self.epoch = 0
         self.np_rng = np.random.default_rng(seed + 999)
 
     def run_epoch(self) -> MultiRaftReport:
         reps: List[EpochReport] = [s.run_epoch() for s in self.sims]
-        lat_mean = float(np.nanmean([r.write_lat_mean for r in reps]))
-        lat_p95 = float(np.nanmax([r.write_lat_p95 for r in reps]))
-        lat_p99 = float(np.nanmax([r.write_lat_p99 for r in reps]))
-        # cross-shard writes pay the 2PC penalty; the blended mean/p95 shift
-        chi = self.chi
-        lat_mean = lat_mean + chi * self.two_pc_penalty
-        lat_p95 = lat_p95 + self.two_pc_penalty       # tail is cross-shard
-        lat_p99 = lat_p99 + self.two_pc_penalty
-        rep = MultiRaftReport(
-            epoch=self.epoch,
-            writes_committed=int(sum(r.writes_committed for r in reps) /
-                                 (1 + chi)),
-            writes_arrived=int(sum(r.writes_arrived for r in reps) /
-                               (1 + chi)),
-            reads_served=sum(r.reads_served for r in reps),
-            reads_arrived=sum(r.reads_arrived for r in reps),
-            write_lat_mean=lat_mean, write_lat_p95=lat_p95,
-            write_lat_p99=lat_p99,
-            read_lat_mean=float(np.mean([r.read_lat_mean for r in reps])),
-            cost=sum(r.cost for r in reps),
-        )
+        rep = aggregate_shards(self.epoch, reps, self.cfg, self.chi)
         self.epoch += 1
         return rep
 

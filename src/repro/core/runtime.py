@@ -5,12 +5,20 @@ which the control plane runs: collect stats ("peek", Algorithm 1), score
 the spot-offer pool and select instances (MCSA, "peak"), lease them into
 dead spot slots, wire secretaries/observers, compact the log window.
 `mode="raft"` disables spot roles entirely (the Original baseline).
+
+Compilation contract (DESIGN.md §7): the epoch function is compiled **once
+per static shape** — the cache key is (cluster config, padding), and every
+workload knob in `cfg_c` (rates, phi, prices, volatility, timeouts) is a
+jit *argument*, so rate/volatility/kill-rate sweeps over one topology reuse
+the compiled program.  For sweeps over many clusters in a single compiled
+program, use `core/fleet.py`, which vmaps the same tick over a leading
+batch axis; the host-side control plane below (`ClusterController`,
+`lease_and_wire`, `build_report`, `compact_state`) is shared by both.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -25,8 +33,18 @@ from repro.core.state import (DEAD, FOLLOWER, LEADER, OBSERVER, SECRETARY)
 
 
 def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
-                    read_rate: float, phi: float = 0.0) -> Dict:
-    S = cfg.num_sites
+                    read_rate: float, phi: float = 0.0,
+                    pad_sites: int = 0,
+                    spot_price_vol: Optional[float] = None) -> Dict:
+    """Per-epoch dynamic knobs — all jit arguments, never baked into the
+    compiled program.  `pad_sites` repeats the last site's prices so padded
+    clusters share one (S,) shape (DESIGN.md §7)."""
+    od = [s.on_demand_price for s in cfg.sites]
+    sp = [s.spot_price_mean for s in cfg.sites]
+    od = od + [od[-1]] * pad_sites
+    sp = sp + [sp[-1]] * pad_sites
+    vol = (cfg.sites[0].spot_price_vol if spot_price_vol is None
+           else spot_price_vol)
     return {
         "write_rate": jnp.float32(write_rate),
         "read_rate": jnp.float32(read_rate),
@@ -34,11 +52,9 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         "heartbeat_interval": jnp.int32(cfg.heartbeat_interval),
         "election_timeout_min": jnp.int32(cfg.election_timeout_min),
         "election_timeout_max": jnp.int32(cfg.election_timeout_max),
-        "on_demand_price": jnp.asarray(
-            [s.on_demand_price for s in cfg.sites], jnp.float32),
-        "spot_price_mean": jnp.asarray(
-            [s.spot_price_mean for s in cfg.sites], jnp.float32),
-        "spot_price_vol": jnp.float32(cfg.sites[0].spot_price_vol),
+        "on_demand_price": jnp.asarray(od, jnp.float32),
+        "spot_price_mean": jnp.asarray(sp, jnp.float32),
+        "spot_price_vol": jnp.float32(vol),
         "ticks_per_hour": jnp.float32(3600.0 / 0.01 / 100),  # 1 tick = 10ms
         "network_cost_coef": jnp.float32(0.0005),
     }
@@ -69,13 +85,194 @@ class EpochReport:
         return (self.reads_served + self.writes_committed) / 1.0
 
 
+def build_report(epoch: int, st: Dict, ms: Dict,
+                 cost_before: float) -> EpochReport:
+    """Distill one cluster's post-epoch state + per-tick metrics (numpy,
+    leaves shaped (T,)) into an EpochReport."""
+    sub_t = np.asarray(st["entry_submit_t"])
+    com_t = np.asarray(st["entry_commit_t"])
+    done = (sub_t >= 0) & (com_t >= 0)
+    lat = (com_t[done] - sub_t[done]).astype(float)
+    reads_served = int(st["reads_served"])
+    return EpochReport(
+        epoch=epoch,
+        reads_arrived=int(st["reads_arrived"]),
+        writes_arrived=int(st["writes_arrived"]),
+        reads_served=reads_served,
+        writes_committed=int(done.sum()),
+        read_lat_mean=float(st["read_lat_sum"] / max(reads_served, 1)),
+        read_lat_max=float(st["read_lat_max"]),
+        write_lat_mean=float(lat.mean()) if lat.size else float("nan"),
+        write_lat_p95=float(np.percentile(lat, 95)) if lat.size
+        else float("nan"),
+        write_lat_p99=float(np.percentile(lat, 99)) if lat.size
+        else float("nan"),
+        cost=float(st["cost_accrued"]) - cost_before,
+        n_secretaries=int(ms["n_secretaries"][-1]),
+        n_observers=int(ms["n_observers"][-1]),
+        leader_changes=int((np.diff(ms["leader_term"]) > 0).sum()),
+        no_leader_ticks=int((ms["has_leader"] == 0).sum()),
+        killed=int(ms["killed"].sum()),
+    )
+
+
+def compact_state(state: Dict) -> Dict:
+    """Epoch-boundary log compaction (state machines keep the data).
+
+    Shape-generic — written with zeros_like/full_like only, so it works on
+    a single cluster ((N, L) leaves) and on a batched fleet ((B, N, L))."""
+    return dict(
+        state,
+        log_term=jnp.zeros_like(state["log_term"]),
+        log_key=jnp.zeros_like(state["log_key"]),
+        log_val=jnp.zeros_like(state["log_val"]),
+        log_len=jnp.zeros_like(state["log_len"]),
+        commit_len=jnp.zeros_like(state["commit_len"]),
+        applied_len=jnp.zeros_like(state["applied_len"]),
+        match_len=jnp.zeros_like(state["match_len"]),
+        app_arrive_t=jnp.full_like(state["app_arrive_t"], -1),
+        ack_arrive_t=jnp.full_like(state["ack_arrive_t"], -1),
+        entry_submit_t=jnp.full_like(state["entry_submit_t"], -1),
+        entry_commit_t=jnp.full_like(state["entry_commit_t"], -1),
+        reads_arrived=jnp.zeros_like(state["reads_arrived"]),
+        writes_arrived=jnp.zeros_like(state["writes_arrived"]),
+        reads_served=jnp.zeros_like(state["reads_served"]),
+        writes_committed=jnp.zeros_like(state["writes_committed"]),
+        read_lat_sum=jnp.zeros_like(state["read_lat_sum"]),
+        read_lat_max=jnp.zeros_like(state["read_lat_max"]),
+    )
+
+
+def lease_and_wire(cfg: ClusterConfig, static, role: np.ndarray,
+                   alive: np.ndarray, np_rng, predictor, leased: np.ndarray,
+                   want_sec: int, want_obs: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray]:
+    """Peak: score a spot-offer pool (eq. 2), MCSA-select, wire roles.
+
+    Pure numpy control-plane step shared by BWRaftSim and FleetSim.
+    Returns updated (role, alive, sec_of, obs_of); `leased` is a per-site
+    lease census updated in place.
+    """
+    site = static["site"]
+    V = static["V"]
+    n_sites = cfg.num_sites
+    role = np.asarray(role).copy()
+    alive = np.asarray(alive).copy()
+
+    def lease_slots(slot_mask, want):
+        free = np.where(slot_mask & (role == DEAD))[0]
+        if want <= 0 or len(free) == 0:
+            return []
+        pool = min(len(free) * 4, 256)
+        offer_site = np_rng.integers(0, n_sites, pool)
+        cpu = np_rng.uniform(1, 4, pool)
+        mem = np_rng.uniform(1, 8, pool)
+        price = np.array([cfg.sites[s].spot_price_mean for s in
+                          offer_site]) * np_rng.uniform(0.6, 1.6, pool)
+        revoke = predictor.predict()[offer_site]
+        scores = mgr.spot_scores(cpu, mem, price, revoke)
+        picked = mcsa.mcsa_topk(scores, min(want, len(free)), np_rng)
+        chosen_sites = [int(offer_site[i]) for i in picked]
+        slots = []
+        for s_id in chosen_sites:
+            cands = [f for f in free
+                     if site[f] == s_id and f not in slots]
+            if not cands:
+                cands = [f for f in free if f not in slots]
+            if cands:
+                slots.append(int(cands[0]))
+                leased[site[slots[-1]]] += 1
+        return slots
+
+    for s in lease_slots(static["is_secretary_slot"], want_sec):
+        role[s] = SECRETARY
+        alive[s] = True
+    for s in lease_slots(static["is_observer_slot"], want_obs):
+        role[s] = OBSERVER
+        alive[s] = True
+
+    # wire followers -> site secretary (round robin), observers -> a
+    # follower at their site
+    sec_of = np.full(role.shape, -1, np.int32)
+    obs_of = np.full(role.shape, -1, np.int32)
+    for s_id in range(n_sites):
+        secs = [i for i in range(len(role))
+                if role[i] == SECRETARY and alive[i] and site[i] == s_id]
+        fols = [i for i in range(V)
+                if role[i] in (FOLLOWER, LEADER) and alive[i]
+                and site[i] == s_id]
+        if secs:
+            for j, f in enumerate(fols):
+                sec_of[f] = secs[j % len(secs)]
+        obss = [i for i in range(len(role))
+                if role[i] == OBSERVER and alive[i] and site[i] == s_id]
+        if fols:
+            for j, o in enumerate(obss):
+                obs_of[o] = fols[j % len(fols)]
+    # cross-site fallback wiring for observers at secretary-less sites
+    all_fols = [i for i in range(V) if role[i] in (FOLLOWER, LEADER)
+                and alive[i]]
+    for o in range(len(role)):
+        if role[o] == OBSERVER and alive[o] and obs_of[o] < 0 and all_fols:
+            obs_of[o] = all_fols[o % len(all_fols)]
+    return role, alive, sec_of, obs_of
+
+
+class ClusterController:
+    """Host-side per-cluster control plane ("peek" + "peak" bookkeeping).
+
+    Owns the numpy RNG, the revocation predictor, the per-site lease
+    census, and the read-growth history — everything Algorithm 1 needs
+    between epochs.  One instance per simulated cluster, shared by the
+    sequential `BWRaftSim` and every member of a batched `FleetSim`.
+    """
+
+    def __init__(self, cfg: ClusterConfig, static, *, seed: int):
+        self.cfg = cfg
+        self.static = static
+        self.np_rng = np.random.default_rng(seed + 1)
+        self.predictor = mgr.RevocationPredictor(cfg.num_sites)
+        self.reads_prev = 0
+        self.leased = np.zeros(cfg.num_sites, np.int64)
+
+    def decide(self, rep: EpochReport, spot_price: float
+               ) -> mgr.PeekDecision:
+        """Algorithm 1 on this epoch's stats (call only when managing)."""
+        self.predictor.update(
+            np.full(self.cfg.num_sites,
+                    rep.killed / max(self.cfg.num_sites, 1)),
+            np.maximum(self.leased, 1))
+        stats = mgr.PeekStats(
+            reads_prev=self.reads_prev,
+            reads_now=rep.reads_arrived,
+            writes_now=rep.writes_arrived,
+            followers_per_site=[s.followers for s in self.cfg.sites],
+            k_s=rep.n_secretaries, k_o=rep.n_observers,
+            budget=self.cfg.budget_per_period,
+            spot_price=spot_price,
+            on_demand_price=float(
+                np.mean([s.on_demand_price for s in self.cfg.sites])),
+        )
+        return mgr.algorithm1(self.cfg, stats)
+
+    def lease(self, role, alive, want_sec: int, want_obs: int):
+        return lease_and_wire(self.cfg, self.static, role, alive,
+                              self.np_rng, self.predictor, self.leased,
+                              want_sec, want_obs)
+
+    def end_epoch(self, rep: EpochReport) -> None:
+        self.reads_prev = rep.reads_arrived
+
+
 _EPOCH_CACHE: Dict = {}
 
 
-def _epoch_fn_for(cfg: ClusterConfig, static):
-    """One jitted epoch function per cluster config — cfg_c values are jit
-    *arguments* (rate sweeps re-use the compiled program)."""
-    if cfg not in _EPOCH_CACHE:
+def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0)):
+    """One jitted epoch function per (cluster config, padding) — cfg_c
+    values are jit *arguments* (rate sweeps re-use the compiled program)."""
+    key = (cfg, pads)
+    if key not in _EPOCH_CACHE:
         @jax.jit
         def epoch_fn(state, rng, cfg_c):
             def body(carry, r):
@@ -85,35 +282,44 @@ def _epoch_fn_for(cfg: ClusterConfig, static):
             rngs = jax.random.split(rng, cfg.period_ticks)
             (state, _), ms = jax.lax.scan(body, (state, 0), rngs)
             return state, ms
-        _EPOCH_CACHE[cfg] = epoch_fn
-    return _EPOCH_CACHE[cfg]
+        _EPOCH_CACHE[key] = epoch_fn
+    return _EPOCH_CACHE[key]
 
 
 class BWRaftSim:
-    """In-process BW-Raft cluster simulation (the paper's prototype)."""
+    """In-process BW-Raft cluster simulation (the paper's prototype).
+
+    `pad_*` widen the state shapes with inert slots/sites/log tail so a
+    solo run can reproduce exactly the shapes a `FleetSim` member gets when
+    batched next to bigger clusters (DESIGN.md §7).
+    """
 
     def __init__(self, cfg: ClusterConfig, *, mode: str = "bwraft",
                  write_rate: float = 8.0, read_rate: float = 32.0,
                  phi: float = 0.0, seed: int = 0,
-                 manage_resources: bool = True):
+                 manage_resources: bool = True,
+                 pad_nodes: int = 0, pad_sites: int = 0,
+                 pad_log: int = 0, pad_keys: int = 0,
+                 spot_price_vol: Optional[float] = None):
         assert mode in ("bwraft", "raft")
         self.cfg = cfg
         self.mode = mode
-        self.static = state_mod.build_static(cfg)
-        self.state = state_mod.init_state(cfg, self.static)
+        self.static = state_mod.build_static(cfg, pad_nodes=pad_nodes,
+                                             pad_sites=pad_sites)
+        self.state = state_mod.init_state(cfg, self.static, pad_log=pad_log,
+                                          pad_keys=pad_keys)
         self.cfg_c = make_cfg_arrays(cfg, write_rate=write_rate,
-                                     read_rate=read_rate, phi=phi)
+                                     read_rate=read_rate, phi=phi,
+                                     pad_sites=pad_sites,
+                                     spot_price_vol=spot_price_vol)
         self.rng = jax.random.PRNGKey(seed)
-        self.np_rng = np.random.default_rng(seed + 1)
         self.manage = manage_resources and mode == "bwraft"
-        self.predictor = mgr.RevocationPredictor(cfg.num_sites)
+        self.controller = ClusterController(cfg, self.static, seed=seed)
         self.epoch = 0
-        self.reads_prev = 0
         self._reports: List[EpochReport] = []
-        self._leased = np.zeros(cfg.num_sites, np.int64)
-        self._revoked = np.zeros(cfg.num_sites, np.int64)
 
-        self._epoch_fn = _epoch_fn_for(cfg, self.static)
+        self._epoch_fn = _epoch_fn_for(
+            cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys))
 
     # ------------------------------------------------------------------ #
     def set_rates(self, write_rate=None, read_rate=None, phi=None):
@@ -126,79 +332,9 @@ class BWRaftSim:
 
     def _lease(self, want_sec: int, want_obs: int) -> None:
         """Peak: score a spot-offer pool (eq. 2), MCSA-select, wire roles."""
-        st = jax.tree.map(np.asarray, self.state)
-        cfg, static = self.cfg, self.static
-        site = static["site"]
-        V = static["V"]
-        n_sites = cfg.num_sites
-
-        def lease_slots(slot_mask, want, role_val):
-            free = np.where(slot_mask & (st["role"] == DEAD))[0]
-            if want <= 0 or len(free) == 0:
-                return []
-            pool = min(len(free) * 4, 256)
-            offer_site = self.np_rng.integers(0, n_sites, pool)
-            cpu = self.np_rng.uniform(1, 4, pool)
-            mem = self.np_rng.uniform(1, 8, pool)
-            price = np.array([cfg.sites[s].spot_price_mean for s in
-                              offer_site]) * self.np_rng.uniform(
-                0.6, 1.6, pool)
-            revoke = self.predictor.predict()[offer_site]
-            scores = mgr.spot_scores(cpu, mem, price, revoke)
-            picked = mcsa.mcsa_topk(scores, min(want, len(free)),
-                                    self.np_rng)
-            chosen_sites = [int(offer_site[i]) for i in picked]
-            slots = []
-            for s_id in chosen_sites:
-                cands = [f for f in free
-                         if site[f] == s_id and f not in slots]
-                if not cands:
-                    cands = [f for f in free if f not in slots]
-                if cands:
-                    slots.append(int(cands[0]))
-                    self._leased[site[slots[-1]]] += 1
-            return slots
-
-        sec_slots = lease_slots(static["is_secretary_slot"], want_sec,
-                                SECRETARY)
-        obs_slots = lease_slots(static["is_observer_slot"], want_obs,
-                                OBSERVER)
-
-        role = st["role"].copy()
-        alive = st["alive"].copy()
-        for s in sec_slots:
-            role[s] = SECRETARY
-            alive[s] = True
-        for s in obs_slots:
-            role[s] = OBSERVER
-            alive[s] = True
-
-        # wire followers -> site secretary (round robin), observers -> a
-        # follower at their site
-        sec_of = np.full(role.shape, -1, np.int32)
-        obs_of = np.full(role.shape, -1, np.int32)
-        for s_id in range(n_sites):
-            secs = [i for i in range(len(role))
-                    if role[i] == SECRETARY and alive[i] and site[i] == s_id]
-            fols = [i for i in range(V)
-                    if role[i] in (FOLLOWER, LEADER) and alive[i]
-                    and site[i] == s_id]
-            if secs:
-                for j, f in enumerate(fols):
-                    sec_of[f] = secs[j % len(secs)]
-            obss = [i for i in range(len(role))
-                    if role[i] == OBSERVER and alive[i] and site[i] == s_id]
-            if fols:
-                for j, o in enumerate(obss):
-                    obs_of[o] = fols[j % len(fols)]
-        # cross-site fallback wiring for observers at secretary-less sites
-        all_fols = [i for i in range(V) if role[i] in (FOLLOWER, LEADER)
-                    and alive[i]]
-        for o in range(len(role)):
-            if role[o] == OBSERVER and alive[o] and obs_of[o] < 0 and \
-                    all_fols:
-                obs_of[o] = all_fols[o % len(all_fols)]
-
+        role, alive, sec_of, obs_of = self.controller.lease(
+            np.asarray(self.state["role"]), np.asarray(self.state["alive"]),
+            want_sec, want_obs)
         self.state = dict(self.state,
                           role=jnp.asarray(role),
                           alive=jnp.asarray(alive),
@@ -206,28 +342,7 @@ class BWRaftSim:
                           obs_of=jnp.asarray(obs_of))
 
     def _compact(self) -> None:
-        """Epoch-boundary log compaction (state machines keep the data)."""
-        st = self.state
-        L = st["log_term"].shape[1]
-        N = st["log_term"].shape[0]
-        z = jnp.zeros((N,), jnp.int32)
-        self.state = dict(
-            st,
-            log_term=jnp.zeros_like(st["log_term"]),
-            log_key=jnp.zeros_like(st["log_key"]),
-            log_val=jnp.zeros_like(st["log_val"]),
-            log_len=z, commit_len=z, applied_len=z, match_len=z,
-            app_arrive_t=jnp.full((N,), -1, jnp.int32),
-            ack_arrive_t=jnp.full((N,), -1, jnp.int32),
-            entry_submit_t=jnp.full((L,), -1, jnp.int32),
-            entry_commit_t=jnp.full((L,), -1, jnp.int32),
-            reads_arrived=jnp.zeros((), jnp.int32),
-            writes_arrived=jnp.zeros((), jnp.int32),
-            reads_served=jnp.zeros((), jnp.int32),
-            writes_committed=jnp.zeros((), jnp.int32),
-            read_lat_sum=jnp.zeros((), jnp.float32),
-            read_lat_max=jnp.zeros((), jnp.float32),
-        )
+        self.state = compact_state(self.state)
 
     # ------------------------------------------------------------------ #
     def run_epoch(self) -> EpochReport:
@@ -237,57 +352,15 @@ class BWRaftSim:
         st = jax.tree.map(np.asarray, self.state)
         ms = jax.tree.map(np.asarray, ms)
 
-        # write latency from the entry timeline
-        sub_t = st["entry_submit_t"]
-        com_t = st["entry_commit_t"]
-        done = (sub_t >= 0) & (com_t >= 0)
-        lat = (com_t[done] - sub_t[done]).astype(float)
-        reads_served = int(st["reads_served"])
-        rep = EpochReport(
-            epoch=self.epoch,
-            reads_arrived=int(st["reads_arrived"]),
-            writes_arrived=int(st["writes_arrived"]),
-            reads_served=reads_served,
-            writes_committed=int(done.sum()),
-            read_lat_mean=float(st["read_lat_sum"] / max(reads_served, 1)),
-            read_lat_max=float(st["read_lat_max"]),
-            write_lat_mean=float(lat.mean()) if lat.size else float("nan"),
-            write_lat_p95=float(np.percentile(lat, 95)) if lat.size
-            else float("nan"),
-            write_lat_p99=float(np.percentile(lat, 99)) if lat.size
-            else float("nan"),
-            cost=float(st["cost_accrued"]) - cost_before,
-            n_secretaries=int(ms["n_secretaries"][-1]),
-            n_observers=int(ms["n_observers"][-1]),
-            leader_changes=int((np.diff(ms["leader_term"]) > 0).sum()),
-            no_leader_ticks=int((ms["has_leader"] == 0).sum()),
-            killed=int(ms["killed"].sum()),
-        )
+        rep = build_report(self.epoch, st, ms, cost_before)
 
         # ---- control plane: peek (Algorithm 1) + peak (MCSA lease) ------
         if self.manage:
-            self._revoked += np.bincount(
-                self.static["site"][~np.asarray(st["alive"])],
-                minlength=self.cfg.num_sites) * 0  # placeholder census
-            self.predictor.update(
-                np.full(self.cfg.num_sites, rep.killed /
-                        max(self.cfg.num_sites, 1)),
-                np.maximum(self._leased, 1))
-            stats = mgr.PeekStats(
-                reads_prev=self.reads_prev,
-                reads_now=rep.reads_arrived,
-                writes_now=rep.writes_arrived,
-                followers_per_site=[s.followers for s in self.cfg.sites],
-                k_s=rep.n_secretaries, k_o=rep.n_observers,
-                budget=self.cfg.budget_per_period,
-                spot_price=float(np.mean(st["spot_price"])),
-                on_demand_price=float(
-                    np.mean([s.on_demand_price for s in self.cfg.sites])),
-            )
-            dec = mgr.algorithm1(self.cfg, stats)
+            dec = self.controller.decide(
+                rep, float(np.mean(st["spot_price"][:self.cfg.num_sites])))
             rep.decision = dec
             self._lease(max(dec.dk_s, 0), max(dec.dk_o, 0))
-        self.reads_prev = rep.reads_arrived
+        self.controller.end_epoch(rep)
 
         self._compact()
         self.epoch += 1

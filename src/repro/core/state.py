@@ -9,6 +9,17 @@ The log is windowed per epoch (entries reset at epoch boundaries after the
 KV state machine has absorbed them — Raft log compaction); entry global
 submit/commit ticks live in `entry_submit_t` / `entry_commit_t` for latency
 accounting.
+
+Padding (the batched fleet axis, DESIGN.md §7): `build_static` /
+`init_state` accept `pad_*` counts so clusters of different sizes can share
+one static shape and be stacked under `jax.vmap` (see `core/fleet.py`).
+Padded node slots are not voters and not secretary/observer slots, start
+DEAD, and are never leased — every step rule masks on `alive`, so they are
+inert.  Padded sites exist only in the price arrays (no node maps to them);
+padded log/key capacity is dead tail space.  Padding changes the *shapes*
+of random draws, so a padded run follows a different (equally distributed)
+sample path than an unpadded one — batched-vs-sequential equality holds
+between runs of identical padded shapes.
 """
 from __future__ import annotations
 
@@ -24,18 +35,26 @@ FOLLOWER, CANDIDATE, LEADER, SECRETARY, OBSERVER, DEAD = range(6)
 NONE = jnp.int32(-1)
 
 
-def build_static(cfg: ClusterConfig) -> Dict[str, np.ndarray]:
-    """Static per-node tables (site, voter mask, rtt matrix, capacities)."""
+def build_static(cfg: ClusterConfig, *, pad_nodes: int = 0,
+                 pad_sites: int = 0) -> Dict[str, np.ndarray]:
+    """Static per-node tables (site, voter mask, rtt matrix, capacities).
+
+    `pad_nodes` appends that many inert node slots (not voters, not
+    leasable, forever DEAD); `pad_sites` widens only the price arrays
+    downstream (`S` here) — padded slots still map to *real* sites so the
+    RTT matrix stays meaningful.
+    """
     V = cfg.num_voters
     MS, MO = cfg.max_secretaries, cfg.max_observers
-    N = V + MS + MO
+    R = V + MS + MO                     # real slots
+    N = R + pad_nodes
     site = np.zeros((N,), np.int32)
     i = 0
     for s_idx, s in enumerate(cfg.sites):
         for _ in range(s.followers):
             site[i] = s_idx
             i += 1
-    # spot slots round-robin over sites
+    # spot + padding slots round-robin over the real sites
     for j in range(V, N):
         site[j] = (j - V) % cfg.num_sites
     is_voter = np.zeros((N,), bool)
@@ -43,7 +62,7 @@ def build_static(cfg: ClusterConfig) -> Dict[str, np.ndarray]:
     is_secretary_slot = np.zeros((N,), bool)
     is_secretary_slot[V:V + MS] = True
     is_observer_slot = np.zeros((N,), bool)
-    is_observer_slot[V + MS:] = True
+    is_observer_slot[V + MS:R] = True
 
     rtt = np.zeros((N, N), np.int32)
     for a in range(N):
@@ -59,6 +78,7 @@ def build_static(cfg: ClusterConfig) -> Dict[str, np.ndarray]:
         "is_secretary_slot": is_secretary_slot,
         "is_observer_slot": is_observer_slot,
         "rtt": rtt, "N": N, "V": V,
+        "S": cfg.num_sites + pad_sites,
         "majority": V // 2 + 1,
         "work_capacity": 8,       # reads a node can serve per tick
         "msg_budget": 16,         # fan-out msg-units a node sends per tick
@@ -68,9 +88,15 @@ def build_static(cfg: ClusterConfig) -> Dict[str, np.ndarray]:
     }
 
 
-def init_state(cfg: ClusterConfig, static) -> Dict[str, jnp.ndarray]:
-    N, V, L, K = static["N"], static["V"], cfg.max_log, cfg.key_space
-    S = cfg.num_sites
+def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
+               pad_keys: int = 0) -> Dict[str, jnp.ndarray]:
+    """Initial cluster state.  `pad_log`/`pad_keys` widen the log window and
+    KV key space (dead tail capacity); the site axis follows static["S"]
+    (padded sites get the last real site's price parameters)."""
+    N, V = static["N"], static["V"]
+    L, K = cfg.max_log + pad_log, cfg.key_space + pad_keys
+    S = static.get("S", cfg.num_sites)
+    site_of = [min(s, cfg.num_sites - 1) for s in range(S)]
     z = lambda *sh: jnp.zeros(sh, jnp.int32)
     st = {
         "tick": jnp.zeros((), jnp.int32),
@@ -127,9 +153,10 @@ def init_state(cfg: ClusterConfig, static) -> Dict[str, jnp.ndarray]:
         "entry_commit_t": jnp.full((L,), -1, jnp.int32),
         # spot market
         "spot_price": jnp.asarray(
-            [cfg.sites[s].spot_price_mean for s in range(S)], jnp.float32),
+            [cfg.sites[site_of[s]].spot_price_mean for s in range(S)],
+            jnp.float32),
         "spot_bid": jnp.asarray(
-            [cfg.sites[s].spot_price_mean * 1.5 for s in range(S)],
+            [cfg.sites[site_of[s]].spot_price_mean * 1.5 for s in range(S)],
             jnp.float32),
         # workload stats accumulators (reset each period by the manager)
         "reads_arrived": jnp.zeros((), jnp.int32),

@@ -2,7 +2,7 @@
 
 Optimizer state mirrors the parameter tree (same logical axes, so the same
 sharding rules apply); the dtype of m/v is configurable (`opt_state_dtype`)
-— bf16 state halves optimizer HBM for the ≥90B archs (see DESIGN.md).
+— bf16 state halves optimizer HBM for the ≥90B archs (see DESIGN.md §3).
 """
 from __future__ import annotations
 

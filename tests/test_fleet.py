@@ -1,0 +1,137 @@
+"""The batched fleet contract (DESIGN.md §7): a vmapped B-cluster sweep is
+element-wise identical to sequential single-cluster runs at the same
+padded shapes and seeds, padding is inert, and one static shape costs one
+compile."""
+import numpy as np
+import pytest
+
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.fleet import FleetSim, MemberSpec
+from repro.core.runtime import BWRaftSim
+from repro.core.state import DEAD
+
+_INT_FIELDS = ("reads_arrived", "writes_arrived", "reads_served",
+               "writes_committed", "n_secretaries", "n_observers",
+               "leader_changes", "no_leader_ticks", "killed")
+_FLOAT_FIELDS = ("read_lat_mean", "read_lat_max", "write_lat_mean",
+                 "write_lat_p95", "write_lat_p99", "cost")
+
+
+def _small_cluster(name="small", followers=(2, 2, 1), max_log=1024):
+    sites = tuple(
+        SiteConfig(f"{name}-s{i}", followers=f, rtt_intra=1,
+                   rtt_inter=6 + 2 * i, on_demand_price=0.0416,
+                   spot_price_mean=0.0125)
+        for i, f in enumerate(followers))
+    return ClusterConfig(name=name, sites=sites, max_log=max_log,
+                         key_space=256, max_secretaries=4,
+                         max_observers=8, period_ticks=60)
+
+
+def _assert_reports_equal(a, b, ctx=""):
+    for f in _INT_FIELDS:
+        assert getattr(a, f) == getattr(b, f), \
+            f"{ctx}: {f}: fleet={getattr(a, f)} solo={getattr(b, f)}"
+    for f in _FLOAT_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        if np.isnan(x) and np.isnan(y):
+            continue
+        assert np.isclose(x, y, rtol=1e-4, equal_nan=True), \
+            f"{ctx}: {f}: fleet={x} solo={y}"
+
+
+def test_batched_equals_sequential():
+    """B=3 vmapped sweep == three sequential BWRaftSim runs, same seeds."""
+    cfg = _small_cluster()
+    knobs = [dict(write_rate=6.0, read_rate=24.0, phi=0.0, seed=0),
+             dict(write_rate=12.0, read_rate=12.0, phi=0.05, seed=1),
+             dict(write_rate=3.0, read_rate=48.0, phi=0.02, seed=2)]
+    fleet = FleetSim([MemberSpec(cfg=cfg, **k) for k in knobs])
+    fleet_reports = fleet.run(3)
+    for i, k in enumerate(knobs):
+        solo_reports = BWRaftSim(cfg, **k).run(3)
+        for e, (a, b) in enumerate(zip(fleet_reports[i], solo_reports)):
+            _assert_reports_equal(a, b, ctx=f"member {i} epoch {e}")
+            # control plane decided identically too
+            if a.decision is not None or b.decision is not None:
+                assert (a.decision.dk_s, a.decision.dk_o) == \
+                    (b.decision.dk_s, b.decision.dk_o)
+
+
+def test_heterogeneous_fleet_matches_padded_solo():
+    """A small cluster batched next to a bigger one (so it gets padded on
+    every axis) reproduces a solo run at the same padded shapes."""
+    small = _small_cluster("padded-small", followers=(2, 1), max_log=512)
+    big = _small_cluster("big", followers=(3, 3, 2, 2), max_log=1024)
+    fleet = FleetSim([
+        MemberSpec(cfg=small, write_rate=6.0, read_rate=24.0, seed=4),
+        MemberSpec(cfg=big, write_rate=12.0, read_rate=24.0, seed=5,
+                   mode="raft"),
+    ])
+    pads = fleet.pads_for(0)
+    assert pads["pad_nodes"] > 0 and pads["pad_sites"] > 0 \
+        and pads["pad_log"] > 0
+    fleet_reports = fleet.run(2)
+    solo = BWRaftSim(small, write_rate=6.0, read_rate=24.0, seed=4,
+                     **pads).run(2)
+    for e, (a, b) in enumerate(zip(fleet_reports[0], solo)):
+        _assert_reports_equal(a, b, ctx=f"epoch {e}")
+
+
+def test_padding_and_masking_inert():
+    """Padded slots never wake up, padded sites never host instances, and
+    the padded cluster still does its job."""
+    small = _small_cluster("inert-small", followers=(2, 1), max_log=512)
+    big = _small_cluster("inert-big", followers=(3, 3, 2, 2))
+    fleet = FleetSim([
+        MemberSpec(cfg=small, write_rate=6.0, read_rate=24.0, seed=7),
+        MemberSpec(cfg=big, write_rate=6.0, read_rate=24.0, seed=8),
+    ])
+    reports = fleet.run(2)
+    st = {k: np.asarray(v) for k, v in fleet.state.items()}
+    n_real = small.max_nodes
+    assert (st["role"][0, n_real:] == DEAD).all(), \
+        "padded slots must stay DEAD"
+    assert not st["alive"][0, n_real:].any(), \
+        "padded slots must never come alive"
+    site = fleet.members[0].static["site"]
+    assert (site < small.num_sites).all(), \
+        "no node may map to a padded site"
+    last = reports[0][-1]
+    assert last.no_leader_ticks == 0 and last.writes_committed > 0, \
+        "padded cluster must still reach steady state"
+
+    # padding shifts the RNG sample path but not the regime: an unpadded
+    # solo run of the same cluster lands in the same goodput band
+    unpadded = BWRaftSim(small, write_rate=6.0, read_rate=24.0,
+                         seed=7).run(2)[-1]
+    assert unpadded.writes_committed > 0
+    ratio = last.goodput / max(unpadded.goodput, 1)
+    assert 0.5 < ratio < 2.0, (last.goodput, unpadded.goodput)
+
+
+def test_one_compile_per_static_shape():
+    """Different sweep grids at one static shape share one compilation."""
+    cfg = _small_cluster("compile", followers=(1, 1), max_log=256)
+    a = FleetSim.from_sweep(cfg, {"phi": [0.0, 0.1]}, write_rate=4.0,
+                            read_rate=8.0, seed=0)
+    a.run(2)
+    assert a.compile_count == 1
+    b = FleetSim.from_sweep(cfg, {"write_rate": [2.0, 16.0]},
+                            read_rate=8.0, seed=3)
+    b.run(1)
+    # same shapes -> same cached program; new knobs are just jit arguments
+    assert b._epoch_fn is a._epoch_fn
+    assert b.compile_count == 1
+
+
+def test_sweep_cross_product_order():
+    cfg = _small_cluster("order", followers=(1, 1), max_log=256)
+    fleet = FleetSim.from_sweep(cfg, {"phi": [0.0, 0.1],
+                                      "write_rate": [2.0, 4.0]},
+                                read_rate=8.0)
+    assert fleet.shapes.B == 4
+    got = [(m.spec.phi, m.spec.write_rate) for m in fleet.members]
+    assert got == [(0.0, 2.0), (0.0, 4.0), (0.1, 2.0), (0.1, 4.0)]
+    with pytest.raises(AssertionError):
+        FleetSim.from_sweep(cfg, {"not_a_knob": [1]})

@@ -1,6 +1,10 @@
 """Safety properties 3.1-3.4 under failures (hypothesis over seeds/phi)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property-based tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import invariants as inv

@@ -1,5 +1,10 @@
 """Wing&Gong checker unit tests + checking a simulated write history."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property-based tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.linearizability import Op, is_linearizable

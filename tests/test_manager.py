@@ -1,6 +1,11 @@
 """Algorithm 1 ("peek"), eq. 1/2, MCSA ("peak") properties."""
 import math
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property-based tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.bwraft_kv import CONFIG as CC
