@@ -3,10 +3,15 @@
 By default the consensus benchmarks drive their grids through
 `core/fleet.FleetSim`: every (system, load) point in a figure becomes one
 member of a single batched program, so a whole grid costs one jit compile
-and one vmapped scan per epoch (DESIGN.md §7).  `benchmarks.run
---sequential` flips `USE_FLEET` off to fall back to one-`BWRaftSim`-per-
-point (useful for A/B-ing the two paths — same seeds, same results at
-equal shapes).
+and one vmapped scan per epoch (DESIGN.md §7).  Epochs run on the
+device-resident digest pipeline (DESIGN.md §7.1) — only a few-KB digest
+per member crosses to host per epoch, and unmanaged fixed-role grids
+(fig12/fig13) collapse a whole run into one dispatch via the multi-epoch
+scan.  `benchmarks.run --sequential` flips `USE_FLEET` off to fall back
+to one-`BWRaftSim`-per-point (useful for A/B-ing the two paths — same
+seeds, same results at equal shapes).  `benchmarks/perf_fleet.py`
+measures the digest pipeline against the host-marshalling reference and
+emits `BENCH_fleet.json`.
 """
 from __future__ import annotations
 

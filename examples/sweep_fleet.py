@@ -9,6 +9,12 @@ clusters advance together inside a single jitted, vmapped tick-scan: the
 sweep grid enters as batched jit *arguments*, so the whole figure-shaped
 experiment costs exactly ONE compilation of the epoch function
 (DESIGN.md §7).  The script asserts that via `FleetSim.compile_count`.
+
+Epochs run on the device-resident digest pipeline (DESIGN.md §7.1): the
+state pytree never leaves the device — per epoch only a few-KB digest per
+cluster is fetched (printed below; compare with the device state size).
+`benchmarks/perf_fleet.py` quantifies the speedup vs the PR-1
+host-marshalling path and records it in BENCH_fleet.json.
 """
 import itertools
 import time
@@ -16,6 +22,7 @@ import time
 from repro.configs.bwraft_kv import CONFIG
 from repro.core.fleet import FleetSim
 from repro.core.runtime import BWRaftSim
+from repro.core.state import pytree_nbytes
 
 PHIS = [0.0, 0.01, 0.02, 0.05, 0.08, 0.1, 0.15, 0.2]
 WRITE_RATES = [4.0, 8.0, 16.0, 32.0]
@@ -40,6 +47,9 @@ def main():
     print(f"ran {fleet.shapes.B} clusters x {EPOCHS} epochs "
           f"({fleet.shapes.B * EPOCHS * fleet.shapes.T} cluster-ticks) in "
           f"{batched_s:.1f}s with {fleet.compile_count} compile")
+    print(f"device->host per epoch: {fleet.d2h_bytes // EPOCHS} B of "
+          f"digests vs {pytree_nbytes(fleet.state)} B of device-resident "
+          f"state (never fetched; DESIGN.md §7.1)")
 
     print(f"\n{'phi':>5} | " + " | ".join(
         f"w={int(w):>2} goodput" for w in WRITE_RATES))

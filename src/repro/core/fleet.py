@@ -19,6 +19,18 @@ topologies (at equal padded shapes) never recompiles.  Check
 `FleetSim.compile_count` (the example `examples/sweep_fleet.py` asserts
 it is exactly 1 for a 32-cluster sweep).
 
+Epoch pipeline (DESIGN.md §7.1): the default `pipeline="device"` keeps the
+whole epoch loop device-resident — per-tick metrics reduce inside the
+scan, log compaction is fused into the jitted epoch, and the state pytree
+is donated back to XLA, so the only per-epoch device→host traffic is a
+few-KB digest per member (`runtime.report_from_digest`).  When no member
+manages resources (plain-Raft baselines, fixed-role `prelease` sweeps) a
+whole `run(E)` collapses into ONE dispatch: a scan over E epochs with
+in-graph compaction between them.  `pipeline="host"` retains the PR-1
+host-marshalling path (full state + T-stacked metrics pulled to host each
+epoch) for A/B benchmarking (`benchmarks/perf_fleet.py`) and the
+digest-equivalence tests.
+
 Padding/masking rules (DESIGN.md §7): smaller clusters are padded with
 inert node slots (non-voter, non-leasable, forever DEAD — every step rule
 masks on `alive`), price-only padded sites, and dead log/key tail space.
@@ -27,15 +39,16 @@ the same padded shapes and seeds (`tests/test_fleet.py` proves it): the
 per-member RNG streams are split identically, and member dynamics never
 couple across the batch axis.
 
-The host-side control plane (Algorithm 1 "peek", MCSA "peak" leasing, log
-compaction) still runs per member between epochs, reusing
-`runtime.ClusterController` — only the tick-scan hot path is batched.
+The host-side control plane (Algorithm 1 "peek", MCSA "peak" leasing)
+still runs per member between epochs, reusing `runtime.ClusterController`
+— it reads the (N,) role/alive vectors from the digest and writes back
+only the four (B, N) role/wiring arrays for the members that manage.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -44,9 +57,10 @@ import jax.numpy as jnp
 from repro.core import state as state_mod
 from repro.core import step as step_mod
 from repro.core.cluster_config import ClusterConfig
-from repro.core.runtime import (ClusterController, EpochReport,
-                                build_report, compact_state,
-                                make_cfg_arrays)
+from repro.core.runtime import (ClusterController, CountingJit, EpochReport,
+                                build_report, compact_state, device_epoch,
+                                make_cfg_arrays, report_from_digest)
+from repro.core.state import pytree_nbytes
 
 # static scalars every member must agree on (baked into the compiled
 # program; per-node capacities from state.build_static)
@@ -72,6 +86,10 @@ class MemberSpec:
     manage_resources: bool = True
     spot_price_vol: Optional[float] = None      # None -> cfg.sites[0]
     budget_per_period: Optional[float] = None   # None -> cfg value
+    # fixed-role mode: wire (n_secretaries, n_observers) once at t=0 and
+    # never manage again — eligible for the single-dispatch multi-epoch
+    # scan when combined with manage_resources=False (DESIGN.md §7.1)
+    prelease: Optional[Tuple[int, int]] = None
 
     @property
     def manage(self) -> bool:
@@ -88,33 +106,77 @@ class FleetShapes:
     T: int   # period_ticks (must be equal across members)
 
 
+# (kind, shapes, shared scalars[, E]) -> CountingJit
 _FLEET_EPOCH_CACHE: Dict = {}
 
 
 def total_compile_count() -> int:
-    """Compiled batched-epoch programs across every fleet shape this
-    process has run — the one place that touches jit cache internals."""
-    return sum(int(fn._cache_size()) for fn in _FLEET_EPOCH_CACHE.values())
+    """Compiled batched-epoch programs across every fleet shape and
+    pipeline this process has run (robust to jax versions without the
+    private jit cache introspection — see `runtime.CountingJit`)."""
+    return sum(fn.cache_size() for fn in _FLEET_EPOCH_CACHE.values())
+
+
+def _vmapped_epoch(shapes: FleetShapes, shared: Dict):
+    """One device epoch vmapped over the batch axis — the single body
+    shared by the per-epoch and multi-epoch pipelines, so their dynamics
+    can never diverge."""
+    def epoch(state, rngs, bstatic, cfg_c):
+        def one_epoch(st, rng, bstat, cc):
+            static = {**shared, **bstat}
+            return device_epoch(st, static, cc, rng, shapes.T)
+        return jax.vmap(one_epoch)(state, rngs, bstatic, cfg_c)
+    return epoch
 
 
 def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict):
-    """The one-compile-per-static-shape entry point: a jitted, vmapped
-    `period_ticks`-scan over the whole fleet.  `shared` (python ints) is
-    closed over; batched statics and cfg_c are runtime arguments."""
-    key = (shapes, tuple(sorted(shared.items())))
+    """Digest pipeline: a jitted, vmapped, fully device-resident epoch —
+    in-scan metric reduction, in-graph compaction, donated state buffers.
+    Returns `(compacted_state, digest)` with digest leaves batched over B.
+    One compile per static shape; `shared` (python ints) is closed over,
+    batched statics and cfg_c are runtime arguments."""
+    key = ("device", shapes, tuple(sorted(shared.items())))
     if key not in _FLEET_EPOCH_CACHE:
-        @jax.jit
+        _FLEET_EPOCH_CACHE[key] = CountingJit(_vmapped_epoch(shapes, shared),
+                                              donate_argnums=(0,))
+    return _FLEET_EPOCH_CACHE[key]
+
+
+def _fleet_multi_epoch_fn(shapes: FleetShapes, shared: Dict, epochs: int):
+    """Single-dispatch fast path: scan-of-scans over `epochs` device
+    epochs (compaction in-graph between them) for fleets with no managing
+    member.  Digest leaves come back stacked (E, B, ...)."""
+    key = ("multi", shapes, tuple(sorted(shared.items())), epochs)
+    if key not in _FLEET_EPOCH_CACHE:
+        epoch = _vmapped_epoch(shapes, shared)
+
+        def multi_fn(state, rngs, bstatic, cfg_c):
+            def epoch_body(st, rngs_b):
+                return epoch(st, rngs_b, bstatic, cfg_c)
+            return jax.lax.scan(epoch_body, state, rngs)
+        _FLEET_EPOCH_CACHE[key] = CountingJit(multi_fn, donate_argnums=(0,))
+    return _FLEET_EPOCH_CACHE[key]
+
+
+def _fleet_epoch_fn_host(shapes: FleetShapes, shared: Dict):
+    """The PR-1 reference path, op for op: the original tick formulations
+    (`step.tick(reference=True)`), per-tick metrics stacked over T,
+    compaction as a separate dispatch, no donation.  Kept for A/B
+    benchmarking and the digest-equivalence tests (DESIGN.md §7.1)."""
+    key = ("host", shapes, tuple(sorted(shared.items())))
+    if key not in _FLEET_EPOCH_CACHE:
         def epoch_fn(state, rngs, bstatic, cfg_c):
             def one_epoch(st, rng, bstat, cc):
                 static = {**shared, **bstat}
 
                 def body(carry, r):
-                    s, m = step_mod.tick(carry, static, cc, r)
+                    s, m = step_mod.tick(carry, static, cc, r,
+                                         reference=True)
                     return s, m
                 ticks = jax.random.split(rng, shapes.T)
                 return jax.lax.scan(body, st, ticks)
             return jax.vmap(one_epoch)(state, rngs, bstatic, cfg_c)
-        _FLEET_EPOCH_CACHE[key] = epoch_fn
+        _FLEET_EPOCH_CACHE[key] = CountingJit(epoch_fn)
     return _FLEET_EPOCH_CACHE[key]
 
 
@@ -150,6 +212,16 @@ class _Member:
         self.rng = jax.random.PRNGKey(spec.seed)
         self.controller = ClusterController(cfg, self.static,
                                             seed=spec.seed)
+        if spec.prelease is not None:
+            role, alive, sec_of, obs_of = self.controller.lease(
+                np.asarray(self.state0["role"]),
+                np.asarray(self.state0["alive"]),
+                max(spec.prelease[0], 0), max(spec.prelease[1], 0))
+            self.state0 = dict(self.state0,
+                               role=jnp.asarray(role),
+                               alive=jnp.asarray(alive),
+                               sec_of=jnp.asarray(sec_of),
+                               obs_of=jnp.asarray(obs_of))
         self.manage = spec.manage
         self.epoch = 0
         self.reports: List[EpochReport] = []
@@ -160,15 +232,21 @@ class FleetSim:
 
     Per-member dynamics are identical to a sequential `BWRaftSim` with the
     same padded shapes and seed; the control plane runs per member on the
-    host between epochs.
+    host between epochs.  `pipeline` selects the epoch implementation:
+    `"device"` (default) is the digest path — donated state, in-graph
+    compaction, O(digest) device→host traffic — `"host"` the PR-1
+    full-marshalling reference (DESIGN.md §7.1).
     """
 
-    def __init__(self, specs: Sequence[MemberSpec]):
+    def __init__(self, specs: Sequence[MemberSpec], *,
+                 pipeline: str = "device"):
+        assert pipeline in ("device", "host"), pipeline
         specs = list(specs)
         assert specs, "fleet needs at least one member"
         periods = {s.cfg.period_ticks for s in specs}
         assert len(periods) == 1, \
             f"all members must share period_ticks, got {periods}"
+        self.pipeline = pipeline
         self.shapes = FleetShapes(
             B=len(specs),
             N=max(s.cfg.max_nodes for s in specs),
@@ -196,12 +274,18 @@ class FleetSim:
                                    *[m.state0 for m in self.members])
         self._cfg_c = jax.tree.map(lambda *xs: jnp.stack(xs),
                                    *[m.cfg_c for m in self.members])
-        self._epoch_fn = _fleet_epoch_fn(self.shapes, self._shared)
+        self._epoch_fn = (_fleet_epoch_fn(self.shapes, self._shared)
+                          if pipeline == "device" else
+                          _fleet_epoch_fn_host(self.shapes, self._shared))
+        # cumulative device->host bytes fetched for report building
+        # (digest leaves on the device path, full state + T-stacked
+        # metrics on the host path) — perf_fleet.py reads the deltas
+        self.d2h_bytes = 0
 
     # ------------------------------------------------------------------ #
     @classmethod
     def from_sweep(cls, configs, axes: Optional[Dict] = None,
-                   **defaults) -> "FleetSim":
+                   pipeline: str = "device", **defaults) -> "FleetSim":
         """Cross-product sweep constructor.
 
         `configs`: one ClusterConfig or a sequence of them.  `axes`: dict
@@ -222,7 +306,7 @@ class FleetSim:
             for combo in itertools.product(*axes.values()):
                 specs.append(MemberSpec(cfg=cfg, **defaults,
                                         **dict(zip(names, combo))))
-        return cls(specs)
+        return cls(specs, pipeline=pipeline)
 
     @classmethod
     def sweep(cls, configs, axes: Optional[Dict] = None, *,
@@ -235,9 +319,11 @@ class FleetSim:
     # ------------------------------------------------------------------ #
     @property
     def compile_count(self) -> int:
-        """How many programs the underlying epoch function has compiled
-        (1 after any number of epochs/sweeps at this static shape)."""
-        return int(self._epoch_fn._cache_size())
+        """How many programs the underlying per-epoch function has
+        compiled (1 after any number of epochs/sweeps at this static
+        shape); the multi-epoch fast path caches separately — see
+        `total_compile_count`."""
+        return self._epoch_fn.cache_size()
 
     def pads_for(self, i: int) -> Dict[str, int]:
         """Padding a solo BWRaftSim needs to reproduce member i exactly."""
@@ -248,19 +334,69 @@ class FleetSim:
         """Batched state pytree (leading axis = member)."""
         return self._state
 
-    # ------------------------------------------------------------------ #
-    def run_epoch(self) -> List[EpochReport]:
+    def _split_epoch_rngs(self) -> jnp.ndarray:
         subs = []
         for m in self.members:
             m.rng, sub = jax.random.split(m.rng)
             subs.append(sub)
-        rngs = jnp.stack(subs)
+        return jnp.stack(subs)
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self) -> List[EpochReport]:
+        if self.pipeline == "host":
+            return self._run_epoch_host()
+        rngs = self._split_epoch_rngs()
+        self._state, digest = self._epoch_fn(self._state, rngs,
+                                             self._bstatic, self._cfg_c)
+        dg = jax.tree.map(np.asarray, digest)
+        self.d2h_bytes += pytree_nbytes(dg)
+
+        managed_rows: List[int] = []
+        managed_vals: List[Tuple] = []
+        out = []
+        for i, m in enumerate(self.members):
+            dgi = {k: v[i] for k, v in dg.items()}
+            rep = report_from_digest(m.epoch, dgi)
+            if m.manage:
+                dec = m.controller.decide(
+                    rep,
+                    float(np.mean(dgi["spot_price"][:m.cfg.num_sites])))
+                rep.decision = dec
+                managed_rows.append(i)
+                managed_vals.append(m.controller.lease(
+                    dgi["role"], dgi["alive"],
+                    max(dec.dk_s, 0), max(dec.dk_o, 0)))
+            m.controller.end_epoch(rep)
+            m.epoch += 1
+            m.reports.append(rep)
+            out.append(rep)
+
+        if managed_rows:
+            # write back ONLY the managed members' role/wiring rows — the
+            # rest of the state never leaves (or re-enters) the device
+            idx = jnp.asarray(managed_rows, jnp.int32)
+            upd = {name: jnp.asarray(np.stack([v[j] for v in managed_vals]))
+                   for j, name in enumerate(("role", "alive", "sec_of",
+                                             "obs_of"))}
+            self._state = dict(
+                self._state,
+                **{name: self._state[name].at[idx].set(arr)
+                   for name, arr in upd.items()})
+        return out
+
+    def _run_epoch_host(self) -> List[EpochReport]:
+        """PR-1 reference epoch: full state + per-tick metric stacks are
+        materialized to host, the report is built from raw entry
+        timelines, and compaction is a separate post-hoc dispatch."""
+        rngs = self._split_epoch_rngs()
         cost_before = np.asarray(self._state["cost_accrued"])
 
         self._state, ms = self._epoch_fn(self._state, rngs, self._bstatic,
                                          self._cfg_c)
         st_np = jax.tree.map(np.asarray, self._state)
         ms_np = jax.tree.map(np.asarray, ms)
+        self.d2h_bytes += (pytree_nbytes(st_np) + pytree_nbytes(ms_np) +
+                           cost_before.nbytes)
 
         role = st_np["role"].copy()
         alive = st_np["alive"].copy()
@@ -290,13 +426,75 @@ class FleetSim:
             sec_of=jnp.asarray(sec_of), obs_of=jnp.asarray(obs_of)))
         return out
 
-    def run(self, epochs: int) -> List[List[EpochReport]]:
+    def lease_fixed(self, want_sec: int, want_obs: int) -> None:
+        """One-shot fixed-role wiring for every member: lease/wire
+        `want_sec` secretaries and `want_obs` observers on the host and
+        write the four (B, N) role/wiring arrays back.  The fixed-role
+        recipe for sweep grids (fig12/fig13): run one epoch so leadership
+        stabilizes (the FIRST election stops preleased secretaries —
+        paper Step 1), wire the complement once, then run the rest of the
+        sweep as a single dispatch.  O(B·N) transfer, once per run."""
+        role = np.asarray(self._state["role"]).copy()
+        alive = np.asarray(self._state["alive"]).copy()
+        sec_of = np.asarray(self._state["sec_of"]).copy()
+        obs_of = np.asarray(self._state["obs_of"]).copy()
+        for i, m in enumerate(self.members):
+            role[i], alive[i], sec_of[i], obs_of[i] = m.controller.lease(
+                role[i], alive[i], max(want_sec, 0), max(want_obs, 0))
+        self._state = dict(self._state,
+                           role=jnp.asarray(role), alive=jnp.asarray(alive),
+                           sec_of=jnp.asarray(sec_of),
+                           obs_of=jnp.asarray(obs_of))
+
+    # ------------------------------------------------------------------ #
+    @property
+    def single_dispatch_eligible(self) -> bool:
+        """True when `run(E)` can collapse into one device dispatch: the
+        digest pipeline with no member running the per-epoch control
+        plane (plain-Raft baselines, fixed-role `prelease` sweeps)."""
+        return (self.pipeline == "device" and
+                not any(m.manage for m in self.members))
+
+    def _run_scan(self, epochs: int) -> None:
+        """The multi-epoch fast path: ONE dispatch scans over `epochs`
+        device epochs (in-graph compaction between them) and returns the
+        digests stacked (E, B, ...)."""
+        fn = _fleet_multi_epoch_fn(self.shapes, self._shared, epochs)
+        # identical split order to the epoch-by-epoch path, so the two are
+        # trajectory-equal at the same seeds (tests/test_fleet.py)
+        rngs = jnp.stack([self._split_epoch_rngs() for _ in range(epochs)])
+        self._state, digests = fn(self._state, rngs, self._bstatic,
+                                  self._cfg_c)
+        dg = jax.tree.map(np.asarray, digests)
+        self.d2h_bytes += pytree_nbytes(dg)
+        for e in range(epochs):
+            for i, m in enumerate(self.members):
+                rep = report_from_digest(
+                    m.epoch, {k: v[e, i] for k, v in dg.items()})
+                m.controller.end_epoch(rep)
+                m.epoch += 1
+                m.reports.append(rep)
+
+    def run(self, epochs: int, *,
+            single_dispatch: Optional[bool] = None
+            ) -> List[List[EpochReport]]:
         """Run `epochs` epochs; returns the reports of *this call* indexed
         [member][epoch] (matching BWRaftSim.run; the full history stays on
-        `self.reports`)."""
+        `self.reports`).  `single_dispatch=None` auto-selects the
+        multi-epoch scan whenever it is eligible; pass False to force the
+        epoch-by-epoch loop (A/B testing), True to assert eligibility."""
+        if single_dispatch is None:
+            single_dispatch = epochs > 1 and self.single_dispatch_eligible
+        if single_dispatch:
+            assert self.single_dispatch_eligible, \
+                "single-dispatch run needs pipeline='device' and no " \
+                "managing member"
         start = len(self.members[0].reports)
-        for _ in range(epochs):
-            self.run_epoch()
+        if single_dispatch:
+            self._run_scan(epochs)
+        else:
+            for _ in range(epochs):
+                self.run_epoch()
         return [list(m.reports[start:]) for m in self.members]
 
     @property

@@ -14,6 +14,16 @@ the compiled program.  For sweeps over many clusters in a single compiled
 program, use `core/fleet.py`, which vmaps the same tick over a leading
 batch axis; the host-side control plane below (`ClusterController`,
 `lease_and_wire`, `build_report`, `compact_state`) is shared by both.
+
+Epoch digest contract (DESIGN.md §7.1): the jitted epoch reduces its
+per-tick metrics *inside* the scan and returns `(compacted_state, digest)`
+where the digest is a few-KB pytree — counters, a write-latency histogram,
+the final (N,) role/alive vectors and (S,) spot prices — independent of
+the log window L and key space K.  Only the digest crosses the device→host
+boundary per epoch (`report_from_digest`); the state pytree stays on
+device, is compacted in-graph, and its input buffers are donated back to
+XLA (`donate_argnums`), so epochs neither copy state in device memory nor
+materialize it to host.
 """
 from __future__ import annotations
 
@@ -30,6 +40,35 @@ from repro.core import step as step_mod
 from repro.core import state as state_mod
 from repro.core.cluster_config import ClusterConfig
 from repro.core.state import (DEAD, FOLLOWER, LEADER, OBSERVER, SECRETARY)
+
+
+class CountingJit:
+    """`jax.jit` wrapper whose compile count survives jax upgrades.
+
+    Prefers the private `Wrapped._cache_size()` when the installed jax
+    still has it; otherwise falls back to counting distinct argument
+    signatures (treedef + leaf shapes/dtypes — the jit cache key modulo
+    weak types) observed at call time on this wrapper.  Used by every
+    cached epoch function so `FleetSim.compile_count` /
+    `fleet.total_compile_count` keep working across versions.
+    """
+
+    def __init__(self, fun, **jit_kwargs):
+        self.fn = jax.jit(fun, **jit_kwargs)
+        self._sigs = set()
+
+    def __call__(self, *args):
+        leaves, treedef = jax.tree.flatten(args)
+        self._sigs.add((treedef,
+                        tuple((jnp.shape(x), jnp.result_type(x))
+                              for x in leaves)))
+        return self.fn(*args)
+
+    def cache_size(self) -> int:
+        try:
+            return int(self.fn._cache_size())
+        except Exception:
+            return len(self._sigs)
 
 
 def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
@@ -88,7 +127,13 @@ class EpochReport:
 def build_report(epoch: int, st: Dict, ms: Dict,
                  cost_before: float) -> EpochReport:
     """Distill one cluster's post-epoch state + per-tick metrics (numpy,
-    leaves shaped (T,)) into an EpochReport."""
+    leaves shaped (T,)) into an EpochReport.
+
+    This is the host-marshalling reference path: it needs the FULL state
+    pytree (O(N·(L+K)) device→host bytes per cluster).  The hot path is
+    `report_from_digest`, which consumes only the few-KB on-device digest
+    (DESIGN.md §7.1); this function is kept for the `pipeline="host"`
+    A/B fallback and the digest-equivalence tests."""
     sub_t = np.asarray(st["entry_submit_t"])
     com_t = np.asarray(st["entry_commit_t"])
     done = (sub_t >= 0) & (com_t >= 0)
@@ -113,6 +158,134 @@ def build_report(epoch: int, st: Dict, ms: Dict,
         leader_changes=int((np.diff(ms["leader_term"]) > 0).sum()),
         no_leader_ticks=int((ms["has_leader"] == 0).sum()),
         killed=int(ms["killed"].sum()),
+    )
+
+
+def _digest_acc_init() -> Dict:
+    """Zeroed in-scan accumulators for the per-tick metric reductions."""
+    return {
+        "killed": jnp.int32(0),
+        "no_leader_ticks": jnp.int32(0),
+        "leader_changes": jnp.int32(0),
+        "prev_leader_term": jnp.int32(0),
+        "seen_tick": jnp.asarray(False),
+    }
+
+
+def _digest_acc_update(acc: Dict, m: Dict) -> Dict:
+    """Fold one tick's metrics into the accumulators (replaces the
+    T-stacked metric arrays of the host path: `leader_changes` is the
+    in-scan equivalent of `(np.diff(leader_term) > 0).sum()`)."""
+    changed = acc["seen_tick"] & (m["leader_term"] > acc["prev_leader_term"])
+    return {
+        "killed": acc["killed"] + m["killed"].astype(jnp.int32),
+        "no_leader_ticks": acc["no_leader_ticks"] +
+        (m["has_leader"] == 0).astype(jnp.int32),
+        "leader_changes": acc["leader_changes"] +
+        changed.astype(jnp.int32),
+        "prev_leader_term": m["leader_term"],
+        "seen_tick": jnp.asarray(True),     # flips once, then stays
+    }
+
+
+def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int) -> Dict:
+    """Build the epoch digest from the final (pre-compaction) state.
+
+    The write-latency distribution becomes an exact per-tick histogram:
+    latencies are integer ticks in [0, T], so `hist[b]` = number of
+    committed entries with latency b fully determines the sorted latency
+    sample — `report_from_digest` recovers mean/p95/p99 exactly.
+    """
+    sub, com = state["entry_submit_t"], state["entry_commit_t"]
+    done = (sub >= 0) & (com >= 0)
+    lat = jnp.clip(com - sub, 0, T)
+    hist = jnp.zeros((T + 1,), jnp.int32).at[
+        jnp.where(done, lat, T + 1)].add(1, mode="drop")
+    alive = state["alive"]
+    return {
+        "reads_arrived": state["reads_arrived"],
+        "writes_arrived": state["writes_arrived"],
+        "reads_served": state["reads_served"],
+        "read_lat_sum": state["read_lat_sum"],
+        "read_lat_max": state["read_lat_max"],
+        "write_lat_hist": hist,
+        "cost_delta": state["cost_accrued"] - cost_before,
+        "n_secretaries": jnp.sum((state["role"] == SECRETARY) &
+                                 alive).astype(jnp.int32),
+        "n_observers": jnp.sum((state["role"] == OBSERVER) &
+                               alive).astype(jnp.int32),
+        "killed": acc["killed"],
+        "no_leader_ticks": acc["no_leader_ticks"],
+        "leader_changes": acc["leader_changes"],
+        # control-plane inputs: O(N) role/alive for lease_and_wire, O(S)
+        # prices for Algorithm 1 — the only per-node data leaving device
+        "role": state["role"],
+        "alive": alive,
+        "spot_price": state["spot_price"],
+    }
+
+
+def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int
+                 ) -> Tuple[Dict, Dict]:
+    """One fully device-resident epoch: T-tick scan with in-scan metric
+    reduction, digest extraction, then in-graph log compaction.  Returns
+    `(compacted_state, digest)`; meant to be jitted with the state buffers
+    donated (DESIGN.md §7.1)."""
+    cost_before = state["cost_accrued"]
+
+    def body(carry, r):
+        st, acc = carry
+        st, m = step_mod.tick(st, static, cfg_c, r)
+        return (st, _digest_acc_update(acc, m)), None
+
+    rngs = jax.random.split(rng, T)
+    (state, acc), _ = jax.lax.scan(body, (state, _digest_acc_init()), rngs)
+    digest = _finalize_digest(state, acc, cost_before, T)
+    return compact_state(state), digest
+
+
+def hist_percentile(counts: np.ndarray, q: float) -> float:
+    """Exact `np.percentile(sample, q)` (linear interpolation) for an
+    integer-valued sample given as a unit-width histogram: `counts[v]` =
+    multiplicity of value v.  NaN on an empty histogram."""
+    counts = np.asarray(counts)
+    n = int(counts.sum())
+    if n == 0:
+        return float("nan")
+    cum = np.cumsum(counts)
+    rank = (n - 1) * q / 100.0
+    lo, hi = int(np.floor(rank)), int(np.ceil(rank))
+    vlo = int(np.searchsorted(cum, lo + 1))
+    vhi = vlo if hi == lo else int(np.searchsorted(cum, hi + 1))
+    return float(vlo + (rank - lo) * (vhi - vlo))
+
+
+def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
+    """Distill one cluster's epoch digest (numpy leaves, O(T + N + S)
+    bytes) into an EpochReport — the digest-path twin of `build_report`.
+    Counters are exact; write-latency stats are recovered exactly from the
+    unit-bin histogram (integer-tick latencies, see `_finalize_digest`)."""
+    hist = np.asarray(dg["write_lat_hist"])
+    n_done = int(hist.sum())
+    reads_served = int(dg["reads_served"])
+    lat_sum = float(hist @ np.arange(hist.shape[0], dtype=np.int64))
+    return EpochReport(
+        epoch=epoch,
+        reads_arrived=int(dg["reads_arrived"]),
+        writes_arrived=int(dg["writes_arrived"]),
+        reads_served=reads_served,
+        writes_committed=n_done,
+        read_lat_mean=float(dg["read_lat_sum"] / max(reads_served, 1)),
+        read_lat_max=float(dg["read_lat_max"]),
+        write_lat_mean=lat_sum / n_done if n_done else float("nan"),
+        write_lat_p95=hist_percentile(hist, 95),
+        write_lat_p99=hist_percentile(hist, 99),
+        cost=float(dg["cost_delta"]),
+        n_secretaries=int(dg["n_secretaries"]),
+        n_observers=int(dg["n_observers"]),
+        leader_changes=int(dg["leader_changes"]),
+        no_leader_ticks=int(dg["no_leader_ticks"]),
+        killed=int(dg["killed"]),
     )
 
 
@@ -270,19 +443,14 @@ _EPOCH_CACHE: Dict = {}
 
 def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0)):
     """One jitted epoch function per (cluster config, padding) — cfg_c
-    values are jit *arguments* (rate sweeps re-use the compiled program)."""
+    values are jit *arguments* (rate sweeps re-use the compiled program).
+    The returned function is the device-resident digest path: it compacts
+    in-graph and donates the state buffers (DESIGN.md §7.1)."""
     key = (cfg, pads)
     if key not in _EPOCH_CACHE:
-        @jax.jit
         def epoch_fn(state, rng, cfg_c):
-            def body(carry, r):
-                st, _ = carry
-                st, m = step_mod.tick(st, static, cfg_c, r)
-                return (st, 0), m
-            rngs = jax.random.split(rng, cfg.period_ticks)
-            (state, _), ms = jax.lax.scan(body, (state, 0), rngs)
-            return state, ms
-        _EPOCH_CACHE[key] = epoch_fn
+            return device_epoch(state, static, cfg_c, rng, cfg.period_ticks)
+        _EPOCH_CACHE[key] = CountingJit(epoch_fn, donate_argnums=(0,))
     return _EPOCH_CACHE[key]
 
 
@@ -300,7 +468,8 @@ class BWRaftSim:
                  manage_resources: bool = True,
                  pad_nodes: int = 0, pad_sites: int = 0,
                  pad_log: int = 0, pad_keys: int = 0,
-                 spot_price_vol: Optional[float] = None):
+                 spot_price_vol: Optional[float] = None,
+                 prelease: Optional[Tuple[int, int]] = None):
         assert mode in ("bwraft", "raft")
         self.cfg = cfg
         self.mode = mode
@@ -320,6 +489,10 @@ class BWRaftSim:
 
         self._epoch_fn = _epoch_fn_for(
             cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys))
+        if prelease is not None:
+            # fixed-role mode: wire a static secretary/observer complement
+            # once, before the run (no per-epoch management)
+            self._lease(max(prelease[0], 0), max(prelease[1], 0))
 
     # ------------------------------------------------------------------ #
     def set_rates(self, write_rate=None, read_rate=None, phi=None):
@@ -341,28 +514,32 @@ class BWRaftSim:
                           sec_of=jnp.asarray(sec_of),
                           obs_of=jnp.asarray(obs_of))
 
-    def _compact(self) -> None:
-        self.state = compact_state(self.state)
+    def lease_fixed(self, want_sec: int, want_obs: int) -> None:
+        """One-shot fixed-role wiring (the solo twin of
+        `FleetSim.lease_fixed`): lease and wire a static complement now,
+        typically after a stabilization epoch, with per-epoch management
+        off — the fixed-role sweep recipe (fig12/fig13)."""
+        self._lease(max(want_sec, 0), max(want_obs, 0))
 
     # ------------------------------------------------------------------ #
     def run_epoch(self) -> EpochReport:
+        """One epoch on the digest path: the jitted scan compacts in-graph
+        and donates the state buffers; only the few-KB digest is pulled to
+        host (DESIGN.md §7.1 — no full log/kv/entry transfer)."""
         self.rng, sub = jax.random.split(self.rng)
-        cost_before = float(self.state["cost_accrued"])
-        self.state, ms = self._epoch_fn(self.state, sub, self.cfg_c)
-        st = jax.tree.map(np.asarray, self.state)
-        ms = jax.tree.map(np.asarray, ms)
+        self.state, digest = self._epoch_fn(self.state, sub, self.cfg_c)
+        dg = jax.tree.map(np.asarray, digest)
 
-        rep = build_report(self.epoch, st, ms, cost_before)
+        rep = report_from_digest(self.epoch, dg)
 
         # ---- control plane: peek (Algorithm 1) + peak (MCSA lease) ------
         if self.manage:
             dec = self.controller.decide(
-                rep, float(np.mean(st["spot_price"][:self.cfg.num_sites])))
+                rep, float(np.mean(dg["spot_price"][:self.cfg.num_sites])))
             rep.decision = dec
             self._lease(max(dec.dk_s, 0), max(dec.dk_o, 0))
         self.controller.end_epoch(rep)
 
-        self._compact()
         self.epoch += 1
         self._reports.append(rep)
         return rep

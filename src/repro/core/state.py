@@ -25,6 +25,7 @@ from __future__ import annotations
 
 from typing import Dict
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -176,3 +177,16 @@ def leader_id(state, static):
     is_leader = (state["role"] == LEADER) & state["alive"]
     ids = jnp.arange(is_leader.shape[0])
     return jnp.max(jnp.where(is_leader, ids, -1))
+
+
+def pytree_nbytes(tree) -> int:
+    """Total payload bytes of an array pytree, computed from shapes/dtypes
+    only (never forces a device→host transfer).  Used for the epoch-digest
+    transfer accounting (DESIGN.md §7.1): `FleetSim.d2h_bytes` and
+    `benchmarks/perf_fleet.py` report digest-vs-state sizes through it."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = jnp.shape(leaf)
+        total += int(np.prod(shape, dtype=np.int64)) * \
+            np.dtype(jnp.result_type(leaf)).itemsize
+    return total

@@ -193,9 +193,16 @@ def leader_step(state, static, cfg_c, rng_key):
                 leader_work=leader_work)
 
 
-def follower_step(state, static, cfg_c):
+def follower_step(state, static, cfg_c, *, reference=False):
     """Deliver due append batches: log-matching check, truncate-adopt,
-    schedule acks; followers forward to observers eagerly (Step 6, Fig. 5)."""
+    schedule acks; followers forward to observers eagerly (Step 6, Fig. 5).
+
+    The window adopt is position-aligned (a follower copies the LEADER'S
+    row at the same log indices), so the fast path expresses it as one
+    elementwise select over (N, L) with the broadcast leader row — XLA CPU
+    vectorizes it, unlike the (N, W) gather + scatter of the PR-1
+    formulation, which `reference=True` preserves bit-for-bit as the
+    benchmark baseline (`benchmarks/perf_fleet.py`, DESIGN.md §7.1)."""
     N = state["role"].shape[0]
     L = state["log_term"].shape[1]
     tick = state["tick"]
@@ -225,21 +232,36 @@ def follower_step(state, static, cfg_c):
 
     # adopt leader entries [from_len, upto) — window-bounded copy
     W = static["max_ship"]
-    base = jnp.where(accept, state["app_from_len"], 0)
-    widx = base[:, None] + jnp.arange(W)[None, :]             # (N,W)
-    valid = accept[:, None] & (widx < state["app_upto"][:, None]) & \
-        (widx < L)
-    widx_c = jnp.clip(widx, 0, L - 1)
-    ldr_terms = state["log_term"][lid_c][widx_c]
-    ldr_keys = state["log_key"][lid_c][widx_c]
-    ldr_vals = state["log_val"][lid_c][widx_c]
-    rows = jnp.broadcast_to(jnp.arange(N)[:, None], widx.shape)
-    put = lambda dst, src: dst.at[
-        jnp.where(valid, rows, N), jnp.where(valid, widx_c, L)].set(
-        src, mode="drop")
-    log_term = put(state["log_term"], ldr_terms)
-    log_key = put(state["log_key"], ldr_keys)
-    log_val = put(state["log_val"], ldr_vals)
+    if reference:
+        # PR-1 formulation: (N, W) gather of the leader window, then a
+        # masked scatter back — kept only as the perf baseline
+        base = jnp.where(accept, state["app_from_len"], 0)
+        widx = base[:, None] + jnp.arange(W)[None, :]         # (N,W)
+        valid = accept[:, None] & (widx < state["app_upto"][:, None]) & \
+            (widx < L)
+        widx_c = jnp.clip(widx, 0, L - 1)
+        ldr_terms = state["log_term"][lid_c][widx_c]
+        ldr_keys = state["log_key"][lid_c][widx_c]
+        ldr_vals = state["log_val"][lid_c][widx_c]
+        rows = jnp.broadcast_to(jnp.arange(N)[:, None], widx.shape)
+        put = lambda dst, src: dst.at[
+            jnp.where(valid, rows, N), jnp.where(valid, widx_c, L)].set(
+            src, mode="drop")
+        log_term = put(state["log_term"], ldr_terms)
+        log_key = put(state["log_key"], ldr_keys)
+        log_val = put(state["log_val"], ldr_vals)
+    else:
+        # fast path: position p adopts leader_row[p] iff p lies in the
+        # accepted window [from_len, min(upto, from_len + W))
+        pos = jnp.arange(L)[None, :]                          # (1,L)
+        lo = state["app_from_len"][:, None]
+        hi = jnp.minimum(state["app_upto"],
+                         state["app_from_len"] + W)[:, None]
+        sel = accept[:, None] & (pos >= lo) & (pos < hi)
+        adopt = lambda dst, ldr_row: jnp.where(sel, ldr_row[None, :], dst)
+        log_term = adopt(state["log_term"], state["log_term"][lid_c])
+        log_key = adopt(state["log_key"], state["log_key"][lid_c])
+        log_val = adopt(state["log_val"], state["log_val"][lid_c])
     new_len = jnp.where(accept,
                         jnp.minimum(state["app_upto"],
                                     state["app_from_len"] + W),
@@ -283,9 +305,14 @@ def follower_step(state, static, cfg_c):
                 ack_upto=ack_upto, app_arrive_t=app_arrive_t)
 
 
-def commit_step(state, static, cfg_c):
+def commit_step(state, static, cfg_c, *, reference=False):
     """Leader ingests due acks -> match_len; commits majority-replicated
-    prefix (voters only); records entry commit times."""
+    prefix (voters only); records entry commit times.
+
+    The majority test is computed from the majority-th largest voter
+    match_len (one (N,) sort) on the fast path — `counts(l) >= majority`
+    iff `l <= that order statistic` since counts is non-increasing in l —
+    instead of the PR-1 O(L·N) comparison matrix (`reference=True`)."""
     N = state["role"].shape[0]
     L = state["log_term"].shape[1]
     tick = state["tick"]
@@ -317,11 +344,16 @@ def commit_step(state, static, cfg_c):
     # commit = largest l such that #voters with match>=l is a majority,
     # restricted to entries of the current term (Raft §5.4.2)
     is_voter = jnp.asarray(static["is_voter"])
-    counts = jnp.sum((match_len[None, :] >=
-                      (jnp.arange(L) + 1)[:, None]) &
-                     is_voter[None, :] & state["alive"][None, :], axis=1)
-    can = counts >= static["majority"]
     lens = jnp.arange(L) + 1
+    if reference:
+        counts = jnp.sum((match_len[None, :] >=
+                          (jnp.arange(L) + 1)[:, None]) &
+                         is_voter[None, :] & state["alive"][None, :], axis=1)
+        can = counts >= static["majority"]
+    else:
+        vmatch = jnp.where(is_voter & state["alive"], match_len, -1)
+        kth = jnp.sort(vmatch)[::-1][jnp.maximum(static["majority"] - 1, 0)]
+        can = lens <= kth
     term_ok = state["log_term"][lid_c, jnp.arange(L)] == state["term"][lid_c]
     commit = jnp.max(jnp.where(can & term_ok, lens, 0))
     new_commit = jnp.where(has_leader,
@@ -340,9 +372,11 @@ def commit_step(state, static, cfg_c):
                 writes_committed=state["writes_committed"] + n_new)
 
 
-def apply_step(state, static, cfg_c):
+def apply_step(state, static, cfg_c, *, reference=False):
     """All nodes apply committed entries to their KV state machine
-    (bounded per tick; Property 3.2 order = log order)."""
+    (bounded per tick; Property 3.2 order = log order).  `reference=True`
+    keeps the PR-1 Python-unrolled loop of A sequential scatters as the
+    perf baseline; the fast path dedupes and scatters once."""
     N, L = state["log_term"].shape
     A = static["max_apply"]
     base = state["applied_len"]                               # (N,)
@@ -355,13 +389,28 @@ def apply_step(state, static, cfg_c):
     vals = jnp.take_along_axis(state["log_val"], idx_c, axis=1)
     rows = jnp.broadcast_to(jnp.arange(N)[:, None], keys.shape)
     K = state["kv"].shape[1]
-    # later entries win: scatter in index order (at most A per row, A small —
-    # apply sequentially over the A offsets to preserve order)
-    kv = state["kv"]
-    for a in range(A):
-        kv = kv.at[jnp.where(valid[:, a], jnp.arange(N), N),
-                   jnp.where(valid[:, a], keys[:, a], K)].set(
-            vals[:, a], mode="drop")
+    if reference:
+        # PR-1: apply sequentially over the A offsets to preserve order
+        kv = state["kv"]
+        for a in range(A):
+            kv = kv.at[jnp.where(valid[:, a], jnp.arange(N), N),
+                       jnp.where(valid[:, a], keys[:, a], K)].set(
+                vals[:, a], mode="drop")
+    else:
+        # later entries win.  A single scatter with duplicate (row, key)
+        # pairs has unspecified order, so dedupe first: drop any entry
+        # that a LATER valid entry in the same row overwrites (O(A^2)
+        # mask, A small), then scatter every surviving entry at once —
+        # one HLO scatter instead of A sequential ones (compile time and
+        # HLO size stay flat in max_apply).
+        offs_a = jnp.arange(A)
+        later = offs_a[:, None] < offs_a[None, :]             # (A, A): b > a
+        overwritten = jnp.any(later[None, :, :] &
+                              (keys[:, :, None] == keys[:, None, :]) &
+                              valid[:, None, :], axis=2)      # (N, A)
+        keep = valid & ~overwritten
+        kv = state["kv"].at[jnp.where(keep, rows, N),
+                            jnp.where(keep, keys, K)].set(vals, mode="drop")
     applied = base + jnp.maximum(todo, 0)
     return dict(state, kv=kv, applied_len=applied)
 
@@ -550,16 +599,22 @@ def cost_step(state, static, cfg_c):
     return dict(state, cost_accrued=state["cost_accrued"] + per_tick)
 
 
-def tick(state, static, cfg_c, rng) -> Tuple[Dict, Dict]:
-    """One full protocol tick. Returns (state, per-tick metrics)."""
+def tick(state, static, cfg_c, rng, *, reference=False) -> Tuple[Dict, Dict]:
+    """One full protocol tick. Returns (state, per-tick metrics).
+
+    `reference=True` selects the PR-1 formulations of the follower adopt,
+    the commit majority test, and the apply scatter — bit-identical
+    results, kept as the epoch-loop perf baseline (DESIGN.md §7.1,
+    `benchmarks/perf_fleet.py`); the equivalence is a test invariant
+    (`tests/test_fleet.py`)."""
     r_spot, r_work, r_lead, r_elec = jax.random.split(rng, 4)
     state, killed = spot_step(state, static, cfg_c, r_spot)
     state, (n_w, n_r, r_key) = workload_step(state, static, cfg_c, r_work)
     state = election_step(state, static, cfg_c, r_elec)
     state = leader_step(state, static, cfg_c, r_lead)
-    state = follower_step(state, static, cfg_c)
-    state = commit_step(state, static, cfg_c)
-    state = apply_step(state, static, cfg_c)
+    state = follower_step(state, static, cfg_c, reference=reference)
+    state = commit_step(state, static, cfg_c, reference=reference)
+    state = apply_step(state, static, cfg_c, reference=reference)
     state = observer_sync_step(state, static, cfg_c)
     state = read_step(state, static, cfg_c)
     state = cost_step(state, static, cfg_c)

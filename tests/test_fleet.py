@@ -1,13 +1,18 @@
 """The batched fleet contract (DESIGN.md §7): a vmapped B-cluster sweep is
 element-wise identical to sequential single-cluster runs at the same
 padded shapes and seeds, padding is inert, and one static shape costs one
-compile."""
+compile.  Plus the §7.1 epoch-digest contract: the device-resident
+(fused/donated) pipeline reproduces the PR-1 host-marshalling reports,
+the multi-epoch scan equals the epoch-by-epoch loop, and per-epoch
+device→host traffic stays O(digest)."""
 import numpy as np
+import jax.numpy as jnp
 import pytest
 
+from repro.core import step as step_mod
 from repro.core.cluster_config import ClusterConfig, SiteConfig
 from repro.core.fleet import FleetSim, MemberSpec
-from repro.core.runtime import BWRaftSim
+from repro.core.runtime import BWRaftSim, CountingJit, hist_percentile
 from repro.core.state import DEAD
 
 _INT_FIELDS = ("reads_arrived", "writes_arrived", "reads_served",
@@ -123,6 +128,138 @@ def test_one_compile_per_static_shape():
     # same shapes -> same cached program; new knobs are just jit arguments
     assert b._epoch_fn is a._epoch_fn
     assert b.compile_count == 1
+
+
+def test_digest_pipeline_matches_host_pipeline():
+    """§7.1 equivalence: the fused/donated digest epoch reproduces the
+    PR-1 host-marshalling EpochReports — exact counters, histogram-exact
+    latency stats — including the control-plane decisions of a managing
+    member."""
+    cfg = _small_cluster("digest")
+    specs = [MemberSpec(cfg=cfg, write_rate=6.0, read_rate=24.0, phi=0.02,
+                        seed=0),
+             MemberSpec(cfg=cfg, mode="raft", write_rate=12.0,
+                        read_rate=12.0, seed=1, manage_resources=False)]
+    dev = FleetSim(specs)                       # pipeline="device" default
+    host = FleetSim(specs, pipeline="host")
+    dev_reports, host_reports = dev.run(3), host.run(3)
+    for i in range(len(specs)):
+        for e, (a, b) in enumerate(zip(dev_reports[i], host_reports[i])):
+            _assert_reports_equal(a, b, ctx=f"member {i} epoch {e}")
+            if a.decision is not None or b.decision is not None:
+                assert (a.decision.dk_s, a.decision.dk_o) == \
+                    (b.decision.dk_s, b.decision.dk_o)
+    # the point of the digest: per-epoch D2H is O(digest), not O(B*N*(L+K))
+    assert dev.d2h_bytes < host.d2h_bytes / 100, \
+        (dev.d2h_bytes, host.d2h_bytes)
+
+
+def test_multi_epoch_scan_equals_epoch_by_epoch():
+    """§7.1 fast path: a fixed-role fleet run as ONE scan-of-scans
+    dispatch equals the same fleet stepped epoch by epoch at the same
+    seeds/shapes."""
+    cfg = _small_cluster("scan")
+    specs = [MemberSpec(cfg=cfg, write_rate=6.0, read_rate=24.0, phi=0.02,
+                        seed=3, manage_resources=False, prelease=(2, 4)),
+             MemberSpec(cfg=cfg, mode="raft", write_rate=8.0,
+                        read_rate=16.0, seed=4, manage_resources=False)]
+    fast = FleetSim(specs)
+    slow = FleetSim(specs)
+    assert fast.single_dispatch_eligible
+    fast_reports = fast.run(4)                  # auto single dispatch
+    slow_reports = slow.run(4, single_dispatch=False)
+    for i in range(len(specs)):
+        for e, (a, b) in enumerate(zip(fast_reports[i], slow_reports[i])):
+            _assert_reports_equal(a, b, ctx=f"member {i} epoch {e}")
+
+    # a managing fleet must refuse the forced fast path
+    with pytest.raises(AssertionError):
+        FleetSim([MemberSpec(cfg=cfg, seed=0)]).run(2, single_dispatch=True)
+
+
+def test_preleased_fleet_matches_solo():
+    """Fixed-role members (prelease) stay trajectory-equal to a solo
+    BWRaftSim wired the same way at the same seed."""
+    cfg = _small_cluster("pre")
+    spec = dict(write_rate=6.0, read_rate=24.0, phi=0.0, seed=5,
+                manage_resources=False, prelease=(2, 4))
+    fleet_reports = FleetSim([MemberSpec(cfg=cfg, **spec)]).run(3)
+    solo_reports = BWRaftSim(cfg, **spec).run(3)
+    for e, (a, b) in enumerate(zip(fleet_reports[0], solo_reports)):
+        _assert_reports_equal(a, b, ctx=f"epoch {e}")
+    # observers survive a fixed-role run; preleased secretaries are
+    # stopped by the FIRST election (paper Step 1) and — manager off —
+    # never re-provisioned, so only the observer complement persists
+    assert fleet_reports[0][-1].n_observers > 0
+
+
+def test_lease_fixed_matches_solo_recipe():
+    """The fixed-role sweep recipe (stabilize -> lease_fixed -> single
+    dispatch, as in fig12/fig13) equals the sequential run/_lease/run."""
+    cfg = _small_cluster("fixed")
+    spec = dict(write_rate=6.0, read_rate=24.0, phi=0.02, seed=9,
+                manage_resources=False)
+    fleet = FleetSim([MemberSpec(cfg=cfg, **spec)])
+    fleet.run(1)
+    fleet.lease_fixed(2, 4)
+    fleet_reports = fleet.run(3)                # ONE dispatch
+    solo = BWRaftSim(cfg, **spec)
+    solo.run(1)
+    solo.lease_fixed(2, 4)
+    solo_reports = solo.run(3)
+    for e, (a, b) in enumerate(zip(fleet_reports[0], solo_reports)):
+        _assert_reports_equal(a, b, ctx=f"epoch {e}")
+    assert fleet_reports[0][0].n_secretaries + \
+        fleet_reports[0][0].n_observers > 0
+
+
+def test_hist_percentile_matches_numpy():
+    """The digest recovers np.percentile exactly: integer latencies in
+    unit bins fully determine the sorted sample."""
+    rng = np.random.default_rng(0)
+    for size in (1, 2, 7, 100):
+        sample = rng.integers(0, 60, size)
+        hist = np.bincount(sample, minlength=61)
+        for q in (50, 95, 99):
+            assert np.isclose(hist_percentile(hist, q),
+                              np.percentile(sample, q)), (size, q)
+    assert np.isnan(hist_percentile(np.zeros(5, int), 95))
+
+
+def test_apply_step_last_wins_scatter():
+    """The vectorized apply scatter preserves log order: for duplicate
+    keys inside one apply window the LAST committed entry wins."""
+    N, L, K, A = 2, 8, 4, 4
+    state = {
+        "log_term": jnp.zeros((N, L), jnp.int32),
+        "log_key": jnp.asarray([[1, 1, 2, 1, 0, 0, 0, 0],
+                                [3, 3, 3, 3, 0, 0, 0, 0]], jnp.int32),
+        "log_val": jnp.asarray([[10, 20, 30, 40, 0, 0, 0, 0],
+                                [5, 6, 7, 8, 0, 0, 0, 0]], jnp.int32),
+        "applied_len": jnp.zeros((N,), jnp.int32),
+        "commit_len": jnp.asarray([4, 3], jnp.int32),
+        "alive": jnp.asarray([True, True]),
+        "kv": jnp.full((N, K), -1, jnp.int32),
+    }
+    out = step_mod.apply_step(state, {"max_apply": A}, {})
+    kv = np.asarray(out["kv"])
+    # row 0 commits keys [1,1,2,1]: key1 -> 40 (last), key2 -> 30
+    assert kv[0, 1] == 40 and kv[0, 2] == 30 and kv[0, 0] == -1
+    # row 1 commits only 3 of the 4 entries for key3 -> third value wins
+    assert kv[1, 3] == 7
+    assert np.asarray(out["applied_len"]).tolist() == [4, 3]
+
+
+def test_compile_count_fallback_without_cache_size():
+    """CountingJit keeps counting compilations when the installed jax has
+    no private `_cache_size` on jitted functions."""
+    fn = CountingJit(lambda x: x * 2)
+    fn(jnp.zeros((4,)))
+    fn(jnp.ones((4,)))                  # same shape: no new compile
+    fn(jnp.zeros((8,)))                 # new shape: second compile
+    assert fn.cache_size() == 2
+    fn.fn = lambda *a: None             # a jax without _cache_size()
+    assert fn.cache_size() == 2, "must fall back to signature counting"
 
 
 def test_sweep_cross_product_order():
