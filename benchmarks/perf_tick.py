@@ -1,0 +1,207 @@
+#!/usr/bin/env python
+"""Consensus-tick kernel benchmark: pallas vs xla vs reference.
+
+Times the three raft_tick hot ops (DESIGN.md §8) and the end-to-end
+protocol tick on every formulation the repo carries:
+
+  per kernel    the Pallas op (`kernels/raft_tick/ops.py`) against its
+                PR-1 `ref.py` twin, at the paper cluster's shapes.
+  end to end    a jitted T-tick scan of `step.tick` on
+                backend="pallas", backend="xla" (the PR-2 fast path),
+                and reference=True (the PR-1 baseline).
+
+Before timing, the three end-to-end trajectories are checked
+**bit-identical** from the same seed — the run FAILS (exit 1) if any
+state leaf diverges, so CI catches kernel-contract regressions even on
+machines where the timings themselves are noise.
+
+Emits ``BENCH_tick.json``.  Interpret-mode caveat: off-TPU the pallas
+numbers measure the Pallas *interpreter* traced into XLA, not kernel
+speed (DESIGN.md §8); the JSON records which mode ran (`"interpret"`),
+and no perf ceiling is enforced on interpret timings.
+
+  PYTHONPATH=src python benchmarks/perf_tick.py [--smoke] [--out PATH]
+
+``--smoke`` shrinks the cluster and iteration counts for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bwraft_kv import CONFIG
+from repro.core import state as state_mod
+from repro.core import step as step_mod
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.runtime import make_cfg_arrays
+from repro.kernels.raft_tick import ops as rt_ops
+from repro.kernels.raft_tick import ref as rt_ref
+
+SMOKE_CONFIG = ClusterConfig(
+    name="bwraft-kv-smoke",
+    sites=(SiteConfig("s0", followers=2, rtt_intra=1, rtt_inter=6,
+                      on_demand_price=0.0416, spot_price_mean=0.0125),
+           SiteConfig("s1", followers=1, rtt_intra=1, rtt_inter=8,
+                      on_demand_price=0.0416, spot_price_mean=0.0125)),
+    period_ticks=40, max_log=256, key_space=128,
+    max_secretaries=2, max_observers=4)
+
+
+def _timeit(fn, *args, iters: int, warmup: int = 1) -> float:
+    """Median wall seconds per call of a jitted fn (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def _kernel_inputs(cfg: ClusterConfig, static, seed: int = 0):
+    """Plausible operands at the cluster's real shapes (the equivalence
+    itself is enforced on full trajectories below and in tests)."""
+    rng = np.random.default_rng(seed)
+    N, L, K = static["N"], cfg.max_log, cfg.key_space
+    A, W = static["max_apply"], static["max_ship"]
+    mk = lambda hi, sh: jnp.asarray(rng.integers(0, hi, sh), jnp.int32)
+    return {
+        "log_match": dict(
+            log_term=mk(3, (N, L)), log_key=mk(K, (N, L)),
+            log_val=mk(2**20, (N, L)), ldr_term=mk(3, (L,)),
+            ldr_key=mk(K, (L,)), ldr_val=mk(2**20, (L,)),
+            log_len=mk(L + 1, (N,)), app_from_len=mk(L + 1, (N,)),
+            app_upto=mk(L + 1, (N,)),
+            due=jnp.asarray(rng.random(N) < 0.5)),
+        "commit": dict(
+            match_len=mk(L + 1, (N,)),
+            voter_alive=jnp.asarray(static["is_voter"]),
+            ldr_term=mk(3, (L,)), ldr_cur_term=jnp.int32(1),
+            majority=jnp.int32(static["majority"])),
+        "apply": dict(
+            kv=mk(2**20, (N, K)), keys=mk(K, (N, A)),
+            vals=mk(2**20, (N, A)),
+            valid=jnp.asarray(rng.random((N, A)) < 0.7)),
+        "W": W,
+    }
+
+
+def bench_kernels(cfg: ClusterConfig, static, iters: int) -> dict:
+    inp = _kernel_inputs(cfg, static)
+    W = inp["W"]
+    # positional arg tuples (dict pytrees re-order under jit)
+    pairs = {
+        "log_match_append": (
+            jax.jit(lambda *a: rt_ops.log_match_append(*a, w=W)),
+            jax.jit(lambda *a: rt_ref.log_match_append_ref(*a, w=W)),
+            tuple(inp["log_match"].values())),
+        "commit_majority": (
+            jax.jit(rt_ops.commit_majority),
+            jax.jit(rt_ref.commit_majority_ref),
+            tuple(inp["commit"].values())),
+        "apply_last_wins": (
+            jax.jit(rt_ops.apply_last_wins),
+            jax.jit(rt_ref.apply_last_wins_ref),
+            tuple(inp["apply"].values())),
+    }
+    out = {}
+    for name, (pallas_fn, ref_fn, args_t) in pairs.items():
+        p_ms = _timeit(pallas_fn, *args_t, iters=iters) * 1e3
+        r_ms = _timeit(ref_fn, *args_t, iters=iters) * 1e3
+        out[name] = {"pallas_ms": p_ms, "ref_ms": r_ms,
+                     "pallas_vs_ref": r_ms / max(p_ms, 1e-12)}
+    return out
+
+
+def bench_tick(cfg: ClusterConfig, static, T: int, iters: int):
+    """End-to-end T-tick scans; returns (timings, equal: bool)."""
+    cfg_c = make_cfg_arrays(cfg, write_rate=8.0, read_rate=16.0, phi=0.02)
+    state0 = state_mod.init_state(cfg, static)
+    rngs = jax.random.split(jax.random.PRNGKey(0), T)
+
+    def scan_fn(reference, backend):
+        def body(c, r):
+            s, _ = step_mod.tick(c, static, cfg_c, r, reference=reference,
+                                 backend=backend)
+            return s, None
+        return jax.jit(lambda s: jax.lax.scan(body, s, rngs)[0])
+
+    variants = {"xla": scan_fn(False, "xla"),
+                "pallas": scan_fn(False, "pallas"),
+                "reference": scan_fn(True, "xla")}
+    finals, timings = {}, {}
+    for name, fn in variants.items():
+        finals[name] = jax.tree.map(np.asarray, fn(state0))
+        timings[f"{name}_ms_per_tick"] = \
+            _timeit(fn, state0, iters=iters) * 1e3 / T
+    equal = all(
+        np.array_equal(finals["xla"][k], finals[v][k])
+        for v in ("pallas", "reference") for k in finals["xla"])
+    timings["speedup_xla_vs_reference"] = \
+        timings["reference_ms_per_tick"] / timings["xla_ms_per_tick"]
+    timings["pallas_vs_xla"] = \
+        timings["xla_ms_per_tick"] / timings["pallas_ms_per_tick"]
+    return timings, equal
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small cluster + few iters for CI (equivalence "
+                         "gate only, timings informational)")
+    ap.add_argument("--out", default="BENCH_tick.json")
+    args = ap.parse_args(argv)
+
+    cfg = SMOKE_CONFIG if args.smoke else CONFIG
+    static = state_mod.build_static(cfg)
+    T = cfg.period_ticks
+    k_iters, t_iters = (3, 2) if args.smoke else (10, 3)
+    interpret = rt_ops.use_interpret()
+    print(f"=== raft_tick kernels: {cfg.name} N={static['N']} "
+          f"L={cfg.max_log} K={cfg.key_space} T={T} "
+          f"(pallas {'interpret' if interpret else 'compiled'}) ===")
+
+    kernels = bench_kernels(cfg, static, k_iters)
+    for name, r in kernels.items():
+        print(f"{name:>18}: pallas {r['pallas_ms']:8.2f} ms   "
+              f"ref {r['ref_ms']:8.2f} ms")
+
+    tick, equal = bench_tick(cfg, static, T, t_iters)
+    print(f"{'tick (end-to-end)':>18}: xla {tick['xla_ms_per_tick']:.3f} "
+          f"ms/tick   pallas {tick['pallas_ms_per_tick']:.3f}   "
+          f"reference {tick['reference_ms_per_tick']:.3f}")
+    print(f"trajectories bit-identical: {equal}")
+
+    result = {
+        "config": {"cluster": cfg.name, "N": int(static["N"]),
+                   "L": cfg.max_log, "K": cfg.key_space,
+                   "W": int(static["max_ship"]),
+                   "A": int(static["max_apply"]), "T": T,
+                   "smoke": args.smoke,
+                   "jax_backend": jax.default_backend(),
+                   "interpret": interpret},
+        "kernels": kernels,
+        "tick": tick,
+        "equivalence": {"pallas_equals_xla_equals_reference": equal},
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"-> {args.out}")
+
+    if not equal:
+        print("FAIL: pallas/xla/reference trajectories diverged",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """A 32-cluster parameter sweep in ONE compiled program.
 
-    PYTHONPATH=src python examples/sweep_fleet.py
+    PYTHONPATH=src python examples/sweep_fleet.py [--backend pallas]
 
 Sweeps the paper cluster over an 8 x 4 grid of spot kill rates (phi) and
 write rates — 32 independent BW-Raft clusters — with `FleetSim`.  All 32
@@ -15,7 +15,13 @@ state pytree never leaves the device — per epoch only a few-KB digest per
 cluster is fetched (printed below; compare with the device state size).
 `benchmarks/perf_fleet.py` quantifies the speedup vs the PR-1
 host-marshalling path and records it in BENCH_fleet.json.
+
+`--backend pallas` runs the same sweep through the raft_tick kernel
+layer (DESIGN.md §8; interpret mode off-TPU) — trajectories are
+bit-identical, only execution differs; `benchmarks/perf_tick.py` is the
+measured comparison.
 """
+import argparse
 import itertools
 import time
 
@@ -30,11 +36,15 @@ EPOCHS = 3
 
 
 def main():
-    print("=== BW-Raft fleet sweep: 8 phis x 4 write rates = 32 clusters "
-          "===")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="tick hot-op implementation (DESIGN.md §8)")
+    args = ap.parse_args()
+    print(f"=== BW-Raft fleet sweep: 8 phis x 4 write rates = 32 clusters "
+          f"(backend={args.backend}) ===")
     fleet = FleetSim.from_sweep(
         CONFIG, {"phi": PHIS, "write_rate": WRITE_RATES},
-        read_rate=32.0, seed=0)
+        read_rate=32.0, seed=0, backend=args.backend)
     assert fleet.shapes.B == 32, fleet.shapes
 
     t0 = time.perf_counter()

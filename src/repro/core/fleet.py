@@ -117,38 +117,42 @@ def total_compile_count() -> int:
     return sum(fn.cache_size() for fn in _FLEET_EPOCH_CACHE.values())
 
 
-def _vmapped_epoch(shapes: FleetShapes, shared: Dict):
+def _vmapped_epoch(shapes: FleetShapes, shared: Dict, backend: str = "xla"):
     """One device epoch vmapped over the batch axis — the single body
     shared by the per-epoch and multi-epoch pipelines, so their dynamics
-    can never diverge."""
+    can never diverge.  `backend` picks the tick hot-op implementation
+    (DESIGN.md §8); the Pallas kernels batch under vmap like any op."""
     def epoch(state, rngs, bstatic, cfg_c):
         def one_epoch(st, rng, bstat, cc):
             static = {**shared, **bstat}
-            return device_epoch(st, static, cc, rng, shapes.T)
+            return device_epoch(st, static, cc, rng, shapes.T,
+                                backend=backend)
         return jax.vmap(one_epoch)(state, rngs, bstatic, cfg_c)
     return epoch
 
 
-def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict):
+def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict,
+                    backend: str = "xla"):
     """Digest pipeline: a jitted, vmapped, fully device-resident epoch —
     in-scan metric reduction, in-graph compaction, donated state buffers.
     Returns `(compacted_state, digest)` with digest leaves batched over B.
-    One compile per static shape; `shared` (python ints) is closed over,
-    batched statics and cfg_c are runtime arguments."""
-    key = ("device", shapes, tuple(sorted(shared.items())))
+    One compile per (static shape, backend); `shared` (python ints) is
+    closed over, batched statics and cfg_c are runtime arguments."""
+    key = ("device", shapes, tuple(sorted(shared.items())), backend)
     if key not in _FLEET_EPOCH_CACHE:
-        _FLEET_EPOCH_CACHE[key] = CountingJit(_vmapped_epoch(shapes, shared),
-                                              donate_argnums=(0,))
+        _FLEET_EPOCH_CACHE[key] = CountingJit(
+            _vmapped_epoch(shapes, shared, backend), donate_argnums=(0,))
     return _FLEET_EPOCH_CACHE[key]
 
 
-def _fleet_multi_epoch_fn(shapes: FleetShapes, shared: Dict, epochs: int):
+def _fleet_multi_epoch_fn(shapes: FleetShapes, shared: Dict, epochs: int,
+                          backend: str = "xla"):
     """Single-dispatch fast path: scan-of-scans over `epochs` device
     epochs (compaction in-graph between them) for fleets with no managing
     member.  Digest leaves come back stacked (E, B, ...)."""
-    key = ("multi", shapes, tuple(sorted(shared.items())), epochs)
+    key = ("multi", shapes, tuple(sorted(shared.items())), epochs, backend)
     if key not in _FLEET_EPOCH_CACHE:
-        epoch = _vmapped_epoch(shapes, shared)
+        epoch = _vmapped_epoch(shapes, shared, backend)
 
         def multi_fn(state, rngs, bstatic, cfg_c):
             def epoch_body(st, rngs_b):
@@ -235,12 +239,20 @@ class FleetSim:
     host between epochs.  `pipeline` selects the epoch implementation:
     `"device"` (default) is the digest path — donated state, in-graph
     compaction, O(digest) device→host traffic — `"host"` the PR-1
-    full-marshalling reference (DESIGN.md §7.1).
+    full-marshalling reference (DESIGN.md §7.1).  `backend` selects the
+    tick hot-op implementation on the device pipeline: `"xla"` (default)
+    or `"pallas"` (`kernels/raft_tick`, DESIGN.md §8) — trajectories are
+    bit-identical either way (test invariant).
     """
 
     def __init__(self, specs: Sequence[MemberSpec], *,
-                 pipeline: str = "device"):
+                 pipeline: str = "device", backend: str = "xla"):
         assert pipeline in ("device", "host"), pipeline
+        assert backend in ("xla", "pallas"), backend
+        assert backend == "xla" or pipeline == "device", \
+            "the pallas backend applies to the device pipeline only " \
+            "(the host pipeline is the frozen PR-1 reference)"
+        self.backend = backend
         specs = list(specs)
         assert specs, "fleet needs at least one member"
         periods = {s.cfg.period_ticks for s in specs}
@@ -274,7 +286,8 @@ class FleetSim:
                                    *[m.state0 for m in self.members])
         self._cfg_c = jax.tree.map(lambda *xs: jnp.stack(xs),
                                    *[m.cfg_c for m in self.members])
-        self._epoch_fn = (_fleet_epoch_fn(self.shapes, self._shared)
+        self._epoch_fn = (_fleet_epoch_fn(self.shapes, self._shared,
+                                          backend)
                           if pipeline == "device" else
                           _fleet_epoch_fn_host(self.shapes, self._shared))
         # cumulative device->host bytes fetched for report building
@@ -285,7 +298,8 @@ class FleetSim:
     # ------------------------------------------------------------------ #
     @classmethod
     def from_sweep(cls, configs, axes: Optional[Dict] = None,
-                   pipeline: str = "device", **defaults) -> "FleetSim":
+                   pipeline: str = "device", backend: str = "xla",
+                   **defaults) -> "FleetSim":
         """Cross-product sweep constructor.
 
         `configs`: one ClusterConfig or a sequence of them.  `axes`: dict
@@ -306,7 +320,7 @@ class FleetSim:
             for combo in itertools.product(*axes.values()):
                 specs.append(MemberSpec(cfg=cfg, **defaults,
                                         **dict(zip(names, combo))))
-        return cls(specs, pipeline=pipeline)
+        return cls(specs, pipeline=pipeline, backend=backend)
 
     @classmethod
     def sweep(cls, configs, axes: Optional[Dict] = None, *,
@@ -459,7 +473,8 @@ class FleetSim:
         """The multi-epoch fast path: ONE dispatch scans over `epochs`
         device epochs (in-graph compaction between them) and returns the
         digests stacked (E, B, ...)."""
-        fn = _fleet_multi_epoch_fn(self.shapes, self._shared, epochs)
+        fn = _fleet_multi_epoch_fn(self.shapes, self._shared, epochs,
+                                   self.backend)
         # identical split order to the epoch-by-epoch path, so the two are
         # trajectory-equal at the same seeds (tests/test_fleet.py)
         rngs = jnp.stack([self._split_epoch_rngs() for _ in range(epochs)])

@@ -225,17 +225,18 @@ def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int) -> Dict:
     }
 
 
-def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int
-                 ) -> Tuple[Dict, Dict]:
+def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int, *,
+                 backend: str = "xla") -> Tuple[Dict, Dict]:
     """One fully device-resident epoch: T-tick scan with in-scan metric
     reduction, digest extraction, then in-graph log compaction.  Returns
     `(compacted_state, digest)`; meant to be jitted with the state buffers
-    donated (DESIGN.md §7.1)."""
+    donated (DESIGN.md §7.1).  `backend` picks the tick hot-op
+    implementation — `"xla"` or `"pallas"` (DESIGN.md §8)."""
     cost_before = state["cost_accrued"]
 
     def body(carry, r):
         st, acc = carry
-        st, m = step_mod.tick(st, static, cfg_c, r)
+        st, m = step_mod.tick(st, static, cfg_c, r, backend=backend)
         return (st, _digest_acc_update(acc, m)), None
 
     rngs = jax.random.split(rng, T)
@@ -441,15 +442,17 @@ class ClusterController:
 _EPOCH_CACHE: Dict = {}
 
 
-def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0)):
-    """One jitted epoch function per (cluster config, padding) — cfg_c
-    values are jit *arguments* (rate sweeps re-use the compiled program).
-    The returned function is the device-resident digest path: it compacts
-    in-graph and donates the state buffers (DESIGN.md §7.1)."""
-    key = (cfg, pads)
+def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0),
+                  backend: str = "xla"):
+    """One jitted epoch function per (cluster config, padding, backend) —
+    cfg_c values are jit *arguments* (rate sweeps re-use the compiled
+    program).  The returned function is the device-resident digest path:
+    it compacts in-graph and donates the state buffers (DESIGN.md §7.1)."""
+    key = (cfg, pads, backend)
     if key not in _EPOCH_CACHE:
         def epoch_fn(state, rng, cfg_c):
-            return device_epoch(state, static, cfg_c, rng, cfg.period_ticks)
+            return device_epoch(state, static, cfg_c, rng, cfg.period_ticks,
+                                backend=backend)
         _EPOCH_CACHE[key] = CountingJit(epoch_fn, donate_argnums=(0,))
     return _EPOCH_CACHE[key]
 
@@ -459,7 +462,10 @@ class BWRaftSim:
 
     `pad_*` widen the state shapes with inert slots/sites/log tail so a
     solo run can reproduce exactly the shapes a `FleetSim` member gets when
-    batched next to bigger clusters (DESIGN.md §7).
+    batched next to bigger clusters (DESIGN.md §7).  `backend` selects the
+    tick hot-op implementation — `"xla"` (default) or `"pallas"` (the
+    fused `kernels/raft_tick` kernels, DESIGN.md §8); trajectories are
+    bit-identical either way (test invariant).
     """
 
     def __init__(self, cfg: ClusterConfig, *, mode: str = "bwraft",
@@ -469,10 +475,13 @@ class BWRaftSim:
                  pad_nodes: int = 0, pad_sites: int = 0,
                  pad_log: int = 0, pad_keys: int = 0,
                  spot_price_vol: Optional[float] = None,
-                 prelease: Optional[Tuple[int, int]] = None):
+                 prelease: Optional[Tuple[int, int]] = None,
+                 backend: str = "xla"):
         assert mode in ("bwraft", "raft")
+        assert backend in ("xla", "pallas"), backend
         self.cfg = cfg
         self.mode = mode
+        self.backend = backend
         self.static = state_mod.build_static(cfg, pad_nodes=pad_nodes,
                                              pad_sites=pad_sites)
         self.state = state_mod.init_state(cfg, self.static, pad_log=pad_log,
@@ -488,7 +497,8 @@ class BWRaftSim:
         self._reports: List[EpochReport] = []
 
         self._epoch_fn = _epoch_fn_for(
-            cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys))
+            cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys),
+            backend=backend)
         if prelease is not None:
             # fixed-role mode: wire a static secretary/observer complement
             # once, before the run (no per-epoch management)

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.state import (CANDIDATE, DEAD, FOLLOWER, LEADER, OBSERVER,
                               SECRETARY, leader_id)
+from repro.kernels.raft_tick import ops as rt_ops
 
 
 def _rand(rng, n):
@@ -193,7 +194,7 @@ def leader_step(state, static, cfg_c, rng_key):
                 leader_work=leader_work)
 
 
-def follower_step(state, static, cfg_c, *, reference=False):
+def follower_step(state, static, cfg_c, *, reference=False, backend="xla"):
     """Deliver due append batches: log-matching check, truncate-adopt,
     schedule acks; followers forward to observers eagerly (Step 6, Fig. 5).
 
@@ -202,7 +203,10 @@ def follower_step(state, static, cfg_c, *, reference=False):
     elementwise select over (N, L) with the broadcast leader row — XLA CPU
     vectorizes it, unlike the (N, W) gather + scatter of the PR-1
     formulation, which `reference=True` preserves bit-for-bit as the
-    benchmark baseline (`benchmarks/perf_fleet.py`, DESIGN.md §7.1)."""
+    benchmark baseline (`benchmarks/perf_fleet.py`, DESIGN.md §7.1).
+    `backend="pallas"` fuses the prev-term check, conflict truncation,
+    and append into one VMEM pass (`kernels/raft_tick`, DESIGN.md §8) —
+    bit-identical to both XLA formulations (test invariant)."""
     N = state["role"].shape[0]
     L = state["log_term"].shape[1]
     tick = state["tick"]
@@ -217,58 +221,71 @@ def follower_step(state, static, cfg_c, *, reference=False):
     ok_term = state["app_term"] >= state["term"]
     due = delivered & ok_term & (lid >= 0)
 
-    # log-matching at prev = app_from_len-1: follower's term at that index
-    # must equal the leader's (content is the leader's log row).
-    prev = state["app_from_len"] - 1
-    prev_c = jnp.clip(prev, 0, L - 1)
-    my_prev_term = jnp.take_along_axis(
-        state["log_term"], prev_c[:, None], axis=1)[:, 0]
-    ldr_prev_term = state["log_term"][lid_c, prev_c]
-    match = (prev < 0) | (my_prev_term == ldr_prev_term)
-    accept = due & match
-    # mismatch: nack -> leader will retry from an earlier match point; we
-    # model the optimized backtrack by halving match_len
-    nack = due & ~match
-
-    # adopt leader entries [from_len, upto) — window-bounded copy
     W = static["max_ship"]
-    if reference:
-        # PR-1 formulation: (N, W) gather of the leader window, then a
-        # masked scatter back — kept only as the perf baseline
-        base = jnp.where(accept, state["app_from_len"], 0)
-        widx = base[:, None] + jnp.arange(W)[None, :]         # (N,W)
-        valid = accept[:, None] & (widx < state["app_upto"][:, None]) & \
-            (widx < L)
-        widx_c = jnp.clip(widx, 0, L - 1)
-        ldr_terms = state["log_term"][lid_c][widx_c]
-        ldr_keys = state["log_key"][lid_c][widx_c]
-        ldr_vals = state["log_val"][lid_c][widx_c]
-        rows = jnp.broadcast_to(jnp.arange(N)[:, None], widx.shape)
-        put = lambda dst, src: dst.at[
-            jnp.where(valid, rows, N), jnp.where(valid, widx_c, L)].set(
-            src, mode="drop")
-        log_term = put(state["log_term"], ldr_terms)
-        log_key = put(state["log_key"], ldr_keys)
-        log_val = put(state["log_val"], ldr_vals)
+    if backend == "pallas" and not reference:
+        # fused kernel: log-matching check + truncate + append in one
+        # pass through VMEM; accept comes back out for the ack schedule
+        log_term, log_key, log_val, new_len, accept = \
+            rt_ops.log_match_append(
+                state["log_term"], state["log_key"], state["log_val"],
+                state["log_term"][lid_c], state["log_key"][lid_c],
+                state["log_val"][lid_c],
+                state["log_len"], state["app_from_len"],
+                state["app_upto"], due, w=W)
+        nack = due & ~accept
     else:
-        # fast path: position p adopts leader_row[p] iff p lies in the
-        # accepted window [from_len, min(upto, from_len + W))
-        pos = jnp.arange(L)[None, :]                          # (1,L)
-        lo = state["app_from_len"][:, None]
-        hi = jnp.minimum(state["app_upto"],
-                         state["app_from_len"] + W)[:, None]
-        sel = accept[:, None] & (pos >= lo) & (pos < hi)
-        adopt = lambda dst, ldr_row: jnp.where(sel, ldr_row[None, :], dst)
-        log_term = adopt(state["log_term"], state["log_term"][lid_c])
-        log_key = adopt(state["log_key"], state["log_key"][lid_c])
-        log_val = adopt(state["log_val"], state["log_val"][lid_c])
-    new_len = jnp.where(accept,
-                        jnp.minimum(state["app_upto"],
-                                    state["app_from_len"] + W),
-                        state["log_len"])
-    new_len = jnp.where(accept & (state["log_len"] > new_len) &
-                        (my_prev_term == ldr_prev_term),
-                        jnp.maximum(state["log_len"], new_len), new_len)
+        # log-matching at prev = app_from_len-1: follower's term at that
+        # index must equal the leader's (content is the leader's log row).
+        prev = state["app_from_len"] - 1
+        prev_c = jnp.clip(prev, 0, L - 1)
+        my_prev_term = jnp.take_along_axis(
+            state["log_term"], prev_c[:, None], axis=1)[:, 0]
+        ldr_prev_term = state["log_term"][lid_c, prev_c]
+        match = (prev < 0) | (my_prev_term == ldr_prev_term)
+        accept = due & match
+        # mismatch: nack -> leader will retry from an earlier match
+        # point; we model the optimized backtrack by halving match_len
+        nack = due & ~match
+
+        # adopt leader entries [from_len, upto) — window-bounded copy
+        if reference:
+            # PR-1 formulation: (N, W) gather of the leader window, then
+            # a masked scatter back — kept only as the perf baseline
+            base = jnp.where(accept, state["app_from_len"], 0)
+            widx = base[:, None] + jnp.arange(W)[None, :]     # (N,W)
+            valid = accept[:, None] & \
+                (widx < state["app_upto"][:, None]) & (widx < L)
+            widx_c = jnp.clip(widx, 0, L - 1)
+            ldr_terms = state["log_term"][lid_c][widx_c]
+            ldr_keys = state["log_key"][lid_c][widx_c]
+            ldr_vals = state["log_val"][lid_c][widx_c]
+            rows = jnp.broadcast_to(jnp.arange(N)[:, None], widx.shape)
+            put = lambda dst, src: dst.at[
+                jnp.where(valid, rows, N),
+                jnp.where(valid, widx_c, L)].set(src, mode="drop")
+            log_term = put(state["log_term"], ldr_terms)
+            log_key = put(state["log_key"], ldr_keys)
+            log_val = put(state["log_val"], ldr_vals)
+        else:
+            # fast path: position p adopts leader_row[p] iff p lies in
+            # the accepted window [from_len, min(upto, from_len + W))
+            pos = jnp.arange(L)[None, :]                      # (1,L)
+            lo = state["app_from_len"][:, None]
+            hi = jnp.minimum(state["app_upto"],
+                             state["app_from_len"] + W)[:, None]
+            sel = accept[:, None] & (pos >= lo) & (pos < hi)
+            adopt = lambda dst, ldr_row: jnp.where(sel, ldr_row[None, :],
+                                                   dst)
+            log_term = adopt(state["log_term"], state["log_term"][lid_c])
+            log_key = adopt(state["log_key"], state["log_key"][lid_c])
+            log_val = adopt(state["log_val"], state["log_val"][lid_c])
+        new_len = jnp.where(accept,
+                            jnp.minimum(state["app_upto"],
+                                        state["app_from_len"] + W),
+                            state["log_len"])
+        new_len = jnp.where(accept & (state["log_len"] > new_len) &
+                            (my_prev_term == ldr_prev_term),
+                            jnp.maximum(state["log_len"], new_len), new_len)
     # followers adopt term & learn commit (piggybacked)
     term = jnp.where(due, jnp.maximum(state["term"], state["app_term"]),
                      state["term"])
@@ -305,14 +322,17 @@ def follower_step(state, static, cfg_c, *, reference=False):
                 ack_upto=ack_upto, app_arrive_t=app_arrive_t)
 
 
-def commit_step(state, static, cfg_c, *, reference=False):
+def commit_step(state, static, cfg_c, *, reference=False, backend="xla"):
     """Leader ingests due acks -> match_len; commits majority-replicated
     prefix (voters only); records entry commit times.
 
     The majority test is computed from the majority-th largest voter
     match_len (one (N,) sort) on the fast path — `counts(l) >= majority`
     iff `l <= that order statistic` since counts is non-increasing in l —
-    instead of the PR-1 O(L·N) comparison matrix (`reference=True`)."""
+    instead of the PR-1 O(L·N) comparison matrix (`reference=True`).
+    `backend="pallas"` computes the same order statistic blockwise with
+    the voter mask applied in-register (`kernels/raft_tick`, DESIGN.md
+    §8) — bit-identical (test invariant)."""
     N = state["role"].shape[0]
     L = state["log_term"].shape[1]
     tick = state["tick"]
@@ -345,17 +365,26 @@ def commit_step(state, static, cfg_c, *, reference=False):
     # restricted to entries of the current term (Raft §5.4.2)
     is_voter = jnp.asarray(static["is_voter"])
     lens = jnp.arange(L) + 1
-    if reference:
-        counts = jnp.sum((match_len[None, :] >=
-                          (jnp.arange(L) + 1)[:, None]) &
-                         is_voter[None, :] & state["alive"][None, :], axis=1)
-        can = counts >= static["majority"]
+    if backend == "pallas" and not reference:
+        commit = rt_ops.commit_majority(
+            match_len, is_voter & state["alive"],
+            state["log_term"][lid_c], state["term"][lid_c],
+            jnp.asarray(static["majority"], jnp.int32))
     else:
-        vmatch = jnp.where(is_voter & state["alive"], match_len, -1)
-        kth = jnp.sort(vmatch)[::-1][jnp.maximum(static["majority"] - 1, 0)]
-        can = lens <= kth
-    term_ok = state["log_term"][lid_c, jnp.arange(L)] == state["term"][lid_c]
-    commit = jnp.max(jnp.where(can & term_ok, lens, 0))
+        if reference:
+            counts = jnp.sum((match_len[None, :] >=
+                              (jnp.arange(L) + 1)[:, None]) &
+                             is_voter[None, :] & state["alive"][None, :],
+                             axis=1)
+            can = counts >= static["majority"]
+        else:
+            vmatch = jnp.where(is_voter & state["alive"], match_len, -1)
+            kth = jnp.sort(vmatch)[::-1][
+                jnp.maximum(static["majority"] - 1, 0)]
+            can = lens <= kth
+        term_ok = state["log_term"][lid_c, jnp.arange(L)] == \
+            state["term"][lid_c]
+        commit = jnp.max(jnp.where(can & term_ok, lens, 0))
     new_commit = jnp.where(has_leader,
                            jnp.maximum(state["commit_len"][lid_c], commit),
                            0)
@@ -372,11 +401,14 @@ def commit_step(state, static, cfg_c, *, reference=False):
                 writes_committed=state["writes_committed"] + n_new)
 
 
-def apply_step(state, static, cfg_c, *, reference=False):
+def apply_step(state, static, cfg_c, *, reference=False, backend="xla"):
     """All nodes apply committed entries to their KV state machine
     (bounded per tick; Property 3.2 order = log order).  `reference=True`
     keeps the PR-1 Python-unrolled loop of A sequential scatters as the
-    perf baseline; the fast path dedupes and scatters once."""
+    perf baseline; the fast path dedupes and scatters once.
+    `backend="pallas"` replaces the scatter with an in-register
+    last-wins select over (N, K) blocks (`kernels/raft_tick`, DESIGN.md
+    §8) — bit-identical (test invariant)."""
     N, L = state["log_term"].shape
     A = static["max_apply"]
     base = state["applied_len"]                               # (N,)
@@ -389,7 +421,9 @@ def apply_step(state, static, cfg_c, *, reference=False):
     vals = jnp.take_along_axis(state["log_val"], idx_c, axis=1)
     rows = jnp.broadcast_to(jnp.arange(N)[:, None], keys.shape)
     K = state["kv"].shape[1]
-    if reference:
+    if backend == "pallas" and not reference:
+        kv = rt_ops.apply_last_wins(state["kv"], keys, vals, valid)
+    elif reference:
         # PR-1: apply sequentially over the A offsets to preserve order
         kv = state["kv"]
         for a in range(A):
@@ -599,22 +633,32 @@ def cost_step(state, static, cfg_c):
     return dict(state, cost_accrued=state["cost_accrued"] + per_tick)
 
 
-def tick(state, static, cfg_c, rng, *, reference=False) -> Tuple[Dict, Dict]:
+def tick(state, static, cfg_c, rng, *, reference=False,
+         backend="xla") -> Tuple[Dict, Dict]:
     """One full protocol tick. Returns (state, per-tick metrics).
 
     `reference=True` selects the PR-1 formulations of the follower adopt,
     the commit majority test, and the apply scatter — bit-identical
     results, kept as the epoch-loop perf baseline (DESIGN.md §7.1,
     `benchmarks/perf_fleet.py`); the equivalence is a test invariant
-    (`tests/test_fleet.py`)."""
+    (`tests/test_fleet.py`).  `backend` selects the implementation of
+    those same three hot ops on the non-reference path: `"xla"` (the
+    PR-2 fast formulations, default) or `"pallas"` (the fused
+    `kernels/raft_tick` kernels, interpret-mode on CPU — DESIGN.md §8);
+    results are bit-identical across all three
+    (`tests/test_raft_tick_kernels.py`, `benchmarks/perf_tick.py`)."""
+    assert backend in ("xla", "pallas"), backend
     r_spot, r_work, r_lead, r_elec = jax.random.split(rng, 4)
     state, killed = spot_step(state, static, cfg_c, r_spot)
     state, (n_w, n_r, r_key) = workload_step(state, static, cfg_c, r_work)
     state = election_step(state, static, cfg_c, r_elec)
     state = leader_step(state, static, cfg_c, r_lead)
-    state = follower_step(state, static, cfg_c, reference=reference)
-    state = commit_step(state, static, cfg_c, reference=reference)
-    state = apply_step(state, static, cfg_c, reference=reference)
+    state = follower_step(state, static, cfg_c, reference=reference,
+                          backend=backend)
+    state = commit_step(state, static, cfg_c, reference=reference,
+                        backend=backend)
+    state = apply_step(state, static, cfg_c, reference=reference,
+                       backend=backend)
     state = observer_sync_step(state, static, cfg_c)
     state = read_step(state, static, cfg_c)
     state = cost_step(state, static, cfg_c)

@@ -1,0 +1,244 @@
+"""Pallas kernels for the BW-Raft consensus-tick hot path.
+
+Three hand-tiled kernels replace the generic gather/scatter HLO of the
+per-tick inner loops (`core/step.py`, DESIGN.md §8) — the single-leader
+fan-out bottleneck the paper scales around:
+
+  log_match_append   fused follower log-matching: the prev_idx/prev_term
+                     check, conflict truncation, and the window append in
+                     ONE pass over the (N, L) log block in VMEM.  The L
+                     axis runs sequentially so the prev-term gather (a
+                     one-hot reduction in-register) completes before any
+                     position at or past the append window is written —
+                     appends land at positions >= app_from_len > prev.
+  commit_majority    the leader commit rule: largest log length l such
+                     that a majority of voters report match_len >= l,
+                     with the voter/alive mask applied in-register.
+                     `count(match >= l)` is non-increasing in l, so the
+                     blockwise threshold count is exactly the kth-largest
+                     (k = majority) voter match_len of the XLA sort
+                     formulation — bit-identical, no sort needed.
+  apply_last_wins    the state-machine apply: for each KV column the last
+                     valid committed entry in the apply window wins —
+                     replacing the dedupe + single-scatter HLO with an
+                     in-register select over (N, K) blocks (A is small
+                     and static, so the window unrolls in VMEM).
+
+Contracts (DESIGN.md §8): all operands int32; DEAD/padded node slots are
+masked by `due`/`valid`/`voter_alive` inputs computed upstream, never
+inside the kernels; every kernel is bit-identical to its `ref.py` twin
+(the PR-1 formulations lifted from `core/step.py`) — a test invariant
+(`tests/test_raft_tick_kernels.py`).  Shape padding to block multiples
+happens in `ops.py`; padded rows arrive fully masked and padded columns
+can never be selected (append windows and commit lengths are bounded by
+the REAL L, passed statically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _iota2(shape, dim):
+    # TPU needs >=2D iota (pallas guide: 1D iota fails to compile)
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+# --------------------------------------------------------------------- #
+# 1. fused log-match + append
+# --------------------------------------------------------------------- #
+def _log_match_append_kernel(due_ref, from_ref, upto_ref, len_ref,
+                             term_ref, key_ref, val_ref,
+                             lterm_ref, lkey_ref, lval_ref,
+                             out_term_ref, out_key_ref, out_val_ref,
+                             new_len_ref, accept_ref,
+                             myprev_scr, ldrprev_scr,
+                             *, w: int, true_l: int, n_lblocks: int,
+                             block_l: int):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        myprev_scr[...] = jnp.zeros_like(myprev_scr)
+        ldrprev_scr[...] = jnp.zeros_like(ldrprev_scr)
+
+    frm = from_ref[:, 0]                                   # (bN,)
+    term = term_ref[...]                                   # (bN, bL)
+    lterm = lterm_ref[...]                                 # (1, bL)
+    cols = l * block_l + _iota2(term.shape, 1)             # (bN, bL)
+
+    # one-hot gather of the log-matching terms at prev = from-1: the hit
+    # column is unique, so the masked sum accumulates the exact value
+    prev_c = jnp.clip(frm - 1, 0, true_l - 1)
+    hit = cols == prev_c[:, None]
+    myprev_scr[...] += jnp.sum(jnp.where(hit, term, 0), axis=1,
+                               keepdims=True)
+    ldrprev_scr[...] += jnp.sum(jnp.where(hit, lterm, 0), axis=1,
+                                keepdims=True)
+
+    # the prev-term accumulators are complete for every row whose append
+    # window reaches this block: writes happen at cols >= frm > prev, and
+    # the L grid axis runs ascending
+    due = due_ref[:, 0] != 0
+    match = (frm - 1 < 0) | (myprev_scr[:, 0] == ldrprev_scr[:, 0])
+    accept = due & match
+    hi = jnp.minimum(upto_ref[:, 0], frm + w)
+    sel = accept[:, None] & (cols >= frm[:, None]) & (cols < hi[:, None])
+    out_term_ref[...] = jnp.where(sel, lterm, term)
+    out_key_ref[...] = jnp.where(sel, lkey_ref[...], key_ref[...])
+    out_val_ref[...] = jnp.where(sel, lval_ref[...], val_ref[...])
+
+    @pl.when(l == n_lblocks - 1)
+    def _finish():
+        ln = len_ref[:, 0]
+        nl = jnp.where(accept, hi, ln)
+        # a matching follower whose log already extends past the shipped
+        # window keeps its longer log (same rule as core/step.py)
+        nl = jnp.where(accept & (ln > nl) &
+                       (myprev_scr[:, 0] == ldrprev_scr[:, 0]),
+                       jnp.maximum(ln, nl), nl)
+        new_len_ref[...] = nl[:, None]
+        accept_ref[...] = accept.astype(jnp.int32)[:, None]
+
+
+def log_match_append_kernel(log_term, log_key, log_val,
+                            ldr_term, ldr_key, ldr_val,
+                            log_len, app_from_len, app_upto, due,
+                            *, w: int, true_l: int,
+                            block_n: int = 8, block_l: int = 128,
+                            interpret: bool = True):
+    """Fused log-match + append over padded operands.
+
+    log/out arrays (N, L); leader rows (1, L); per-node vectors (N, 1)
+    int32 (`due` nonzero = deliverable batch this tick).  N % block_n ==
+    0 and L % block_l == 0 (ops.py pads); `true_l` is the unpadded log
+    window — clip bound of the prev index, identical to the XLA paths.
+    Returns (out_term, out_key, out_val, new_len, accept)."""
+    N, L = log_term.shape
+    nN, nL = N // block_n, L // block_l
+    kernel = functools.partial(_log_match_append_kernel, w=w, true_l=true_l,
+                               n_lblocks=nL, block_l=block_l)
+    vec = pl.BlockSpec((block_n, 1), lambda n, l: (n, 0))
+    mat = pl.BlockSpec((block_n, block_l), lambda n, l: (n, l))
+    row = pl.BlockSpec((1, block_l), lambda n, l: (0, l))
+    return pl.pallas_call(
+        kernel,
+        grid=(nN, nL),
+        in_specs=[vec, vec, vec, vec, mat, mat, mat, row, row, row],
+        out_specs=[mat, mat, mat, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((N, L), jnp.int32)] * 3 +
+                  [jax.ShapeDtypeStruct((N, 1), jnp.int32)] * 2,
+        scratch_shapes=[pltpu.VMEM((block_n, 1), jnp.int32),
+                        pltpu.VMEM((block_n, 1), jnp.int32)],
+        interpret=interpret,
+    )(due, app_from_len, app_upto, log_len,
+      log_term, log_key, log_val, ldr_term, ldr_key, ldr_val)
+
+
+# --------------------------------------------------------------------- #
+# 2. commit majority (kth-largest voter match_len, mask in-register)
+# --------------------------------------------------------------------- #
+def _commit_majority_kernel(majority_ref, curterm_ref, match_ref, vmask_ref,
+                            lterm_ref, commit_ref, best_scr,
+                            *, true_l: int, n_lblocks: int, block_l: int):
+    l = pl.program_id(0)
+
+    @pl.when(l == 0)
+    def _init():
+        best_scr[0, 0] = 0
+
+    # voter mask applied in-register: DEAD / non-voter rows count -1
+    vmatch = jnp.where(vmask_ref[...] != 0, match_ref[...], -1)   # (N, 1)
+    lens = l * block_l + _iota2(lterm_ref.shape, 1) + 1           # (1, bL)
+    # counts(l) = #voters with match >= l is non-increasing in l, so
+    # `counts >= majority` selects exactly the lens <= the majority-th
+    # largest voter match_len — the sort-free order statistic
+    counts = jnp.sum((vmatch >= lens).astype(jnp.int32), axis=0,
+                     keepdims=True)                               # (1, bL)
+    can = counts >= majority_ref[0, 0]
+    term_ok = lterm_ref[...] == curterm_ref[0, 0]
+    ok = can & term_ok & (lens <= true_l)
+    best_scr[0, 0] = jnp.maximum(best_scr[0, 0],
+                                 jnp.max(jnp.where(ok, lens, 0)))
+
+    @pl.when(l == n_lblocks - 1)
+    def _finish():
+        commit_ref[0, 0] = best_scr[0, 0]
+
+
+def commit_majority_kernel(match_len, voter_alive, ldr_term, ldr_cur_term,
+                           majority, *, true_l: int, block_l: int = 128,
+                           interpret: bool = True):
+    """Largest commit length with majority voter replication.
+
+    match_len/voter_alive (N, 1) int32; ldr_term (1, L) — the leader's
+    per-entry terms (commit is restricted to current-term entries, Raft
+    §5.4.2); majority/ldr_cur_term (1, 1).  L % block_l == 0; `true_l`
+    bounds candidate lengths to the unpadded window.  Returns (1, 1)."""
+    N = match_len.shape[0]
+    L = ldr_term.shape[1]
+    nL = L // block_l
+    kernel = functools.partial(_commit_majority_kernel, true_l=true_l,
+                               n_lblocks=nL, block_l=block_l)
+    scalar = pl.BlockSpec((1, 1), lambda l: (0, 0),
+                          memory_space=pltpu.SMEM)
+    col = pl.BlockSpec((N, 1), lambda l: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nL,),
+        in_specs=[scalar, scalar, col, col,
+                  pl.BlockSpec((1, block_l), lambda l: (0, l))],
+        out_specs=pl.BlockSpec((1, 1), lambda l: (0, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(majority, ldr_cur_term, match_len, voter_alive, ldr_term)
+
+
+# --------------------------------------------------------------------- #
+# 3. last-wins apply
+# --------------------------------------------------------------------- #
+def _apply_last_wins_kernel(keys_ref, vals_ref, valid_ref, kv_ref, out_ref,
+                            *, n_apply: int, block_k: int):
+    k = pl.program_id(1)
+    cols = k * block_k + _iota2(kv_ref.shape, 1)          # (bN, bK)
+    out = kv_ref[...]
+    # ascending apply order: later entries overwrite earlier ones — the
+    # in-register form of "dedupe then scatter once" (log order,
+    # Property 3.2).  A is small and static, so this unrolls.
+    for a in range(n_apply):
+        m = (valid_ref[:, a] != 0)[:, None] & \
+            (keys_ref[:, a][:, None] == cols)
+        out = jnp.where(m, vals_ref[:, a][:, None], out)
+    out_ref[...] = out
+
+
+def apply_last_wins_kernel(kv, keys, vals, valid, *,
+                           block_n: int = 8, block_k: int = 128,
+                           interpret: bool = True):
+    """Apply committed (key, val) windows to the KV rows, last write wins.
+
+    kv (N, K); keys/vals/valid (N, A) int32 — entry a of row i writes
+    kv[i, keys[i, a]] = vals[i, a] iff valid[i, a], later a wins.  Keys
+    outside [0, K) never match a column — the in-register equivalent of
+    scatter mode="drop".  N % block_n == 0, K % block_k == 0."""
+    N, K = kv.shape
+    A = keys.shape[1]
+    nN, nK = N // block_n, K // block_k
+    kernel = functools.partial(_apply_last_wins_kernel, n_apply=A,
+                               block_k=block_k)
+    win = pl.BlockSpec((block_n, A), lambda n, k: (n, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nN, nK),
+        in_specs=[win, win, win,
+                  pl.BlockSpec((block_n, block_k), lambda n, k: (n, k))],
+        out_specs=pl.BlockSpec((block_n, block_k), lambda n, k: (n, k)),
+        out_shape=jax.ShapeDtypeStruct((N, K), jnp.int32),
+        interpret=interpret,
+    )(keys, vals, valid, kv)

@@ -1,0 +1,83 @@
+"""Reference twins of the raft_tick Pallas kernels — PR-1 formulations.
+
+Each function matches the contract of its `kernel.py` twin at the
+*unpadded* op signature (ops.py owns padding) and is lifted from the
+`reference=True` branches of `core/step.py`: the (N, W) gather + masked
+scatter window adopt, the O(L·N) commit-count matrix, and the sequential
+apply scatters.  Kernel == ref **bit-identically** is the layer's test
+invariant (DESIGN.md §8, `tests/test_raft_tick_kernels.py`) — int32
+in, int32 out, no tolerance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def log_match_append_ref(log_term, log_key, log_val,
+                         ldr_term, ldr_key, ldr_val,
+                         log_len, app_from_len, app_upto, due, *, w: int):
+    """Follower log-matching + window adopt (PR-1 gather/scatter form).
+
+    log_* (N, L); ldr_* (L,) — the leader's log row; per-node vectors
+    (N,); `due` bool.  Returns (out_term, out_key, out_val, new_len,
+    accept) with accept int32 — same tuple as the kernel."""
+    N, L = log_term.shape
+    prev = app_from_len - 1
+    prev_c = jnp.clip(prev, 0, L - 1)
+    my_prev_term = jnp.take_along_axis(log_term, prev_c[:, None],
+                                       axis=1)[:, 0]
+    ldr_prev_term = ldr_term[prev_c]
+    match = (prev < 0) | (my_prev_term == ldr_prev_term)
+    accept = due & match
+
+    base = jnp.where(accept, app_from_len, 0)
+    widx = base[:, None] + jnp.arange(w)[None, :]             # (N, W)
+    valid = accept[:, None] & (widx < app_upto[:, None]) & (widx < L)
+    widx_c = jnp.clip(widx, 0, L - 1)
+    rows = jnp.broadcast_to(jnp.arange(N)[:, None], widx.shape)
+    put = lambda dst, src: dst.at[
+        jnp.where(valid, rows, N), jnp.where(valid, widx_c, L)].set(
+        src, mode="drop")
+    out_term = put(log_term, ldr_term[widx_c])
+    out_key = put(log_key, ldr_key[widx_c])
+    out_val = put(log_val, ldr_val[widx_c])
+
+    new_len = jnp.where(accept, jnp.minimum(app_upto, app_from_len + w),
+                        log_len)
+    new_len = jnp.where(accept & (log_len > new_len) &
+                        (my_prev_term == ldr_prev_term),
+                        jnp.maximum(log_len, new_len), new_len)
+    return out_term, out_key, out_val, new_len, accept.astype(jnp.int32)
+
+
+def commit_majority_ref(match_len, voter_alive, ldr_term, ldr_cur_term,
+                        majority):
+    """Commit length by the O(L·N) threshold-count matrix (PR-1 form).
+
+    match_len (N,) int32; voter_alive (N,) bool (voter & alive, the
+    in-register mask of the kernel); ldr_term (L,); scalars
+    ldr_cur_term / majority.  Returns the scalar commit length."""
+    L = ldr_term.shape[0]
+    lens = jnp.arange(L) + 1
+    counts = jnp.sum((match_len[None, :] >= lens[:, None]) &
+                     voter_alive[None, :], axis=1)
+    can = counts >= majority
+    term_ok = ldr_term == ldr_cur_term
+    return jnp.max(jnp.where(can & term_ok, lens, 0))
+
+
+def apply_last_wins_ref(kv, keys, vals, valid):
+    """State-machine apply as A sequential scatters (PR-1 form):
+    ascending apply order makes the last committed entry win per key.
+
+    kv (N, K); keys/vals (N, A) int32; valid (N, A) bool.  Out-of-range
+    keys drop (scatter mode="drop"), matching the kernel's no-column-
+    matches behavior.  Returns the updated (N, K) kv."""
+    N, K = kv.shape
+    A = keys.shape[1]
+    rows = jnp.arange(N)
+    for a in range(A):
+        kv = kv.at[jnp.where(valid[:, a], rows, N),
+                   jnp.where(valid[:, a], keys[:, a], K)].set(
+            vals[:, a], mode="drop")
+    return kv

@@ -1,0 +1,266 @@
+"""The raft_tick kernel contract (DESIGN.md §8): every Pallas kernel is
+**bit-identical** to its `ref.py` twin (the PR-1 formulations lifted from
+`core/step.py`) under interpret mode — across padded fleets, dead-node
+masks, and degenerate windows (empty log, single voter, all-observers) —
+and a `backend="pallas"` simulation reproduces the `backend="xla"`
+trajectory exactly, solo and batched.
+
+The randomized sweeps run through hypothesis when it is installed
+(requirements-dev.txt) and fall back to fixed-seed sweeps otherwise, so
+the bit-identity invariant is enforced either way."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import state as SM
+from repro.core import step as step_mod
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.fleet import FleetSim, MemberSpec
+from repro.core.runtime import BWRaftSim, make_cfg_arrays
+from repro.kernels.raft_tick import ops
+from repro.kernels.raft_tick import ref as R
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------- #
+# shared case builders / checkers
+# --------------------------------------------------------------------- #
+def _log_match_case(N, L, W, seed, *, due_frac=0.5, empty_log=False):
+    rng = np.random.default_rng(seed)
+    mk = lambda hi, sh: jnp.asarray(rng.integers(0, hi, sh), jnp.int32)
+    hi_len = 1 if empty_log else L + 1
+    args = dict(
+        log_term=mk(4, (N, L)), log_key=mk(8, (N, L)),
+        log_val=mk(64, (N, L)),
+        ldr_term=mk(4, (L,)), ldr_key=mk(8, (L,)), ldr_val=mk(64, (L,)),
+        log_len=mk(hi_len, (N,)), app_from_len=mk(hi_len, (N,)),
+        app_upto=mk(hi_len, (N,)),
+        due=jnp.asarray(rng.random(N) < due_frac),
+    )
+    return args
+
+
+def _check_log_match(N, L, W, seed, **kw):
+    args = _log_match_case(N, L, W, seed, **kw)
+    got = ops.log_match_append(*args.values(), w=W)
+    want = R.log_match_append_ref(*args.values(), w=W)
+    names = ("log_term", "log_key", "log_val", "new_len", "accept")
+    for name, g, w_ in zip(names, got, want):
+        w_ = (w_ != 0) if name == "accept" else w_
+        assert np.array_equal(np.asarray(g), np.asarray(w_)), \
+            (name, N, L, W, seed)
+
+
+def _check_commit(N, L, majority, curterm, seed, dead_frac):
+    rng = np.random.default_rng(seed)
+    match_len = jnp.asarray(rng.integers(0, L + 1, N), jnp.int32)
+    voter_alive = jnp.asarray(rng.random(N) >= dead_frac)
+    ldr_term = jnp.asarray(rng.integers(0, 4, L), jnp.int32)
+    got = ops.commit_majority(match_len, voter_alive, ldr_term, curterm,
+                              majority)
+    want = R.commit_majority_ref(match_len, voter_alive, ldr_term, curterm,
+                                 majority)
+    assert int(got) == int(want), (N, L, majority, seed)
+    if majority <= N:        # the sort form indexes position majority-1
+        vmatch = jnp.where(voter_alive, match_len, -1)
+        kth = jnp.sort(vmatch)[::-1][max(majority - 1, 0)]
+        lens = jnp.arange(L) + 1
+        sort_form = jnp.max(jnp.where((lens <= kth) & (ldr_term == curterm),
+                                      lens, 0))
+        assert int(got) == int(sort_form), (N, L, majority, seed)
+
+
+def _check_apply(N, K, A, seed):
+    rng = np.random.default_rng(seed)
+    kv = jnp.asarray(rng.integers(-4, 4, (N, K)), jnp.int32)
+    keys = jnp.asarray(rng.integers(-2, K + 2, (N, A)), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 64, (N, A)), jnp.int32)
+    valid = jnp.asarray(rng.random((N, A)) < 0.7)
+    got = ops.apply_last_wins(kv, keys, vals, valid)
+    want = R.apply_last_wins_ref(kv, keys, vals, valid)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), (N, K, A,
+                                                               seed)
+
+
+# --------------------------------------------------------------------- #
+# property tests: hypothesis when available, fixed-seed sweep otherwise
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(N=st.integers(1, 24), L=st.integers(1, 200),
+           W=st.integers(1, 64), seed=st.integers(0, 2**31))
+    def test_log_match_append_matches_ref(N, L, W, seed):
+        """Fused kernel == (N, W) gather/scatter twin, any window."""
+        _check_log_match(N, L, W, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(N=st.integers(1, 24), L=st.integers(1, 200),
+           majority=st.integers(1, 24), curterm=st.integers(0, 4),
+           seed=st.integers(0, 2**31), dead_frac=st.floats(0.0, 1.0))
+    def test_commit_majority_matches_ref(N, L, majority, curterm, seed,
+                                         dead_frac):
+        """Blockwise order statistic == count matrix == sort form,
+        under arbitrary voter/alive masks (incl. all-dead)."""
+        _check_commit(N, L, majority, curterm, seed, dead_frac)
+
+    @settings(max_examples=25, deadline=None)
+    @given(N=st.integers(1, 24), K=st.integers(1, 200),
+           A=st.integers(1, 8), seed=st.integers(0, 2**31))
+    def test_apply_last_wins_matches_ref(N, K, A, seed):
+        """In-register select == A sequential scatters, incl. duplicate
+        keys (last wins) and out-of-range keys (drop semantics)."""
+        _check_apply(N, K, A, seed)
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_log_match_append_matches_ref(seed):
+        rng = np.random.default_rng(100 + seed)
+        _check_log_match(int(rng.integers(1, 24)),
+                         int(rng.integers(1, 200)),
+                         int(rng.integers(1, 64)), seed)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_commit_majority_matches_ref(seed):
+        rng = np.random.default_rng(200 + seed)
+        _check_commit(int(rng.integers(1, 24)), int(rng.integers(1, 200)),
+                      int(rng.integers(1, 24)), int(rng.integers(0, 4)),
+                      seed, float(rng.random()))
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_apply_last_wins_matches_ref(seed):
+        rng = np.random.default_rng(300 + seed)
+        _check_apply(int(rng.integers(1, 24)), int(rng.integers(1, 200)),
+                     int(rng.integers(1, 8)), seed)
+
+
+# --------------------------------------------------------------------- #
+# directed degenerate cases
+# --------------------------------------------------------------------- #
+def test_log_match_append_degenerate_windows():
+    """Empty logs (from/upto/len all 0), W wider than L, single node,
+    everyone-due and nobody-due."""
+    for N, L, W, kw in [(1, 1, 1, {}), (3, 7, 64, {"empty_log": True}),
+                        (5, 33, 256, {"due_frac": 1.0}),
+                        (4, 16, 8, {"due_frac": 0.0})]:
+        _check_log_match(N, L, W, 7, **kw)
+
+
+def test_commit_majority_single_voter_and_no_voter():
+    """majority=1 with one live voter commits its match; zero live
+    voters (all observers / all dead — Property 3.4) commit nothing."""
+    ldr_term = jnp.zeros(16, jnp.int32)
+    one = ops.commit_majority(jnp.asarray([5], jnp.int32),
+                              jnp.asarray([True]), ldr_term, 0, 1)
+    none = ops.commit_majority(jnp.asarray([5, 9], jnp.int32),
+                               jnp.asarray([False, False]), ldr_term, 0, 1)
+    assert int(one) == 5 and int(none) == 0
+
+
+def test_ops_batch_under_vmap():
+    """vmapped ops over a padded 'fleet' axis == per-member ref calls —
+    the form `FleetSim(backend="pallas")` exercises."""
+    B, N, L, K, A, W = 3, 9, 70, 50, 4, 16
+    cases = [_log_match_case(N, L, W, s) for s in range(B)]
+    batched = {k: jnp.stack([c[k] for c in cases]) for k in cases[0]}
+    # (vmap rebuilds dict pytrees in sorted-key order — pass by name)
+    got = jax.vmap(lambda c: ops.log_match_append(
+        c["log_term"], c["log_key"], c["log_val"], c["ldr_term"],
+        c["ldr_key"], c["ldr_val"], c["log_len"], c["app_from_len"],
+        c["app_upto"], c["due"], w=W))(batched)
+    for b in range(B):
+        want = R.log_match_append_ref(*cases[b].values(), w=W)
+        for g, w_ in zip(got[:4], want[:4]):
+            assert np.array_equal(np.asarray(g[b]), np.asarray(w_))
+
+    rng = np.random.default_rng(0)
+    kv = jnp.asarray(rng.integers(0, 4, (B, N, K)), jnp.int32)
+    keys = jnp.asarray(rng.integers(0, K, (B, N, A)), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 64, (B, N, A)), jnp.int32)
+    valid = jnp.asarray(rng.random((B, N, A)) < 0.7)
+    got = jax.vmap(ops.apply_last_wins)(kv, keys, vals, valid)
+    for b in range(B):
+        want = R.apply_last_wins_ref(kv[b], keys[b], vals[b], valid[b])
+        assert np.array_equal(np.asarray(got[b]), np.asarray(want))
+
+
+# --------------------------------------------------------------------- #
+# end-to-end: the pallas backend reproduces the xla trajectory
+# --------------------------------------------------------------------- #
+def _small_cluster(name="ktiny", followers=(2, 1), max_log=384):
+    sites = tuple(
+        SiteConfig(f"{name}-s{i}", followers=f, rtt_intra=1,
+                   rtt_inter=6 + 2 * i, on_demand_price=0.0416,
+                   spot_price_mean=0.0125)
+        for i, f in enumerate(followers))
+    return ClusterConfig(name=name, sites=sites, max_log=max_log,
+                         key_space=128, max_secretaries=2,
+                         max_observers=4, period_ticks=40)
+
+
+def test_pallas_tick_trajectory_equals_xla():
+    """A 60-tick jitted scan on the pallas backend is bit-identical to
+    the xla backend — elections, commits, applies, the lot."""
+    cfg = _small_cluster()
+    static = SM.build_static(cfg)
+    cfg_c = make_cfg_arrays(cfg, write_rate=6.0, read_rate=12.0, phi=0.05)
+    state0 = SM.init_state(cfg, static)
+    rngs = jax.random.split(jax.random.PRNGKey(3), 60)
+
+    def run(backend):
+        def body(c, r):
+            s, _ = step_mod.tick(c, static, cfg_c, r, backend=backend)
+            return s, None
+        out, _ = jax.jit(lambda s: jax.lax.scan(body, s, rngs))(state0)
+        return jax.tree.map(np.asarray, out)
+
+    x, p = run("xla"), run("pallas")
+    for k in x:
+        assert np.array_equal(x[k], p[k]), f"state[{k}] diverged"
+
+
+def _assert_reports_equal(a, b, ctx=""):
+    """Dataclass equality, NaN-tolerant on the latency floats (NaN means
+    'no committed writes this epoch' on both sides)."""
+    import dataclasses
+    for f in dataclasses.fields(a):
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, float) and np.isnan(x) and np.isnan(y):
+            continue
+        assert x == y, f"{ctx}: {f.name}: pallas={y} xla={x}"
+
+
+def test_pallas_backend_sim_and_fleet_match_xla():
+    """BWRaftSim/FleetSim grow a `backend` knob: reports (and the padded
+    heterogeneous-fleet dead-slot masking) are identical across
+    backends."""
+    small = _small_cluster("kpad", followers=(1, 1), max_log=256)
+    big = _small_cluster("kbig", followers=(2, 2), max_log=384)
+    solo_kw = dict(write_rate=6.0, read_rate=12.0, phi=0.05, seed=2,
+                   manage_resources=False, prelease=(1, 2))
+    rx = BWRaftSim(big, **solo_kw, backend="xla").run(2)
+    rp = BWRaftSim(big, **solo_kw, backend="pallas").run(2)
+    for e, (a, b) in enumerate(zip(rx, rp)):
+        _assert_reports_equal(a, b, ctx=f"solo epoch {e}")
+
+    specs = [MemberSpec(cfg=small, write_rate=6.0, read_rate=12.0, seed=0,
+                        manage_resources=False),
+             MemberSpec(cfg=big, mode="raft", write_rate=8.0,
+                        read_rate=8.0, seed=1, manage_resources=False)]
+    fx = FleetSim(specs, backend="xla")
+    fp = FleetSim(specs, backend="pallas")
+    reps_x, reps_p = fx.run(2), fp.run(2)
+    for i in range(len(specs)):
+        for e, (a, b) in enumerate(zip(reps_x[i], reps_p[i])):
+            _assert_reports_equal(a, b, ctx=f"member {i} epoch {e}")
+    # padding stays inert through the kernels too
+    st_np = {k: np.asarray(v) for k, v in fp.state.items()}
+    assert (st_np["role"][0, small.max_nodes:] == SM.DEAD).all()
+    assert not st_np["alive"][0, small.max_nodes:].any()
+
+    with pytest.raises(AssertionError):
+        FleetSim(specs, pipeline="host", backend="pallas")
