@@ -51,26 +51,30 @@ def tick_ms(ticks: float) -> float:
 
 
 def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
-                 shards=2) -> List[MemberSpec]:
+                 shards=2, group_id=0) -> List[MemberSpec]:
     """Fleet members for one (bwraft, raft, multiraft-shards) comparison
     point: 2 + `shards` members, batched into whatever FleetSim they join.
-    """
+    The shard members carry the group identity `group_id` (DESIGN.md §9),
+    so the fleet runs the 2PC coupling in-graph and reports the shards as
+    one grouped Multi-Raft system (`FleetSim.group_reports[group_id]`);
+    comparison points sharing a fleet must use distinct group ids."""
     return ([MemberSpec(cfg=cfg, mode="bwraft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed),
              MemberSpec(cfg=cfg, mode="raft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed)]
             + multiraft.shard_specs(cfg, shards=shards,
                                     write_rate=write_rate,
-                                    read_rate=read_rate, seed=seed))
+                                    read_rate=read_rate, seed=seed,
+                                    group_id=group_id))
 
 
-def collect_systems(cfg, member_reports, *, shards, epoch):
-    """Inverse of `system_specs`: slice one comparison point's member
-    report lists back into (bwraft, raft, multiraft) final reports."""
-    bw = member_reports[0][-1]
-    og = member_reports[1][-1]
-    mr = multiraft.aggregate_shards(
-        epoch, [member_reports[2 + i][-1] for i in range(shards)], cfg)
+def collect_systems(fleet, lo, *, group_id):
+    """Inverse of `system_specs`: the comparison point whose members
+    start at slot `lo` becomes (bwraft, raft, grouped-multiraft) final
+    reports — the Multi-Raft one from the in-graph group digest."""
+    bw = fleet.members[lo].reports[-1]
+    og = fleet.members[lo + 1].reports[-1]
+    mr = fleet.group_reports[group_id][-1]
     return bw, og, mr
 
 
@@ -79,8 +83,9 @@ def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
     """(bwraft, raft, multiraft) steady-state reports.
 
     Fleet path: all three systems (2 + `shards` members) advance in one
-    batched program.  Sequential path: the pre-fleet per-system loop.
-    """
+    batched program, the Multi-Raft shards as one device-coupled group
+    (DESIGN.md §9).  Sequential path: the pre-fleet per-system loop with
+    the frozen sequential Multi-Raft reference."""
     if not USE_FLEET:
         bw = BWRaftSim(cfg, mode="bwraft", write_rate=write_rate,
                        read_rate=read_rate, phi=phi, seed=seed)
@@ -88,10 +93,12 @@ def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
                        read_rate=read_rate, phi=phi, seed=seed)
         mr = multiraft.MultiRaftSim(cfg, shards=shards,
                                     write_rate=write_rate,
-                                    read_rate=read_rate, seed=seed)
+                                    read_rate=read_rate, seed=seed,
+                                    engine="sequential")
         return bw.run(epochs)[-1], og.run(epochs)[-1], mr.run(epochs)[-1]
 
     specs = system_specs(cfg, write_rate=write_rate, read_rate=read_rate,
-                         seed=seed, phi=phi, shards=shards)
-    reports = FleetSim(specs).run(epochs)
-    return collect_systems(cfg, reports, shards=shards, epoch=epochs - 1)
+                         seed=seed, phi=phi, shards=shards, group_id=0)
+    fleet = FleetSim(specs)
+    fleet.run(epochs)
+    return collect_systems(fleet, 0, group_id=0)

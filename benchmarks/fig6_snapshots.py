@@ -1,6 +1,11 @@
-"""Fig. 6: read/write latency snapshots over epochs (3 systems)."""
+"""Fig. 6: read/write latency snapshots over epochs (3 systems).
+
+Multi-Raft runs on the grouped fleet engine (measured 2PC latency,
+DESIGN.md §9) unless `--sequential` selects the frozen host reference.
+"""
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import PAPER_CLUSTER, Row, run_systems, tick_ms
 from repro.core.runtime import BWRaftSim
 from repro.core.multiraft import MultiRaftSim
@@ -13,7 +18,9 @@ def run(quick: bool = True):
     og = BWRaftSim(PAPER_CLUSTER, mode="raft", write_rate=8.0,
                    read_rate=48.0, seed=2)
     mr = MultiRaftSim(PAPER_CLUSTER, shards=2, write_rate=8.0,
-                      read_rate=48.0, seed=2)
+                      read_rate=48.0, seed=2,
+                      engine="fleet" if common.USE_FLEET
+                      else "sequential")
     bw_r, og_r, mr_r = bw.run(epochs), og.run(epochs), mr.run(epochs)
     tail = max(epochs // 2, 1)
     for name, rs in [("bwraft", bw_r), ("original", og_r),

@@ -3,7 +3,10 @@
 The whole grid — every follower count x {bwraft, original, multiraft
 shards} — runs as ONE FleetSim: the smaller clusters are padded to the
 largest topology's static shape, so the entire figure costs a single jit
-compile (DESIGN.md §7) instead of one per (load, system) point.
+compile (DESIGN.md §7) instead of one per (load, system) point.  Each
+point's Multi-Raft shards form one device-coupled group (distinct
+`group_id` per point, ragged shard counts included — DESIGN.md §9), so
+the baseline's 2PC tail latencies are measured in the same dispatch.
 """
 from benchmarks import common
 from benchmarks.common import (collect_systems, run_systems,
@@ -20,15 +23,14 @@ def run(quick: bool = True):
 
     if common.USE_FLEET:
         specs, spans = [], []
-        for f, w, cfg, shards in points:
-            spans.append((len(specs), shards))
+        for gid, (f, w, cfg, shards) in enumerate(points):
+            spans.append((len(specs), gid))
             specs += system_specs(cfg, write_rate=w, read_rate=w * 3,
-                                  shards=shards)
-        reports = FleetSim(specs).run(epochs)
-        results = [
-            collect_systems(cfg, reports[lo:lo + 2 + shards],
-                            shards=shards, epoch=epochs - 1)
-            for (f, w, cfg, shards), (lo, _) in zip(points, spans)]
+                                  shards=shards, group_id=gid)
+        fleet = FleetSim(specs)
+        fleet.run(epochs)
+        results = [collect_systems(fleet, lo, group_id=gid)
+                   for lo, gid in spans]
     else:
         results = [run_systems(cfg, write_rate=w, read_rate=w * 3,
                                epochs=epochs, shards=shards)

@@ -1,4 +1,8 @@
-"""Fig. 8: overall goodput + expense comparison (headline numbers)."""
+"""Fig. 8: overall goodput + expense comparison (headline numbers).
+
+The Multi-Raft baseline runs as a device-coupled shard group on the
+fleet path (DESIGN.md §9): its write p95/p99 and the 2PC prepare/abort
+census below are measured in-graph, not synthesized post hoc."""
 from benchmarks.common import PAPER_CLUSTER, run_systems
 
 
@@ -11,6 +15,10 @@ def run(quick: bool = True):
         rows.append((f"fig8.cost.{name}", r.cost * 1e6, "usd_x1e6"))
         rows.append((f"fig8.cost_per_kop.{name}",
                      1e9 * r.cost / max(r.goodput, 1), "usd_per_kop_x1e6"))
+    rows.append(("fig8.two_pc_prepares.multiraft", mr.two_pc_prepares,
+                 "prepares_per_epoch"))
+    rows.append(("fig8.two_pc_aborts.multiraft", mr.two_pc_aborts,
+                 "aborts_per_epoch"))
     rows.append(("fig8.goodput_gain_vs_original",
                  bw.goodput / max(og.goodput, 1), "x"))
     rows.append(("fig8.cost_saving_vs_multiraft",

@@ -1,6 +1,11 @@
-"""Fig. 9: latency distribution / 95th-percentile SLO comparison."""
+"""Fig. 9: latency distribution / 95th-percentile SLO comparison.
+
+Multi-Raft runs on the grouped fleet engine (measured 2PC tails,
+DESIGN.md §9) unless `--sequential` selects the frozen host reference.
+"""
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import PAPER_CLUSTER, tick_ms
 from repro.core.runtime import BWRaftSim
 from repro.core.multiraft import MultiRaftSim
@@ -12,7 +17,9 @@ def run(quick: bool = True):
     og = BWRaftSim(PAPER_CLUSTER, mode="raft", write_rate=16.0,
                    read_rate=48.0, seed=4)
     mr = MultiRaftSim(PAPER_CLUSTER, shards=2, write_rate=16.0,
-                      read_rate=48.0, seed=4)
+                      read_rate=48.0, seed=4,
+                      engine="fleet" if common.USE_FLEET
+                      else "sequential")
     rows = []
     reps = {"bwraft": bw.run(epochs), "original": og.run(epochs),
             "multiraft": mr.run(epochs)}

@@ -43,6 +43,13 @@ The host-side control plane (Algorithm 1 "peek", MCSA "peak" leasing)
 still runs per member between epochs, reusing `runtime.ClusterController`
 — it reads the (N,) role/alive vectors from the digest and writes back
 only the four (B, N) role/wiring arrays for the members that manage.
+
+Shard groups (DESIGN.md §9): members with `group_id >= 0` are the shards
+of ONE Multi-Raft system.  The epoch function reduces their digests to
+per-group digests in-graph (segment ops over the batch axis, same
+compiled dispatch) and `group_reports` serves them as `MultiRaftReport`s
+— a whole S-shard x B-system baseline sweep is one program, its 2PC
+rounds measured per request by the tick itself.
 """
 from __future__ import annotations
 
@@ -90,6 +97,18 @@ class MemberSpec:
     # never manage again — eligible for the single-dispatch multi-epoch
     # scan when combined with manage_resources=False (DESIGN.md §7.1)
     prelease: Optional[Tuple[int, int]] = None
+    # shard-group identity (DESIGN.md §9): members sharing a group_id >= 0
+    # are the shards of ONE Multi-Raft system — the fleet reduces their
+    # digests to a per-group digest in-graph and reports them as a single
+    # `MultiRaftReport`.  `shards_per_group` is the declared group size
+    # (validated against the actual member count — the ragged-group
+    # guard); `cross_shard_frac` is the 2PC coupling fraction χ;
+    # `two_pc_ticks` overrides the 2PC round trip (None -> derived from
+    # the topology via `multiraft.two_pc_penalty`).
+    group_id: int = -1
+    shards_per_group: int = 1
+    cross_shard_frac: float = 0.0
+    two_pc_ticks: Optional[int] = None
 
     @property
     def manage(self) -> bool:
@@ -117,47 +136,91 @@ def total_compile_count() -> int:
     return sum(fn.cache_size() for fn in _FLEET_EPOCH_CACHE.values())
 
 
-def _vmapped_epoch(shapes: FleetShapes, shared: Dict, backend: str = "xla"):
+# per-member digest fields reduced to a per-group digest in-graph
+# (DESIGN.md §9): everything a MultiRaftReport needs, pooled over the
+# shards of each group by a segment sum (read_lat_max by a segment max)
+_GROUP_SUM_KEYS = ("write_lat_hist", "reads_arrived", "writes_arrived",
+                   "reads_served", "read_lat_sum", "cost_delta", "killed",
+                   "no_leader_ticks", "leader_changes", "cross_arrived",
+                   "two_pc_prepares", "two_pc_aborts")
+
+
+def _group_digest(digest: Dict, gids, n_groups: int) -> Dict:
+    """Reduce per-member digest leaves (B, ...) to per-group leaves
+    (G, ...).  Ungrouped members carry segment id G and are dropped by
+    the segment ops — the masking rule that makes ragged group sizes and
+    mixed grouped/ungrouped fleets shape-free (DESIGN.md §9)."""
+    out = {k: jax.ops.segment_sum(digest[k], gids, num_segments=n_groups)
+           for k in _GROUP_SUM_KEYS}
+    out["read_lat_max"] = jax.ops.segment_max(
+        digest["read_lat_max"], gids, num_segments=n_groups)
+    return out
+
+
+def _vmapped_epoch(shapes: FleetShapes, shared: Dict, backend: str = "xla",
+                   n_groups: int = 0):
     """One device epoch vmapped over the batch axis — the single body
     shared by the per-epoch and multi-epoch pipelines, so their dynamics
     can never diverge.  `backend` picks the tick hot-op implementation
-    (DESIGN.md §8); the Pallas kernels batch under vmap like any op."""
+    (DESIGN.md §8); the Pallas kernels batch under vmap like any op.
+    With `n_groups > 0` the epoch takes a trailing (B,) segment-id
+    argument and the digest gains a `"group"` subtree — the in-graph
+    grouped reduction (DESIGN.md §9), fused into the same program so a
+    sharded sweep stays one dispatch per epoch."""
     def epoch(state, rngs, bstatic, cfg_c):
         def one_epoch(st, rng, bstat, cc):
             static = {**shared, **bstat}
             return device_epoch(st, static, cc, rng, shapes.T,
                                 backend=backend)
         return jax.vmap(one_epoch)(state, rngs, bstatic, cfg_c)
-    return epoch
+    if n_groups == 0:
+        return epoch
+
+    def grouped_epoch(state, rngs, bstatic, cfg_c, gids):
+        state, digest = epoch(state, rngs, bstatic, cfg_c)
+        return state, dict(digest,
+                           group=_group_digest(digest, gids, n_groups))
+    return grouped_epoch
 
 
 def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict,
-                    backend: str = "xla"):
+                    backend: str = "xla", n_groups: int = 0):
     """Digest pipeline: a jitted, vmapped, fully device-resident epoch —
     in-scan metric reduction, in-graph compaction, donated state buffers.
     Returns `(compacted_state, digest)` with digest leaves batched over B.
-    One compile per (static shape, backend); `shared` (python ints) is
-    closed over, batched statics and cfg_c are runtime arguments."""
-    key = ("device", shapes, tuple(sorted(shared.items())), backend)
+    One compile per (static shape, backend, group count); `shared`
+    (python ints) is closed over, batched statics, cfg_c, and the group
+    segment ids are runtime arguments."""
+    key = ("device", shapes, tuple(sorted(shared.items())), backend,
+           n_groups)
     if key not in _FLEET_EPOCH_CACHE:
         _FLEET_EPOCH_CACHE[key] = CountingJit(
-            _vmapped_epoch(shapes, shared, backend), donate_argnums=(0,))
+            _vmapped_epoch(shapes, shared, backend, n_groups),
+            donate_argnums=(0,))
     return _FLEET_EPOCH_CACHE[key]
 
 
 def _fleet_multi_epoch_fn(shapes: FleetShapes, shared: Dict, epochs: int,
-                          backend: str = "xla"):
+                          backend: str = "xla", n_groups: int = 0):
     """Single-dispatch fast path: scan-of-scans over `epochs` device
     epochs (compaction in-graph between them) for fleets with no managing
-    member.  Digest leaves come back stacked (E, B, ...)."""
-    key = ("multi", shapes, tuple(sorted(shared.items())), epochs, backend)
+    member.  Digest leaves come back stacked (E, B, ...) — group leaves,
+    when present, (E, G, ...)."""
+    key = ("multi", shapes, tuple(sorted(shared.items())), epochs, backend,
+           n_groups)
     if key not in _FLEET_EPOCH_CACHE:
-        epoch = _vmapped_epoch(shapes, shared, backend)
+        epoch = _vmapped_epoch(shapes, shared, backend, n_groups)
 
-        def multi_fn(state, rngs, bstatic, cfg_c):
-            def epoch_body(st, rngs_b):
-                return epoch(st, rngs_b, bstatic, cfg_c)
-            return jax.lax.scan(epoch_body, state, rngs)
+        if n_groups == 0:
+            def multi_fn(state, rngs, bstatic, cfg_c):
+                def epoch_body(st, rngs_b):
+                    return epoch(st, rngs_b, bstatic, cfg_c)
+                return jax.lax.scan(epoch_body, state, rngs)
+        else:
+            def multi_fn(state, rngs, bstatic, cfg_c, gids):
+                def epoch_body(st, rngs_b):
+                    return epoch(st, rngs_b, bstatic, cfg_c, gids)
+                return jax.lax.scan(epoch_body, state, rngs)
         _FLEET_EPOCH_CACHE[key] = CountingJit(multi_fn, donate_argnums=(0,))
     return _FLEET_EPOCH_CACHE[key]
 
@@ -209,10 +272,18 @@ class _Member:
         self.state0 = state_mod.init_state(
             cfg, self.static, pad_log=self.pads["pad_log"],
             pad_keys=self.pads["pad_keys"])
+        if spec.two_pc_ticks is not None:
+            two_pc = spec.two_pc_ticks
+        elif spec.group_id >= 0:
+            from repro.core.multiraft import two_pc_penalty
+            two_pc = two_pc_penalty(cfg)
+        else:
+            two_pc = 0
         self.cfg_c = make_cfg_arrays(
             cfg, write_rate=spec.write_rate, read_rate=spec.read_rate,
             phi=spec.phi, pad_sites=self.pads["pad_sites"],
-            spot_price_vol=spec.spot_price_vol)
+            spot_price_vol=spec.spot_price_vol,
+            cross_shard_frac=spec.cross_shard_frac, two_pc_ticks=two_pc)
         self.rng = jax.random.PRNGKey(spec.seed)
         self.controller = ClusterController(cfg, self.static,
                                             seed=spec.seed)
@@ -269,6 +340,41 @@ class FleetSim:
         )
         self.members = [_Member(s, self.shapes) for s in specs]
 
+        # ---- shard groups (DESIGN.md §9) -----------------------------
+        # members with group_id >= 0 are Multi-Raft shards; groups may be
+        # ragged (different sizes) and interleave with ungrouped members.
+        order = sorted({s.group_id for s in specs if s.group_id >= 0})
+        self.groups: Dict[int, List[int]] = {
+            g: [i for i, s in enumerate(specs) if s.group_id == g]
+            for g in order}
+        self.n_groups = len(order)
+        self._group_chi: Dict[int, float] = {}
+        for g, idxs in self.groups.items():
+            gspecs = [specs[i] for i in idxs]
+            assert all(s.mode == "raft" for s in gspecs), \
+                f"group {g}: Multi-Raft shards must be mode='raft'"
+            assert all(not s.manage for s in gspecs), \
+                f"group {g}: shard members must not manage resources"
+            sizes = {s.shards_per_group for s in gspecs}
+            assert sizes == {len(idxs)}, \
+                f"group {g}: declared shards_per_group {sizes} != actual " \
+                f"member count {len(idxs)} (ragged-group guard)"
+            chis = {s.cross_shard_frac for s in gspecs}
+            assert len(chis) == 1, \
+                f"group {g}: shards disagree on cross_shard_frac {chis}"
+            self._group_chi[g] = chis.pop()
+            taxes = {int(self.members[i].cfg_c["two_pc_ticks"])
+                     for i in idxs}
+            assert len(taxes) == 1, \
+                f"group {g}: shards disagree on two_pc_ticks {taxes} — " \
+                f"one 2PC charge per system (DESIGN.md §9)"
+        # segment ids: group slot in `order`, or n_groups for ungrouped
+        # members (dropped by the in-graph segment reduction)
+        self._gids = jnp.asarray(
+            [order.index(s.group_id) if s.group_id >= 0 else self.n_groups
+             for s in specs], jnp.int32)
+        self._group_reports: Dict[int, List] = {g: [] for g in order}
+
         self._shared = {k: self.members[0].static[k]
                         for k in _SHARED_STATIC_KEYS}
         for m in self.members[1:]:
@@ -286,8 +392,11 @@ class FleetSim:
                                    *[m.state0 for m in self.members])
         self._cfg_c = jax.tree.map(lambda *xs: jnp.stack(xs),
                                    *[m.cfg_c for m in self.members])
+        assert pipeline == "device" or self.n_groups == 0, \
+            "shard groups need the digest pipeline (the host pipeline " \
+            "is the frozen PR-1 reference and has no group reduction)"
         self._epoch_fn = (_fleet_epoch_fn(self.shapes, self._shared,
-                                          backend)
+                                          backend, self.n_groups)
                           if pipeline == "device" else
                           _fleet_epoch_fn_host(self.shapes, self._shared))
         # cumulative device->host bytes fetched for report building
@@ -356,14 +465,35 @@ class FleetSim:
         return jnp.stack(subs)
 
     # ------------------------------------------------------------------ #
+    def _epoch_args(self) -> Tuple:
+        return ((self._gids,) if self.n_groups else ())
+
+    def _append_group_reports(self, gdg: Dict) -> None:
+        """Distill one epoch's per-group digest rows (numpy leaves,
+        leading axis = group slot) into MultiRaftReports."""
+        from repro.core.multiraft import report_from_group_digest
+        for slot, g in enumerate(sorted(self.groups)):
+            rows = {k: v[slot] for k, v in gdg.items()}
+            self._group_reports[g].append(report_from_group_digest(
+                len(self._group_reports[g]), rows, self._group_chi[g]))
+
+    @property
+    def group_reports(self) -> Dict[int, List]:
+        """Per-group `MultiRaftReport` history, keyed by the members'
+        `group_id` (DESIGN.md §9).  Digest pipeline only."""
+        return {g: list(reps) for g, reps in self._group_reports.items()}
+
     def run_epoch(self) -> List[EpochReport]:
         if self.pipeline == "host":
             return self._run_epoch_host()
         rngs = self._split_epoch_rngs()
         self._state, digest = self._epoch_fn(self._state, rngs,
-                                             self._bstatic, self._cfg_c)
+                                             self._bstatic, self._cfg_c,
+                                             *self._epoch_args())
         dg = jax.tree.map(np.asarray, digest)
         self.d2h_bytes += pytree_nbytes(dg)
+        if self.n_groups:
+            self._append_group_reports(dg.pop("group"))
 
         managed_rows: List[int] = []
         managed_vals: List[Tuple] = []
@@ -474,15 +604,19 @@ class FleetSim:
         device epochs (in-graph compaction between them) and returns the
         digests stacked (E, B, ...)."""
         fn = _fleet_multi_epoch_fn(self.shapes, self._shared, epochs,
-                                   self.backend)
+                                   self.backend, self.n_groups)
         # identical split order to the epoch-by-epoch path, so the two are
         # trajectory-equal at the same seeds (tests/test_fleet.py)
         rngs = jnp.stack([self._split_epoch_rngs() for _ in range(epochs)])
         self._state, digests = fn(self._state, rngs, self._bstatic,
-                                  self._cfg_c)
+                                  self._cfg_c, *self._epoch_args())
         dg = jax.tree.map(np.asarray, digests)
         self.d2h_bytes += pytree_nbytes(dg)
+        gdg = dg.pop("group") if self.n_groups else None
         for e in range(epochs):
+            if gdg is not None:
+                self._append_group_reports({k: v[e] for k, v in
+                                            gdg.items()})
             for i, m in enumerate(self.members):
                 rep = report_from_digest(
                     m.epoch, {k: v[e, i] for k, v in dg.items()})

@@ -3,28 +3,46 @@
 The state-of-the-art scale-out the paper compares against (§2.1): each
 shard is a full Raft over its *own* on-demand node set (every scale-out
 step replicates the entire footprint — the cost problem), with 2-phase
-commit between shard leaders for cross-shard writes.  2PC is modeled as a
-latency/capacity tax (DESIGN.md §6): a cross-shard write consumes commit
-capacity in both shards and pays two extra inter-site commit rounds.
+commit between shard leaders for cross-shard writes.
 
-Two entry points share the same shard model and aggregation:
+Two engines share the shard model (DESIGN.md §6.3 and §9):
 
-- `MultiRaftSim` — sequential: one `BWRaftSim` (mode="raft") per shard,
-  stepped one after another on the host.
-- `shard_specs` + `aggregate_shards` — batched: the same shards expressed
-  as `fleet.MemberSpec`s, so a `FleetSim` can step every baseline shard in
-  the same compiled program as the BW-Raft clusters it is compared
-  against (see `benchmarks/common.run_systems`).
+- **Grouped fleet (default, DESIGN.md §9).**  `MultiRaftSim` is a thin
+  wrapper over a `fleet.FleetSim` whose members carry a shard-group
+  identity: all S shards advance in ONE compiled, vmapped program, the
+  2PC coupling runs in-graph — a cross-shard write samples a prepare in
+  its home shard, holds commit capacity in the partner shard (the
+  duplicated-prepare rate inflation of `shard_workload`), and pays the
+  two inter-site rounds as *measured* per-request latency in the
+  unit-bin digest histogram — and the per-shard digests are reduced to
+  one group digest on device.  Multi-Raft p95/p99 therefore come out of
+  the same digest machinery as BW-Raft.
+- **Sequential host reference (frozen).**  `engine="sequential"` steps
+  one `BWRaftSim` (mode="raft") per shard on the host and blends the
+  reports with `aggregate_shards`, which applies the 2PC tax post hoc —
+  the pre-group behavior, kept as the equivalence reference
+  (DESIGN.md §9 invariant: the grouped engine matches it exactly on
+  committed/arrived counts and to within one histogram bin on latency
+  means; `tests/test_multiraft.py`).
+
+`shard_specs` remains the batched entry point for joining this
+Multi-Raft instance to a larger fleet (e.g. next to the BW-Raft and
+plain-Raft members it is compared against, `benchmarks/common`); with
+the default `group_id >= 0` the fleet builds the group digest and the
+`MultiRaftReport`s itself (`FleetSim.group_reports`).
+`aggregate_shards` is reference-only: it backs the sequential engine and
+the NaN-policy regression tests.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+import warnings
+from typing import Dict, List, Sequence
 
 import numpy as np
 
 from repro.core.cluster_config import ClusterConfig
-from repro.core.runtime import BWRaftSim, EpochReport
+from repro.core.runtime import BWRaftSim, EpochReport, hist_stats
 
 
 @dataclasses.dataclass
@@ -39,6 +57,13 @@ class MultiRaftReport:
     write_lat_p99: float
     read_lat_mean: float
     cost: float
+    # 2PC census (grouped engine only — measured in-graph, DESIGN.md §9):
+    # cross-shard coordinator arrivals, prepares sampled by coordinators,
+    # and prepares whose commit never landed inside the epoch (the
+    # partner shard's held capacity released uncommitted)
+    cross_arrived: int = 0
+    two_pc_prepares: int = 0
+    two_pc_aborts: int = 0
 
     @property
     def goodput(self) -> float:
@@ -46,9 +71,12 @@ class MultiRaftReport:
 
 
 def shard_workload(write_rate: float, read_rate: float, shards: int,
-                   cross_shard_frac: float) -> tuple:
+                   cross_shard_frac: float) -> tuple[float, float]:
     """Per-shard effective rates: cross-shard writes execute in both
-    shards, so the duplicated prepares inflate the write rate."""
+    shards, so the duplicated prepares inflate the write rate — this is
+    the "hold commit capacity in the partner shard" half of the 2PC
+    coupling (DESIGN.md §9): `w_eff * shards == write_rate * (1 + chi)`,
+    a pinned invariant (`tests/test_multiraft.py`)."""
     w_eff = write_rate * (1 + cross_shard_frac) / shards
     return w_eff, read_rate / shards
 
@@ -61,29 +89,63 @@ def two_pc_penalty(cfg: ClusterConfig) -> int:
 
 def shard_specs(cfg: ClusterConfig, *, shards: int = 2,
                 write_rate: float = 8.0, read_rate: float = 32.0,
-                cross_shard_frac: float = 0.1, seed: int = 0) -> List:
+                cross_shard_frac: float = 0.1, seed: int = 0,
+                group_id: int = 0) -> List:
     """The batched entry point: this Multi-Raft instance as `shards`
     fleet members (mode="raft", unmanaged) for a single vmapped program.
-    Feed the resulting per-shard EpochReports to `aggregate_shards`."""
+
+    With `group_id >= 0` (default) the members carry the shard-group
+    identity of DESIGN.md §9: the fleet couples them with the in-graph
+    2PC step and reduces their digests to per-group `MultiRaftReport`s
+    (`FleetSim.group_reports[group_id]`).  Pass `group_id=-1` for the
+    pre-group behavior (independent members; blend the per-shard
+    EpochReports with the reference-only `aggregate_shards`)."""
     from repro.core.fleet import MemberSpec  # deferred: fleet imports runtime
     w_eff, r_eff = shard_workload(write_rate, read_rate, shards,
                                   cross_shard_frac)
+    grouped = group_id >= 0
     return [MemberSpec(cfg=cfg, mode="raft", write_rate=w_eff,
                        read_rate=r_eff, seed=seed + 17 * i,
-                       manage_resources=False)
+                       manage_resources=False,
+                       group_id=group_id,
+                       shards_per_group=shards if grouped else 1,
+                       cross_shard_frac=cross_shard_frac if grouped
+                       else 0.0)
             for i in range(shards)]
+
+
+def _nan_blend(values, reduce) -> float:
+    """Uniform NaN policy for blending per-shard latency stats: NaN rows
+    (a shard that committed nothing) are excluded; all-NaN blends to NaN
+    without numpy's all-NaN RuntimeWarning."""
+    arr = np.asarray(values, dtype=float)
+    if np.isnan(arr).all():
+        return float("nan")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return float(reduce(arr))
 
 
 def aggregate_shards(epoch: int, reps: Sequence[EpochReport],
                      cfg: ClusterConfig,
                      cross_shard_frac: float = 0.1) -> MultiRaftReport:
-    """Blend per-shard reports into one Multi-Raft report, applying the
-    2PC latency tax and deduplicating the cross-shard write prepares."""
+    """Reference-only (DESIGN.md §9): blend per-shard reports into one
+    Multi-Raft report, applying the 2PC latency tax *post hoc* and
+    deduplicating the cross-shard write prepares.  The grouped fleet
+    engine replaces this with the in-graph coupling + group digest
+    (`report_from_group_digest`); this stays as the frozen equivalence
+    target and the `--sequential` fallback.
+
+    NaN policy (uniform): every latency blend is NaN-aware — a shard
+    with zero committed writes (all-NaN latency row) is excluded from
+    the blend instead of poisoning it; all-NaN in, NaN out."""
     chi = cross_shard_frac
-    tax = two_pc_penalty(cfg)
-    lat_mean = float(np.nanmean([r.write_lat_mean for r in reps]))
-    lat_p95 = float(np.nanmax([r.write_lat_p95 for r in reps]))
-    lat_p99 = float(np.nanmax([r.write_lat_p99 for r in reps]))
+    # no cross-shard traffic, no 2PC rounds: the tail shift below is
+    # "the tail IS the cross-shard traffic", which needs chi > 0
+    tax = two_pc_penalty(cfg) if chi > 0 else 0
+    lat_mean = _nan_blend([r.write_lat_mean for r in reps], np.nanmean)
+    lat_p95 = _nan_blend([r.write_lat_p95 for r in reps], np.nanmax)
+    lat_p99 = _nan_blend([r.write_lat_p99 for r in reps], np.nanmax)
     # cross-shard writes pay the 2PC penalty; the blended mean/p95 shift
     lat_mean = lat_mean + chi * tax
     lat_p95 = lat_p95 + tax                       # tail is cross-shard
@@ -97,37 +159,102 @@ def aggregate_shards(epoch: int, reps: Sequence[EpochReport],
         reads_arrived=sum(r.reads_arrived for r in reps),
         write_lat_mean=lat_mean, write_lat_p95=lat_p95,
         write_lat_p99=lat_p99,
-        read_lat_mean=float(np.mean([r.read_lat_mean for r in reps])),
+        read_lat_mean=_nan_blend([r.read_lat_mean for r in reps],
+                                 np.nanmean),
         cost=sum(r.cost for r in reps),
     )
 
 
+def report_from_group_digest(epoch: int, gdg: Dict,
+                             cross_shard_frac: float) -> MultiRaftReport:
+    """Distill one shard group's pooled epoch digest (numpy leaves,
+    reduced over the group's members in-graph — DESIGN.md §9) into a
+    `MultiRaftReport`.
+
+    Counts deduplicate the cross-shard prepares by 1/(1+chi) with the
+    *same arithmetic* as `aggregate_shards`, so grouped == sequential is
+    exact on counts.  Latency stats come straight from the pooled
+    unit-bin histogram, whose cross-shard entries already carry the
+    measured 2PC rounds (`step.commit_step`) — the measured twin of the
+    reference's post-hoc `+ chi * tax` shift (equal in the mean to
+    within one bin; the tail percentiles are the *measured* improvement
+    over the reference's synthetic `+ tax`)."""
+    chi = cross_shard_frac
+    n_done, lat_mean, lat_p95, lat_p99 = hist_stats(gdg["write_lat_hist"])
+    reads_served = int(gdg["reads_served"])
+    return MultiRaftReport(
+        epoch=epoch,
+        writes_committed=int(n_done / (1 + chi)),
+        writes_arrived=int(int(gdg["writes_arrived"]) / (1 + chi)),
+        reads_served=reads_served,
+        reads_arrived=int(gdg["reads_arrived"]),
+        write_lat_mean=lat_mean,
+        write_lat_p95=lat_p95,
+        write_lat_p99=lat_p99,
+        read_lat_mean=float(gdg["read_lat_sum"]) / max(reads_served, 1),
+        cost=float(gdg["cost_delta"]),
+        cross_arrived=int(gdg["cross_arrived"]),
+        two_pc_prepares=int(gdg["two_pc_prepares"]),
+        two_pc_aborts=int(gdg["two_pc_aborts"]),
+    )
+
+
 class MultiRaftSim:
-    """S independent Raft shards + 2PC cross-shard write model."""
+    """S Raft shards + 2PC cross-shard write model (DESIGN.md §6.3, §9).
+
+    `engine="fleet"` (default): a thin wrapper over a grouped
+    `fleet.FleetSim` — one compiled dispatch advances every shard and
+    reduces the group digest in-graph; `run(E)` of an unmanaged group is
+    eligible for the single-dispatch multi-epoch scan (DESIGN.md §7.1).
+    `engine="sequential"`: the frozen host reference — one `BWRaftSim`
+    per shard stepped one after another, blended by `aggregate_shards`.
+    """
 
     def __init__(self, cfg: ClusterConfig, *, shards: int = 2,
                  write_rate: float = 8.0, read_rate: float = 32.0,
-                 cross_shard_frac: float = 0.1, seed: int = 0):
+                 cross_shard_frac: float = 0.1, seed: int = 0,
+                 engine: str = "fleet", backend: str = "xla"):
+        assert engine in ("fleet", "sequential"), engine
         self.cfg = cfg
         self.shards = shards
         self.chi = cross_shard_frac
+        self.engine = engine
+        self.two_pc_penalty = two_pc_penalty(cfg)
+        self.epoch = 0
+        if engine == "fleet":
+            from repro.core.fleet import FleetSim
+            self.fleet = FleetSim(
+                shard_specs(cfg, shards=shards, write_rate=write_rate,
+                            read_rate=read_rate,
+                            cross_shard_frac=cross_shard_frac, seed=seed,
+                            group_id=0),
+                backend=backend)
+            self.sims: List[BWRaftSim] = []
+            return
         w_eff, r_eff = shard_workload(write_rate, read_rate, shards,
                                       cross_shard_frac)
         self.sims = [
             BWRaftSim(cfg, mode="raft", write_rate=w_eff,
                       read_rate=r_eff, seed=seed + 17 * i,
-                      manage_resources=False)
+                      manage_resources=False, backend=backend)
             for i in range(shards)
         ]
-        self.two_pc_penalty = two_pc_penalty(cfg)
-        self.epoch = 0
         self.np_rng = np.random.default_rng(seed + 999)
 
     def run_epoch(self) -> MultiRaftReport:
+        if self.engine == "fleet":
+            self.fleet.run_epoch()
+            self.epoch += 1
+            return self.fleet.group_reports[0][-1]
         reps: List[EpochReport] = [s.run_epoch() for s in self.sims]
         rep = aggregate_shards(self.epoch, reps, self.cfg, self.chi)
         self.epoch += 1
         return rep
 
     def run(self, epochs: int) -> List[MultiRaftReport]:
+        if self.engine == "fleet":
+            start = self.epoch
+            self.fleet.run(epochs)       # auto single dispatch when able
+            self.epoch += epochs
+            return self.fleet.group_reports[0][start:]
         return [self.run_epoch() for _ in range(epochs)]

@@ -71,13 +71,29 @@ class CountingJit:
             return len(self._sigs)
 
 
+# extra unit bins past T in the write-latency histogram, so the in-graph
+# 2PC tax (DESIGN.md §9) lands in measurable bins instead of clipping;
+# `make_cfg_arrays` asserts every member's `two_pc_ticks` fits.  Static
+# (part of the digest shape), shared by every member of a fleet.
+HIST_TAIL = 64
+
+
 def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
                     read_rate: float, phi: float = 0.0,
                     pad_sites: int = 0,
-                    spot_price_vol: Optional[float] = None) -> Dict:
+                    spot_price_vol: Optional[float] = None,
+                    cross_shard_frac: float = 0.0,
+                    two_pc_ticks: int = 0) -> Dict:
     """Per-epoch dynamic knobs — all jit arguments, never baked into the
     compiled program.  `pad_sites` repeats the last site's prices so padded
-    clusters share one (S,) shape (DESIGN.md §7)."""
+    clusters share one (S,) shape (DESIGN.md §7).  `cross_shard_frac` /
+    `two_pc_ticks` are the Multi-Raft 2PC coupling knobs (DESIGN.md §9):
+    zero for ungrouped members, which keeps the tick bit-identical to the
+    pre-group program."""
+    assert 0.0 <= cross_shard_frac <= 1.0, cross_shard_frac
+    assert 0 <= two_pc_ticks <= HIST_TAIL, \
+        f"two_pc_ticks={two_pc_ticks} exceeds the histogram tail " \
+        f"(HIST_TAIL={HIST_TAIL}) — widen runtime.HIST_TAIL"
     od = [s.on_demand_price for s in cfg.sites]
     sp = [s.spot_price_mean for s in cfg.sites]
     od = od + [od[-1]] * pad_sites
@@ -96,6 +112,8 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         "spot_price_vol": jnp.float32(vol),
         "ticks_per_hour": jnp.float32(3600.0 / 0.01 / 100),  # 1 tick = 10ms
         "network_cost_coef": jnp.float32(0.0005),
+        "cross_frac": jnp.float32(cross_shard_frac),
+        "two_pc_ticks": jnp.int32(two_pc_ticks),
     }
 
 
@@ -188,21 +206,34 @@ def _digest_acc_update(acc: Dict, m: Dict) -> Dict:
     }
 
 
-def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int) -> Dict:
+def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int,
+                     cfg_c: Dict) -> Dict:
     """Build the epoch digest from the final (pre-compaction) state.
 
     The write-latency distribution becomes an exact per-tick histogram:
-    latencies are integer ticks in [0, T], so `hist[b]` = number of
-    committed entries with latency b fully determines the sorted latency
-    sample — `report_from_digest` recovers mean/p95/p99 exactly.
+    latencies are integer ticks in [0, T + HIST_TAIL] (the tail holds the
+    in-graph 2PC rounds of cross-shard commits, DESIGN.md §9), so
+    `hist[b]` = number of committed entries with latency b fully
+    determines the sorted latency sample — `report_from_digest` recovers
+    mean/p95/p99 exactly.  The 2PC prepare/abort census counts entries
+    marked as cross-shard coordinators: prepares = marked entries that
+    reached the log, aborts = prepares whose commit never landed inside
+    the epoch (the partner shard's held capacity is released uncommitted).
     """
     sub, com = state["entry_submit_t"], state["entry_commit_t"]
     done = (sub >= 0) & (com >= 0)
-    lat = jnp.clip(com - sub, 0, T)
-    hist = jnp.zeros((T + 1,), jnp.int32).at[
-        jnp.where(done, lat, T + 1)].add(1, mode="drop")
+    H = T + 1 + HIST_TAIL
+    lat = jnp.clip(com - sub, 0, H - 1)
+    hist = jnp.zeros((H,), jnp.int32).at[
+        jnp.where(done, lat, H)].add(1, mode="drop")
+    marked = step_mod.cross_shard_mark(
+        jnp.arange(sub.shape[0]), cfg_c["cross_frac"])
+    prepared = marked & (sub >= 0)
     alive = state["alive"]
     return {
+        "cross_arrived": state["cross_arrived"],
+        "two_pc_prepares": jnp.sum(prepared).astype(jnp.int32),
+        "two_pc_aborts": jnp.sum(prepared & (com < 0)).astype(jnp.int32),
         "reads_arrived": state["reads_arrived"],
         "writes_arrived": state["writes_arrived"],
         "reads_served": state["reads_served"],
@@ -241,7 +272,7 @@ def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int, *,
 
     rngs = jax.random.split(rng, T)
     (state, acc), _ = jax.lax.scan(body, (state, _digest_acc_init()), rngs)
-    digest = _finalize_digest(state, acc, cost_before, T)
+    digest = _finalize_digest(state, acc, cost_before, T, cfg_c)
     return compact_state(state), digest
 
 
@@ -261,15 +292,26 @@ def hist_percentile(counts: np.ndarray, q: float) -> float:
     return float(vlo + (rank - lo) * (vhi - vlo))
 
 
+def hist_stats(hist) -> Tuple[int, float, float, float]:
+    """(count, mean, p95, p99) of the integer sample encoded by a
+    unit-bin histogram — the one place the digest's histogram layout
+    (`_finalize_digest`, T + 1 + HIST_TAIL bins) is distilled; shared by
+    `report_from_digest` and `multiraft.report_from_group_digest`.
+    Mean/percentiles are NaN on an empty histogram."""
+    hist = np.asarray(hist)
+    n = int(hist.sum())
+    lat_sum = float(hist @ np.arange(hist.shape[0], dtype=np.int64))
+    mean = lat_sum / n if n else float("nan")
+    return n, mean, hist_percentile(hist, 95), hist_percentile(hist, 99)
+
+
 def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
     """Distill one cluster's epoch digest (numpy leaves, O(T + N + S)
     bytes) into an EpochReport — the digest-path twin of `build_report`.
     Counters are exact; write-latency stats are recovered exactly from the
     unit-bin histogram (integer-tick latencies, see `_finalize_digest`)."""
-    hist = np.asarray(dg["write_lat_hist"])
-    n_done = int(hist.sum())
+    n_done, lat_mean, lat_p95, lat_p99 = hist_stats(dg["write_lat_hist"])
     reads_served = int(dg["reads_served"])
-    lat_sum = float(hist @ np.arange(hist.shape[0], dtype=np.int64))
     return EpochReport(
         epoch=epoch,
         reads_arrived=int(dg["reads_arrived"]),
@@ -278,9 +320,9 @@ def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
         writes_committed=n_done,
         read_lat_mean=float(dg["read_lat_sum"] / max(reads_served, 1)),
         read_lat_max=float(dg["read_lat_max"]),
-        write_lat_mean=lat_sum / n_done if n_done else float("nan"),
-        write_lat_p95=hist_percentile(hist, 95),
-        write_lat_p99=hist_percentile(hist, 99),
+        write_lat_mean=lat_mean,
+        write_lat_p95=lat_p95,
+        write_lat_p99=lat_p99,
         cost=float(dg["cost_delta"]),
         n_secretaries=int(dg["n_secretaries"]),
         n_observers=int(dg["n_observers"]),
@@ -310,6 +352,7 @@ def compact_state(state: Dict) -> Dict:
         entry_commit_t=jnp.full_like(state["entry_commit_t"], -1),
         reads_arrived=jnp.zeros_like(state["reads_arrived"]),
         writes_arrived=jnp.zeros_like(state["writes_arrived"]),
+        cross_arrived=jnp.zeros_like(state["cross_arrived"]),
         reads_served=jnp.zeros_like(state["reads_served"]),
         writes_committed=jnp.zeros_like(state["writes_committed"]),
         read_lat_sum=jnp.zeros_like(state["read_lat_sum"]),
@@ -476,7 +519,8 @@ class BWRaftSim:
                  pad_log: int = 0, pad_keys: int = 0,
                  spot_price_vol: Optional[float] = None,
                  prelease: Optional[Tuple[int, int]] = None,
-                 backend: str = "xla"):
+                 backend: str = "xla",
+                 cross_shard_frac: float = 0.0, two_pc_ticks: int = 0):
         assert mode in ("bwraft", "raft")
         assert backend in ("xla", "pallas"), backend
         self.cfg = cfg
@@ -489,7 +533,9 @@ class BWRaftSim:
         self.cfg_c = make_cfg_arrays(cfg, write_rate=write_rate,
                                      read_rate=read_rate, phi=phi,
                                      pad_sites=pad_sites,
-                                     spot_price_vol=spot_price_vol)
+                                     spot_price_vol=spot_price_vol,
+                                     cross_shard_frac=cross_shard_frac,
+                                     two_pc_ticks=two_pc_ticks)
         self.rng = jax.random.PRNGKey(seed)
         self.manage = manage_resources and mode == "bwraft"
         self.controller = ClusterController(cfg, self.static, seed=seed)

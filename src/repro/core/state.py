@@ -162,6 +162,9 @@ def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
         # workload stats accumulators (reset each period by the manager)
         "reads_arrived": jnp.zeros((), jnp.int32),
         "writes_arrived": jnp.zeros((), jnp.int32),
+        # cross-shard 2PC coordinator arrivals (Multi-Raft groups only;
+        # stays 0 when cfg_c["cross_frac"] == 0 — DESIGN.md §9)
+        "cross_arrived": jnp.zeros((), jnp.int32),
         "reads_served": jnp.zeros((), jnp.int32),
         "writes_committed": jnp.zeros((), jnp.int32),
         # read latency accounting (aggregate)

@@ -41,6 +41,17 @@ def _rand(rng, n):
     return jax.random.split(rng, n)
 
 
+def cross_shard_mark(idx, frac):
+    """Deterministic cross-shard marking (DESIGN.md §9): entry `idx` is a
+    cross-shard 2PC coordinator iff `floor((idx+1)*frac) > floor(idx*frac)`
+    — exactly `floor(n*frac)` of the first n entries are marked, and no RNG
+    is consumed, so `frac == 0` leaves the trajectory bit-identical to an
+    unsharded run.  Used both for the commit-time 2PC latency charge
+    (`commit_step`) and the prepare/abort census (`runtime` digest)."""
+    i = idx.astype(jnp.float32)
+    return jnp.floor((i + 1) * frac) > jnp.floor(i * frac)
+
+
 def spot_step(state, static, cfg_c, rng):
     """Mean-reverting site price processes + revocation of spot nodes."""
     S = state["spot_price"].shape[0]
@@ -66,12 +77,24 @@ def spot_step(state, static, cfg_c, rng):
 
 def workload_step(state, static, cfg_c, rng):
     """Client arrivals this tick: writes -> leader queue, reads -> per-node
-    read queues (observers first, at their site, else followers)."""
+    read queues (observers first, at their site, else followers).
+
+    Cross-shard split (DESIGN.md §9): when this member is one shard of a
+    Multi-Raft group, a `cross_frac` fraction of the arriving writes are
+    cross-shard 2PC coordinators.  The split is deterministic — cumulative
+    cross arrivals = floor(cumulative writes * cross_frac) — so it costs
+    no RNG draw and is inert at `cross_frac == 0`."""
     r_w, r_r, r_key = _rand(rng, 3)
     lam_w = cfg_c["write_rate"]
     lam_r = cfg_c["read_rate"]
     n_writes = jax.random.poisson(r_w, lam_w).astype(jnp.int32)
     n_reads = jax.random.poisson(r_r, lam_r).astype(jnp.int32)
+
+    chi = cfg_c["cross_frac"]
+    w_before = state["writes_arrived"].astype(jnp.float32)
+    w_after = (state["writes_arrived"] + n_writes).astype(jnp.float32)
+    n_cross = (jnp.floor(w_after * chi) -
+               jnp.floor(w_before * chi)).astype(jnp.int32)
 
     N = state["role"].shape[0]
     # read routing: spread over alive observers; overflow to followers
@@ -95,7 +118,8 @@ def workload_step(state, static, cfg_c, rng):
                 read_queue=read_queue,
                 write_pending=state["write_pending"] + n_writes,
                 reads_arrived=state["reads_arrived"] + n_reads,
-                writes_arrived=state["writes_arrived"] + n_writes), \
+                writes_arrived=state["writes_arrived"] + n_writes,
+                cross_arrived=state["cross_arrived"] + n_cross), \
         (n_writes, n_reads, r_key)
 
 
@@ -332,7 +356,15 @@ def commit_step(state, static, cfg_c, *, reference=False, backend="xla"):
     instead of the PR-1 O(L·N) comparison matrix (`reference=True`).
     `backend="pallas"` computes the same order statistic blockwise with
     the voter mask applied in-register (`kernels/raft_tick`, DESIGN.md
-    §8) — bit-identical (test invariant)."""
+    §8) — bit-identical (test invariant).
+
+    2PC coupling (DESIGN.md §9): entries marked as cross-shard
+    coordinators (`cross_shard_mark`) record their commit time shifted by
+    `two_pc_ticks` — the prepare + commit round with the partner shard's
+    leader — so the 2PC tax flows into the measured write-latency
+    histogram per request instead of being added post hoc.  The charge is
+    applied identically on the reference/xla/pallas paths (it is model
+    semantics, not a formulation) and never feeds back into dynamics."""
     N = state["role"].shape[0]
     L = state["log_term"].shape[1]
     tick = state["tick"]
@@ -390,8 +422,13 @@ def commit_step(state, static, cfg_c, *, reference=False, backend="xla"):
                            0)
     newly = (jnp.arange(L) >= state["commit_len"][lid_c]) & \
         (jnp.arange(L) < new_commit) & has_leader
+    # cross-shard coordinators pay the two inter-site 2PC rounds before
+    # the client sees the commit (DESIGN.md §9); intra-shard entries and
+    # ungrouped members (cross_frac == 0) record plain `tick`
+    cross = cross_shard_mark(jnp.arange(L), cfg_c["cross_frac"])
+    commit_seen_t = tick + jnp.where(cross, cfg_c["two_pc_ticks"], 0)
     entry_commit_t = jnp.where(newly & (state["entry_commit_t"] < 0),
-                               tick, state["entry_commit_t"])
+                               commit_seen_t, state["entry_commit_t"])
     commit_len = state["commit_len"].at[lid_c].set(
         jnp.where(has_leader, new_commit, state["commit_len"][lid_c]))
     n_new = jnp.where(has_leader,

@@ -1,0 +1,301 @@
+"""The grouped Multi-Raft contract (DESIGN.md §9): a sharded system run
+as ONE fleet dispatch — shard-group axis, in-graph 2PC coupling, grouped
+digest reduction — matches the frozen sequential `MultiRaftSim`
+reference exactly on committed/arrived counts and to within one
+histogram bin on latency means; chi = 0 collapses to independent Rafts
+bit-identically; an S-shard x B-system sweep compiles once."""
+import numpy as np
+import pytest
+
+from repro.core import multiraft
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.fleet import FleetSim, MemberSpec
+from repro.core.multiraft import (MultiRaftSim, aggregate_shards,
+                                  shard_specs, shard_workload,
+                                  two_pc_penalty)
+from repro.core.runtime import HIST_TAIL, BWRaftSim, EpochReport
+
+
+def _small_cluster(name="mr", followers=(2, 2, 1), max_log=1024,
+                   period_ticks=60):
+    sites = tuple(
+        SiteConfig(f"{name}-s{i}", followers=f, rtt_intra=1,
+                   rtt_inter=6 + 2 * i, on_demand_price=0.0416,
+                   spot_price_mean=0.0125)
+        for i, f in enumerate(followers))
+    return ClusterConfig(name=name, sites=sites, max_log=max_log,
+                         key_space=256, max_secretaries=4,
+                         max_observers=8, period_ticks=period_ticks)
+
+
+def _report(writes_committed=10, write_lat_mean=20.0, write_lat_p95=30.0,
+            write_lat_p99=35.0, read_lat_mean=8.0, **kw) -> EpochReport:
+    base = dict(epoch=0, reads_arrived=100, writes_arrived=12,
+                reads_served=90, writes_committed=writes_committed,
+                read_lat_mean=read_lat_mean, read_lat_max=12.0,
+                write_lat_mean=write_lat_mean, write_lat_p95=write_lat_p95,
+                write_lat_p99=write_lat_p99, cost=1.0, n_secretaries=0,
+                n_observers=0, leader_changes=0, no_leader_ticks=0,
+                killed=0)
+    base.update(kw)
+    return EpochReport(**base)
+
+
+# --------------------------------------------------------------------- #
+# satellite: shard_workload algebra + annotation
+# --------------------------------------------------------------------- #
+def test_shard_workload_cross_shard_inflation_algebra():
+    """Cross-shard writes execute in both shards: summed over shards, the
+    effective write rate is inflated by exactly (1 + chi) — the capacity
+    the partner shards hold for duplicated prepares (DESIGN.md §9)."""
+    for write_rate in (4.0, 8.0, 96.0):
+        for shards in (1, 2, 4, 7):
+            for chi in (0.0, 0.1, 0.5, 1.0):
+                w_eff, r_eff = shard_workload(write_rate, 32.0, shards, chi)
+                assert np.isclose(w_eff * shards, write_rate * (1 + chi)), \
+                    (write_rate, shards, chi)
+                assert np.isclose(r_eff * shards, 32.0)
+
+
+def test_shard_workload_return_annotation():
+    assert shard_workload.__annotations__["return"] == "tuple[float, float]"
+
+
+# --------------------------------------------------------------------- #
+# satellite: aggregate_shards NaN policy (reference-only path)
+# --------------------------------------------------------------------- #
+def test_aggregate_shards_zero_commit_shard_does_not_poison():
+    """A shard that committed zero writes reports NaN latencies; the
+    blend must exclude it — uniformly, for means and percentiles."""
+    cfg = _small_cluster("nanpol")
+    nan = float("nan")
+    reps = [_report(),
+            _report(writes_committed=0, write_lat_mean=nan,
+                    write_lat_p95=nan, write_lat_p99=nan)]
+    with np.errstate(all="raise"):
+        out = aggregate_shards(0, reps, cfg, cross_shard_frac=0.1)
+    tax = two_pc_penalty(cfg)
+    assert np.isclose(out.write_lat_mean, 20.0 + 0.1 * tax)
+    assert np.isclose(out.write_lat_p95, 30.0 + tax)
+    assert np.isclose(out.write_lat_p99, 35.0 + tax)
+    assert np.isclose(out.read_lat_mean, 8.0)
+    assert out.writes_committed == int(10 / 1.1)
+    # chi = 0: no cross-shard traffic, so no synthetic tail shift either
+    zero = aggregate_shards(0, reps, cfg, cross_shard_frac=0.0)
+    assert np.isclose(zero.write_lat_mean, 20.0)
+    assert np.isclose(zero.write_lat_p95, 30.0)
+    assert np.isclose(zero.write_lat_p99, 35.0)
+
+
+def test_aggregate_shards_all_nan_blends_to_nan_quietly():
+    cfg = _small_cluster("nanpol2")
+    nan = float("nan")
+    reps = [_report(writes_committed=0, write_lat_mean=nan,
+                    write_lat_p95=nan, write_lat_p99=nan)] * 2
+    with np.errstate(all="raise"):
+        out = aggregate_shards(0, reps, cfg)
+    assert np.isnan(out.write_lat_mean)
+    assert np.isnan(out.write_lat_p95) and np.isnan(out.write_lat_p99)
+    assert np.isfinite(out.read_lat_mean)
+
+
+# --------------------------------------------------------------------- #
+# tentpole: grouped fleet == sequential reference
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("shards", [1, 2, 4])
+@pytest.mark.parametrize("chi", [0.0, 0.1, 0.5])
+def test_grouped_equals_sequential(shards, chi):
+    """DESIGN.md §9 acceptance invariant: exact on counts and cost,
+    within one histogram bin on latency means.  (p95/p99 deliberately
+    differ: the grouped engine *measures* the 2PC tail, the reference
+    synthesizes it as a flat + tax shift.)"""
+    cfg = _small_cluster()
+    kw = dict(shards=shards, write_rate=9.0, read_rate=27.0,
+              cross_shard_frac=chi, seed=11)
+    grouped = MultiRaftSim(cfg, **kw).run(3)
+    seq = MultiRaftSim(cfg, **kw, engine="sequential").run(3)
+    for e, (a, b) in enumerate(zip(grouped, seq)):
+        ctx = f"shards={shards} chi={chi} epoch={e}"
+        for f in ("writes_committed", "writes_arrived", "reads_served",
+                  "reads_arrived"):
+            assert getattr(a, f) == getattr(b, f), \
+                f"{ctx}: {f}: {getattr(a, f)} != {getattr(b, f)}"
+        assert np.isclose(a.cost, b.cost, rtol=1e-4), ctx
+        for f in ("write_lat_mean", "read_lat_mean"):
+            x, y = getattr(a, f), getattr(b, f)
+            if np.isnan(x) and np.isnan(y):
+                continue
+            assert abs(x - y) <= 1.0, f"{ctx}: {f}: {x} vs {y}"
+
+
+def test_chi_zero_collapses_to_independent_rafts_bit_identically():
+    """chi = 0 degenerate case: grouping must be dynamics-inert — the
+    shard members' trajectories equal plain ungrouped raft members (and
+    a solo BWRaftSim) bit for bit, not just statistically."""
+    cfg = _small_cluster("chi0")
+    grouped = FleetSim(shard_specs(cfg, shards=3, write_rate=9.0,
+                                   read_rate=18.0, cross_shard_frac=0.0,
+                                   seed=5, group_id=0))
+    plain = FleetSim(shard_specs(cfg, shards=3, write_rate=9.0,
+                                 read_rate=18.0, cross_shard_frac=0.0,
+                                 seed=5, group_id=-1))
+    ga, gb = grouped.run(2), plain.run(2)
+    for i in range(3):
+        for e, (a, b) in enumerate(zip(ga[i], gb[i])):
+            for f in ("writes_committed", "writes_arrived", "reads_served",
+                      "reads_arrived", "leader_changes", "no_leader_ticks",
+                      "killed"):
+                assert getattr(a, f) == getattr(b, f), (i, e, f)
+            for f in ("write_lat_mean", "write_lat_p95", "write_lat_p99",
+                      "read_lat_mean", "cost"):
+                x, y = getattr(a, f), getattr(b, f)
+                assert (np.isnan(x) and np.isnan(y)) or x == y, (i, e, f)
+    # solo twin at the same shapes/seed: shard 0 exactly
+    w_eff, r_eff = shard_workload(9.0, 18.0, 3, 0.0)
+    solo = BWRaftSim(cfg, mode="raft", write_rate=w_eff, read_rate=r_eff,
+                     seed=5, manage_resources=False).run(2)
+    for e, (a, b) in enumerate(zip(ga[0], solo)):
+        assert a.writes_committed == b.writes_committed, e
+        assert a.reads_served == b.reads_served, e
+    # and the group report is the plain sum at chi = 0
+    grp = grouped.group_reports[0]
+    for e in range(2):
+        assert grp[e].writes_committed == \
+            sum(ga[i][e].writes_committed for i in range(3)), e
+        assert grp[e].two_pc_prepares == 0 and grp[e].two_pc_aborts == 0
+        assert grp[e].cross_arrived == 0
+
+
+def test_grouped_shard_matches_solo_with_cross_knobs():
+    """A grouped shard member (chi > 0) is trajectory-equal to a solo
+    BWRaftSim run with the same cross_shard_frac/two_pc_ticks knobs —
+    the 2PC charge is part of the member program, not a fleet side
+    effect."""
+    cfg = _small_cluster("knobs")
+    chi, tax = 0.5, two_pc_penalty(cfg)
+    fleet = FleetSim(shard_specs(cfg, shards=2, write_rate=8.0,
+                                 read_rate=16.0, cross_shard_frac=chi,
+                                 seed=2, group_id=0))
+    freps = fleet.run(2)
+    w_eff, r_eff = shard_workload(8.0, 16.0, 2, chi)
+    solo = BWRaftSim(cfg, mode="raft", write_rate=w_eff, read_rate=r_eff,
+                     seed=2, manage_resources=False, cross_shard_frac=chi,
+                     two_pc_ticks=tax).run(2)
+    for e, (a, b) in enumerate(zip(freps[0], solo)):
+        for f in ("writes_committed", "writes_arrived", "reads_served"):
+            assert getattr(a, f) == getattr(b, f), (e, f)
+        for f in ("write_lat_mean", "write_lat_p95", "write_lat_p99"):
+            x, y = getattr(a, f), getattr(b, f)
+            assert (np.isnan(x) and np.isnan(y)) or x == y, (e, f)
+
+
+# --------------------------------------------------------------------- #
+# tentpole: one compiled dispatch for the whole S x B sweep
+# --------------------------------------------------------------------- #
+def test_shard4_b8_sweep_single_compile():
+    """Acceptance: a shards=4, B=8 Multi-Raft sweep (32 members, 8
+    groups) advances one epoch per call of ONE compiled program — the
+    in-graph group reduction rides the same dispatch (CountingJit)."""
+    cfg = _small_cluster("accept", followers=(1, 1), max_log=512,
+                        period_ticks=40)
+    specs = []
+    for g in range(8):
+        specs += shard_specs(cfg, shards=4, write_rate=4.0 + g,
+                             read_rate=16.0, cross_shard_frac=0.1,
+                             seed=g, group_id=g)
+    fleet = FleetSim(specs)
+    assert fleet.shapes.B == 32 and fleet.n_groups == 8
+    for _ in range(3):
+        fleet.run_epoch()
+    assert fleet.compile_count == 1, \
+        "S x B sweep must stay one compiled dispatch per epoch"
+    for g in range(8):
+        reps = fleet.group_reports[g]
+        assert len(reps) == 3
+        assert reps[-1].writes_committed > 0
+        assert reps[-1].two_pc_prepares > 0
+        assert reps[-1].cross_arrived > 0
+    # measured 2PC rounds land in the histogram tail past the synthetic
+    # clip: the digest histogram is (T + 1 + HIST_TAIL) bins wide
+    dg_hist_bins = cfg.period_ticks + 1 + HIST_TAIL
+    assert np.isfinite(reps[-1].write_lat_p99)
+    assert reps[-1].write_lat_p99 < dg_hist_bins
+
+
+def test_group_scan_equals_epoch_by_epoch():
+    """The multi-epoch single-dispatch scan produces the same group
+    reports as the epoch-by-epoch loop (DESIGN.md §7.1 extended to the
+    §9 group digest)."""
+    cfg = _small_cluster("scan")
+    specs = shard_specs(cfg, shards=2, write_rate=8.0, read_rate=16.0,
+                        cross_shard_frac=0.1, seed=7, group_id=0)
+    fast, slow = FleetSim(specs), FleetSim(specs)
+    assert fast.single_dispatch_eligible
+    fast.run(3)                                  # ONE dispatch
+    slow.run(3, single_dispatch=False)
+    for a, b in zip(fast.group_reports[0], slow.group_reports[0]):
+        assert a.writes_committed == b.writes_committed
+        assert a.two_pc_prepares == b.two_pc_prepares
+        assert a.two_pc_aborts == b.two_pc_aborts
+        x, y = a.write_lat_mean, b.write_lat_mean
+        assert (np.isnan(x) and np.isnan(y)) or x == y
+        assert a.write_lat_p99 == b.write_lat_p99 or \
+            (np.isnan(a.write_lat_p99) and np.isnan(b.write_lat_p99))
+
+
+def test_ragged_groups_and_mixed_members():
+    """Ragged shard counts (groups of different sizes) and ungrouped
+    members coexist in one fleet; ungrouped digests never leak into a
+    group (the dropped-segment masking rule, DESIGN.md §9)."""
+    cfg = _small_cluster("ragged")
+    specs = ([MemberSpec(cfg=cfg, mode="raft", write_rate=8.0,
+                         read_rate=16.0, seed=99,
+                         manage_resources=False)]
+             + shard_specs(cfg, shards=2, write_rate=8.0, read_rate=16.0,
+                           cross_shard_frac=0.1, seed=1, group_id=4)
+             + shard_specs(cfg, shards=3, write_rate=6.0, read_rate=12.0,
+                           cross_shard_frac=0.5, seed=2, group_id=2))
+    fleet = FleetSim(specs)
+    assert fleet.shapes.B == 6 and fleet.n_groups == 2
+    reps = fleet.run(2)
+    for g, idxs, chi in ((2, [3, 4, 5], 0.5), (4, [1, 2], 0.1)):
+        grp = fleet.group_reports[g][-1]
+        member_sum = sum(reps[i][-1].writes_committed for i in idxs)
+        assert grp.writes_committed == int(member_sum / (1 + chi)), g
+        assert grp.reads_served == \
+            sum(reps[i][-1].reads_served for i in idxs), g
+
+
+def test_group_validation_guards():
+    cfg = _small_cluster("guard")
+    ok = shard_specs(cfg, shards=2, seed=0, group_id=0)
+    # declared size must match the actual member count (ragged guard)
+    with pytest.raises(AssertionError):
+        FleetSim(ok[:1])
+    # shard groups need the digest pipeline
+    with pytest.raises(AssertionError):
+        FleetSim(ok, pipeline="host")
+    # shards must not manage (mode="raft" members never do)
+    import dataclasses
+    bad = [dataclasses.replace(s, mode="bwraft") for s in ok]
+    with pytest.raises(AssertionError):
+        FleetSim(bad)
+
+
+def test_cross_shard_mark_floor_property():
+    """The deterministic marking pattern (DESIGN.md §9): exactly
+    floor(n * chi) of the first n entries are marked — no RNG consumed,
+    chi = 0 marks nothing, chi = 1 marks everything."""
+    import jax.numpy as jnp
+    from repro.core import step as step_mod
+    for chi in (0.0, 0.1, 0.3, 0.5, 1.0):
+        marks = np.asarray(step_mod.cross_shard_mark(
+            jnp.arange(1000), jnp.float32(chi)))
+        cum = np.cumsum(marks)
+        for n in (1, 7, 100, 1000):
+            want = int(np.floor(np.float32(n) * np.float32(chi)))
+            assert cum[n - 1] == want, (chi, n)
+    assert not np.asarray(step_mod.cross_shard_mark(
+        jnp.arange(64), jnp.float32(0.0))).any()
+    assert np.asarray(step_mod.cross_shard_mark(
+        jnp.arange(64), jnp.float32(1.0))).all()
