@@ -51,15 +51,20 @@ def tick_ms(ticks: float) -> float:
 
 
 def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
-                 shards=2, group_id=0) -> List[MemberSpec]:
+                 shards=2, group_id=0, market="process",
+                 trace=None) -> List[MemberSpec]:
     """Fleet members for one (bwraft, raft, multiraft-shards) comparison
     point: 2 + `shards` members, batched into whatever FleetSim they join.
     The shard members carry the group identity `group_id` (DESIGN.md §9),
     so the fleet runs the 2PC coupling in-graph and reports the shards as
     one grouped Multi-Raft system (`FleetSim.group_reports[group_id]`);
-    comparison points sharing a fleet must use distinct group ids."""
+    comparison points sharing a fleet must use distinct group ids.
+    `market`/`trace` select the BW-Raft member's spot market
+    (DESIGN.md §10) — the on-demand baselines lease no spot nodes, so
+    the market only moves the spot consumer."""
     return ([MemberSpec(cfg=cfg, mode="bwraft", write_rate=write_rate,
-                        read_rate=read_rate, phi=phi, seed=seed),
+                        read_rate=read_rate, phi=phi, seed=seed,
+                        market=market, trace=trace),
              MemberSpec(cfg=cfg, mode="raft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed)]
             + multiraft.shard_specs(cfg, shards=shards,
@@ -79,16 +84,20 @@ def collect_systems(fleet, lo, *, group_id):
 
 
 def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
-                shards=2):
+                shards=2, market="process", trace=None):
     """(bwraft, raft, multiraft) steady-state reports.
 
     Fleet path: all three systems (2 + `shards` members) advance in one
     batched program, the Multi-Raft shards as one device-coupled group
     (DESIGN.md §9).  Sequential path: the pre-fleet per-system loop with
-    the frozen sequential Multi-Raft reference."""
+    the frozen sequential Multi-Raft reference.  `market="trace"` runs
+    the BW-Raft member on a replayed `market.MarketTrace` instead of the
+    synthetic walk (DESIGN.md §10) — the headline comparison on a real
+    market (`examples/spot_market_scaleout.py --trace`)."""
     if not USE_FLEET:
         bw = BWRaftSim(cfg, mode="bwraft", write_rate=write_rate,
-                       read_rate=read_rate, phi=phi, seed=seed)
+                       read_rate=read_rate, phi=phi, seed=seed,
+                       market=market, trace=trace)
         og = BWRaftSim(cfg, mode="raft", write_rate=write_rate,
                        read_rate=read_rate, phi=phi, seed=seed)
         mr = multiraft.MultiRaftSim(cfg, shards=shards,
@@ -98,7 +107,8 @@ def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
         return bw.run(epochs)[-1], og.run(epochs)[-1], mr.run(epochs)[-1]
 
     specs = system_specs(cfg, write_rate=write_rate, read_rate=read_rate,
-                         seed=seed, phi=phi, shards=shards, group_id=0)
+                         seed=seed, phi=phi, shards=shards, group_id=0,
+                         market=market, trace=trace)
     fleet = FleetSim(specs)
     fleet.run(epochs)
     return collect_systems(fleet, 0, group_id=0)

@@ -3,6 +3,14 @@
 markets — BW-Raft vs original Raft vs Multi-Raft (Figs. 7/8).
 
     PYTHONPATH=src python examples/spot_market_scaleout.py [--epochs 6]
+
+``--trace <name>`` replays a committed sample market trace instead of the
+synthetic walk (DESIGN.md §10): the BW-Raft member leases its
+secretaries/observers against real per-site price moves and preemption
+events, while the on-demand baselines are market-blind — the paper's
+Fig. 8 story on a real market.
+
+    PYTHONPATH=src python examples/spot_market_scaleout.py --trace aws-us-east
 """
 import argparse
 import os
@@ -11,20 +19,33 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import scaled_cluster, run_systems
+from repro.market import available_traces, load
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--trace", default=None, choices=available_traces(),
+                    help="replay a committed sample market trace instead "
+                         "of the synthetic walk (DESIGN.md §10)")
     args = ap.parse_args()
+    if args.trace is not None:
+        print(f"market: replaying trace '{args.trace}'")
     print(f"{'F':>4} {'system':>10} {'goodput':>9} {'w_lat p95':>10} "
           f"{'cost/epoch':>11} {'cost/kop':>9}")
     for f_per_site in (2, 8):
         cfg = scaled_cluster(f_per_site)
+        trace = None
+        if args.trace is not None:
+            trace = load(args.trace,
+                         ticks=args.epochs * cfg.period_ticks)
         bw, og, mr = run_systems(cfg, write_rate=4.0 * f_per_site,
                                  read_rate=12.0 * f_per_site,
                                  epochs=args.epochs,
-                                 shards=max(f_per_site // 2, 2))
+                                 shards=max(f_per_site // 2, 2),
+                                 market="process" if trace is None
+                                 else "trace",
+                                 trace=trace)
         for name, r in (("bwraft", bw), ("original", og),
                         ("multiraft", mr)):
             print(f"{4*f_per_site:>4} {name:>10} {r.goodput:>9.0f} "

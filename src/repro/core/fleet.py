@@ -13,8 +13,9 @@ compiled **once per static shape**.  The cache key is
 
 where N/S/L/K are the node/site/log/key-space sizes **padded to the max
 across the batch**.  Everything else — per-cluster rates, phi, prices,
-volatility, timeouts, voter majorities, RTT matrices — enters as jit
-*arguments*, so changing the sweep grid, the seeds, or even the member
+volatility, timeouts, voter majorities, RTT matrices, the (S, Tt)
+market-trace arrays (DESIGN.md §10) — enters as jit *arguments*, so
+changing the sweep grid, the seeds, the traces, or even the member
 topologies (at equal padded shapes) never recompiles.  Check
 `FleetSim.compile_count` (the example `examples/sweep_fleet.py` asserts
 it is exactly 1 for a 32-cluster sweep).
@@ -78,7 +79,8 @@ _BATCHED_STATIC_KEYS = ("site", "is_voter", "rtt", "majority")
 
 # spec fields sweepable via FleetSim.from_sweep axes
 _SWEEP_AXES = ("mode", "write_rate", "read_rate", "phi", "seed",
-               "manage_resources", "spot_price_vol", "budget_per_period")
+               "manage_resources", "spot_price_vol", "budget_per_period",
+               "market", "trace")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +111,14 @@ class MemberSpec:
     shards_per_group: int = 1
     cross_shard_frac: float = 0.0
     two_pc_ticks: Optional[int] = None
+    # spot-market source (DESIGN.md §10): "process" runs the synthetic
+    # walk, "trace" replays this member's `market.MarketTrace` — the
+    # (S, Tt) price/revocation arrays ride in cfg_c as jit arguments
+    # (every member's arrays are fitted to the fleet-wide max trace
+    # length, time-wrapped, so one batched program serves any mix of
+    # traced and process members and a B-trace sweep is one dispatch)
+    market: str = "process"
+    trace: Optional[object] = None          # market.MarketTrace
 
     @property
     def manage(self) -> bool:
@@ -248,9 +258,12 @@ def _fleet_epoch_fn_host(shapes: FleetShapes, shared: Dict):
 
 
 class _Member:
-    """Host-side bookkeeping for one fleet slot."""
+    """Host-side bookkeeping for one fleet slot.  `trace_ticks` is the
+    fleet-wide market-trace width every member's cfg_c arrays share
+    (DESIGN.md §10)."""
 
-    def __init__(self, spec: MemberSpec, shapes: FleetShapes):
+    def __init__(self, spec: MemberSpec, shapes: FleetShapes,
+                 trace_ticks: int = 1):
         assert spec.mode in ("bwraft", "raft")
         cfg = spec.cfg
         if spec.budget_per_period is not None:
@@ -283,7 +296,8 @@ class _Member:
             cfg, write_rate=spec.write_rate, read_rate=spec.read_rate,
             phi=spec.phi, pad_sites=self.pads["pad_sites"],
             spot_price_vol=spec.spot_price_vol,
-            cross_shard_frac=spec.cross_shard_frac, two_pc_ticks=two_pc)
+            cross_shard_frac=spec.cross_shard_frac, two_pc_ticks=two_pc,
+            market=spec.market, trace=spec.trace, trace_ticks=trace_ticks)
         self.rng = jax.random.PRNGKey(spec.seed)
         self.controller = ClusterController(cfg, self.static,
                                             seed=spec.seed)
@@ -338,7 +352,15 @@ class FleetSim:
             K=max(s.cfg.key_space for s in specs),
             T=periods.pop(),
         )
-        self.members = [_Member(s, self.shapes) for s in specs]
+        # fleet-shared market-trace width (DESIGN.md §10): every member's
+        # cfg_c trace arrays stack to (B, S, Tt); shorter traces time-wrap
+        # (`MarketTrace.fit_to`, matching the in-step modulo lookup) and
+        # process members carry inert placeholders of the same width
+        self.trace_ticks = max(
+            [s.trace.ticks for s in specs if s.trace is not None],
+            default=1)
+        self.members = [_Member(s, self.shapes, self.trace_ticks)
+                        for s in specs]
 
         # ---- shard groups (DESIGN.md §9) -----------------------------
         # members with group_id >= 0 are Multi-Raft shards; groups may be

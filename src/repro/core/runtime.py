@@ -8,9 +8,10 @@ dead spot slots, wire secretaries/observers, compact the log window.
 
 Compilation contract (DESIGN.md §7): the epoch function is compiled **once
 per static shape** — the cache key is (cluster config, padding), and every
-workload knob in `cfg_c` (rates, phi, prices, volatility, timeouts) is a
-jit *argument*, so rate/volatility/kill-rate sweeps over one topology reuse
-the compiled program.  For sweeps over many clusters in a single compiled
+workload knob in `cfg_c` (rates, phi, prices, volatility, timeouts, the
+(S, Tt) market-trace arrays of DESIGN.md §10) is a jit *argument*, so
+rate/volatility/kill-rate/trace sweeps over one topology reuse the
+compiled program.  For sweeps over many clusters in a single compiled
 program, use `core/fleet.py`, which vmaps the same tick over a leading
 batch axis; the host-side control plane below (`ClusterController`,
 `lease_and_wire`, `build_report`, `compact_state`) is shared by both.
@@ -83,17 +84,47 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
                     pad_sites: int = 0,
                     spot_price_vol: Optional[float] = None,
                     cross_shard_frac: float = 0.0,
-                    two_pc_ticks: int = 0) -> Dict:
+                    two_pc_ticks: int = 0,
+                    market: str = "process",
+                    trace=None, trace_ticks: Optional[int] = None) -> Dict:
     """Per-epoch dynamic knobs — all jit arguments, never baked into the
     compiled program.  `pad_sites` repeats the last site's prices so padded
     clusters share one (S,) shape (DESIGN.md §7).  `cross_shard_frac` /
     `two_pc_ticks` are the Multi-Raft 2PC coupling knobs (DESIGN.md §9):
     zero for ungrouped members, which keeps the tick bit-identical to the
-    pre-group program."""
+    pre-group program.
+
+    `market` selects the spot-market source (DESIGN.md §10):
+    `"process"` runs the synthetic walk, `"trace"` replays the given
+    `market.MarketTrace` — its (S, Tt) price/revocation arrays enter
+    here as jit arguments (`price_trace` / `revoke_trace`, fitted to the
+    padded site count), so swapping traces at one shape never recompiles.
+    `trace_ticks` widens the trace arrays to a fleet-shared Tt (time
+    wrap, `MarketTrace.fit_to`); process-only members carry an inert
+    (S, max(trace_ticks, 1)) placeholder so mixed fleets still stack."""
     assert 0.0 <= cross_shard_frac <= 1.0, cross_shard_frac
     assert 0 <= two_pc_ticks <= HIST_TAIL, \
         f"two_pc_ticks={two_pc_ticks} exceeds the histogram tail " \
         f"(HIST_TAIL={HIST_TAIL}) — widen runtime.HIST_TAIL"
+    assert market in ("process", "trace"), market
+    assert market == "process" or trace is not None, \
+        "market='trace' needs a market.MarketTrace (see market.load / " \
+        "market/synthetic.py providers)"
+    S = cfg.num_sites + pad_sites
+    if trace is not None:
+        width = trace_ticks or trace.ticks
+        fitted = trace.fit_to(S, width)
+        price_trace = jnp.asarray(fitted.price, jnp.float32)
+        revoke_trace = jnp.asarray(fitted.revoked, bool)
+        # the member's OWN period: the in-step lookup wraps at this (a
+        # jit argument), not at the fleet-shared array width, so a short
+        # trace widened next to a longer one still replays its own
+        # columns exactly (DESIGN.md §10 replay-neutral widening)
+        trace_len = min(trace.ticks, width)
+    else:
+        price_trace = jnp.zeros((S, trace_ticks or 1), jnp.float32)
+        revoke_trace = jnp.zeros((S, trace_ticks or 1), bool)
+        trace_len = 1
     od = [s.on_demand_price for s in cfg.sites]
     sp = [s.spot_price_mean for s in cfg.sites]
     od = od + [od[-1]] * pad_sites
@@ -101,6 +132,10 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
     vol = (cfg.sites[0].spot_price_vol if spot_price_vol is None
            else spot_price_vol)
     return {
+        "market_trace": jnp.asarray(market == "trace"),
+        "price_trace": price_trace,
+        "revoke_trace": revoke_trace,
+        "trace_len": jnp.int32(trace_len),
         "write_rate": jnp.float32(write_rate),
         "read_rate": jnp.float32(read_rate),
         "phi": jnp.float32(phi),
@@ -262,7 +297,10 @@ def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int, *,
     reduction, digest extraction, then in-graph log compaction.  Returns
     `(compacted_state, digest)`; meant to be jitted with the state buffers
     donated (DESIGN.md §7.1).  `backend` picks the tick hot-op
-    implementation — `"xla"` or `"pallas"` (DESIGN.md §8)."""
+    implementation — `"xla"` or `"pallas"` (DESIGN.md §8).  The spot
+    market (synthetic process or trace replay) is selected by `cfg_c` —
+    the trace arrays are jit arguments, so a trace sweep reuses this
+    compiled program (DESIGN.md §10)."""
     cost_before = state["cost_accrued"]
 
     def body(carry, r):
@@ -445,11 +483,16 @@ class ClusterController:
     sequential `BWRaftSim` and every member of a batched `FleetSim`.
     """
 
-    def __init__(self, cfg: ClusterConfig, static, *, seed: int):
+    def __init__(self, cfg: ClusterConfig, static, *, seed: int,
+                 predictor: Optional[mgr.RevocationPredictor] = None):
         self.cfg = cfg
         self.static = static
         self.np_rng = np.random.default_rng(seed + 1)
-        self.predictor = mgr.RevocationPredictor(cfg.num_sites)
+        # default: flat-prior EWMA; pass a trace-calibrated predictor
+        # (`market.calibrate.calibrate_predictor`) to score spot offers
+        # with per-site rates fitted offline (DESIGN.md §10)
+        self.predictor = predictor if predictor is not None \
+            else mgr.RevocationPredictor(cfg.num_sites)
         self.reads_prev = 0
         self.leased = np.zeros(cfg.num_sites, np.int64)
 
@@ -509,6 +552,14 @@ class BWRaftSim:
     tick hot-op implementation — `"xla"` (default) or `"pallas"` (the
     fused `kernels/raft_tick` kernels, DESIGN.md §8); trajectories are
     bit-identical either way (test invariant).
+
+    `market="trace"` replays a `market.MarketTrace` instead of the
+    synthetic walk (DESIGN.md §10) — the trace rides in `cfg_c` as jit
+    arguments, and a walk exported via
+    `market/synthetic.export_walk_trace` at this seed replays
+    bit-identically.  `predictor` optionally seeds the control plane
+    with a trace-calibrated `RevocationPredictor`
+    (`market.calibrate.calibrate_predictor`).
     """
 
     def __init__(self, cfg: ClusterConfig, *, mode: str = "bwraft",
@@ -520,7 +571,8 @@ class BWRaftSim:
                  spot_price_vol: Optional[float] = None,
                  prelease: Optional[Tuple[int, int]] = None,
                  backend: str = "xla",
-                 cross_shard_frac: float = 0.0, two_pc_ticks: int = 0):
+                 cross_shard_frac: float = 0.0, two_pc_ticks: int = 0,
+                 market: str = "process", trace=None, predictor=None):
         assert mode in ("bwraft", "raft")
         assert backend in ("xla", "pallas"), backend
         self.cfg = cfg
@@ -535,10 +587,12 @@ class BWRaftSim:
                                      pad_sites=pad_sites,
                                      spot_price_vol=spot_price_vol,
                                      cross_shard_frac=cross_shard_frac,
-                                     two_pc_ticks=two_pc_ticks)
+                                     two_pc_ticks=two_pc_ticks,
+                                     market=market, trace=trace)
         self.rng = jax.random.PRNGKey(seed)
         self.manage = manage_resources and mode == "bwraft"
-        self.controller = ClusterController(cfg, self.static, seed=seed)
+        self.controller = ClusterController(cfg, self.static, seed=seed,
+                                            predictor=predictor)
         self.epoch = 0
         self._reports: List[EpochReport] = []
 

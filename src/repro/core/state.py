@@ -23,7 +23,7 @@ between runs of identical padded shapes.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +89,23 @@ def build_static(cfg: ClusterConfig, *, pad_nodes: int = 0,
     }
 
 
+def site_price_init(cfg: ClusterConfig, S: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Initial per-site spot price and bid, (S,) float32 each — padded
+    sites (S > cfg.num_sites) repeat the last real site's parameters.
+    The bid rule (1.5x the site's mean price) lives here so `init_state`
+    and the market providers (`market/synthetic.py`, the AWS loader's
+    derived revocations) stay on one definition (DESIGN.md §10)."""
+    site_of = [min(s, cfg.num_sites - 1) for s in range(S)]
+    price0 = np.asarray(
+        [cfg.sites[site_of[s]].spot_price_mean for s in range(S)],
+        np.float32)
+    bid = np.asarray(
+        [cfg.sites[site_of[s]].spot_price_mean * 1.5 for s in range(S)],
+        np.float32)
+    return price0, bid
+
+
 def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
                pad_keys: int = 0) -> Dict[str, jnp.ndarray]:
     """Initial cluster state.  `pad_log`/`pad_keys` widen the log window and
@@ -97,7 +114,7 @@ def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
     N, V = static["N"], static["V"]
     L, K = cfg.max_log + pad_log, cfg.key_space + pad_keys
     S = static.get("S", cfg.num_sites)
-    site_of = [min(s, cfg.num_sites - 1) for s in range(S)]
+    price0, bid0 = site_price_init(cfg, S)
     z = lambda *sh: jnp.zeros(sh, jnp.int32)
     st = {
         "tick": jnp.zeros((), jnp.int32),
@@ -153,12 +170,8 @@ def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
         "entry_submit_t": jnp.full((L,), -1, jnp.int32),
         "entry_commit_t": jnp.full((L,), -1, jnp.int32),
         # spot market
-        "spot_price": jnp.asarray(
-            [cfg.sites[site_of[s]].spot_price_mean for s in range(S)],
-            jnp.float32),
-        "spot_bid": jnp.asarray(
-            [cfg.sites[site_of[s]].spot_price_mean * 1.5 for s in range(S)],
-            jnp.float32),
+        "spot_price": jnp.asarray(price0, jnp.float32),
+        "spot_bid": jnp.asarray(bid0, jnp.float32),
         # workload stats accumulators (reset each period by the manager)
         "reads_arrived": jnp.zeros((), jnp.int32),
         "writes_arrived": jnp.zeros((), jnp.int32),

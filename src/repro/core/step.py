@@ -3,7 +3,8 @@
 Implements the paper's §3 mechanics with an explicit latency model
 (per-link RTT classes) and per-node work-capacity accounting:
 
-  1. spot-market dynamics: price step, revocations kill secretaries/observers
+  1. spot-market dynamics: price step (synthetic walk or trace replay,
+     DESIGN.md §10), revocations kill secretaries/observers
   2. client arrivals: Poisson reads (to observers/followers) + writes (to
      the leader's queue)
   3. leader: accept writes into the log (capacity-bounded), ship
@@ -35,6 +36,7 @@ import jax.numpy as jnp
 from repro.core.state import (CANDIDATE, DEAD, FOLLOWER, LEADER, OBSERVER,
                               SECRETARY, leader_id)
 from repro.kernels.raft_tick import ops as rt_ops
+from repro.market import synthetic as market_synth
 
 
 def _rand(rng, n):
@@ -53,17 +55,43 @@ def cross_shard_mark(idx, frac):
 
 
 def spot_step(state, static, cfg_c, rng):
-    """Mean-reverting site price processes + revocation of spot nodes."""
+    """Site price dynamics + revocation of spot nodes (DESIGN.md §10).
+
+    Two market sources, selected per member by the `cfg_c["market_trace"]`
+    flag — a jit *argument*, so process and trace members mix freely in
+    one compiled fleet program:
+
+      process  the synthetic mean-reverting walk
+               (`market/synthetic.walk_price_update` — the §10 provider
+               refactor keeps the expression bit-identical); revocation
+               is price-driven (price > the site's standing bid)
+      trace    per-tick lookup into the (S, Tt) `cfg_c["price_trace"]` /
+               `cfg_c["revoke_trace"]` arrays at column
+               `tick % cfg_c["trace_len"]` — the member's OWN trace
+               period, a jit argument, so short traces wrap correctly
+               even when widened to a fleet-shared Tt (the §10
+               time-wrap rule); both price and revocation replay the
+               trace verbatim, no RNG drawn from the market
+
+    The i.i.d. failure knob `phi` applies on top of either source (set
+    phi=0 for pure trace replay).  The tick's RNG is split identically on
+    both sources and the process branch is computed-then-discarded under
+    a trace, so a synthetic walk exported as a trace
+    (`market/synthetic.export_walk_trace`) replays **bit-identically**
+    through this function — the §10 replay invariant
+    (`tests/test_market.py`, gated by `benchmarks/perf_market.py`).
+    """
     S = state["spot_price"].shape[0]
     r_price, r_revoke, r_fail = _rand(rng, 3)
-    mean = cfg_c["spot_price_mean"]
-    vol = cfg_c["spot_price_vol"]
-    noise = jax.random.normal(r_price, (S,)) * vol * mean
-    price = state["spot_price"] + 0.2 * (mean - state["spot_price"]) + \
-        0.15 * noise
-    price = jnp.maximum(price, 0.1 * mean)
+    synth_price = market_synth.walk_price_update(
+        state["spot_price"], cfg_c["spot_price_mean"],
+        cfg_c["spot_price_vol"], r_price)
+    use_trace = cfg_c["market_trace"]
+    t = jnp.mod(state["tick"], cfg_c["trace_len"])
+    price = jnp.where(use_trace, cfg_c["price_trace"][:, t], synth_price)
 
-    revoked_site = price > state["spot_bid"]                  # (S,)
+    revoked_site = jnp.where(use_trace, cfg_c["revoke_trace"][:, t],
+                             price > state["spot_bid"])       # (S,)
     site = jnp.asarray(static["site"])
     is_spot = ~jnp.asarray(static["is_voter"])
     # i.i.d. failure knob phi on top of price-driven revocation

@@ -1,0 +1,34 @@
+"""Trace-driven spot-market subsystem (DESIGN.md §10).
+
+Every market model — the in-sim mean-reverting walk, regime-switching
+and correlated-shock processes, AWS spot-price histories, Google
+cluster-trace preemption logs — compiles down to one replayable artifact:
+a `MarketTrace` of (S, T) per-site price and revocation arrays on the
+tick grid.  Traces enter the device program through `cfg_c` as jit
+*arguments* (`runtime.make_cfg_arrays(market="trace", trace=...)`), so a
+B-member trace sweep is still one compiled dispatch per epoch, and a
+synthetic walk exported with `export_walk_trace` replays bit-identically
+through the trace path (the §10 replay invariant).
+
+`market.calibrate` fits `manager.RevocationPredictor` and the walk's
+mean/vol against a trace's empirical revocation rates.
+"""
+from repro.market.traces import (MarketTrace, available_traces,
+                                 bucket_events, load, load_aws_spot_history,
+                                 load_google_cluster_events, resample_price)
+from repro.market.synthetic import (CorrelatedSiteShocks, MeanRevertingWalk,
+                                    RegimeSwitchingWalk, export_walk_trace,
+                                    walk_params_from_cluster,
+                                    walk_price_update)
+from repro.market.calibrate import (CalibrationReport, WalkFit,
+                                    calibrate_predictor,
+                                    epoch_revocation_rates, fit_walk)
+
+__all__ = [
+    "MarketTrace", "available_traces", "bucket_events", "load",
+    "load_aws_spot_history", "load_google_cluster_events", "resample_price",
+    "CorrelatedSiteShocks", "MeanRevertingWalk", "RegimeSwitchingWalk",
+    "export_walk_trace", "walk_params_from_cluster", "walk_price_update",
+    "CalibrationReport", "WalkFit", "calibrate_predictor",
+    "epoch_revocation_rates", "fit_walk",
+]

@@ -1,0 +1,125 @@
+"""Calibrating the control plane against a market trace (DESIGN.md §10).
+
+Two fits, both against the (S, T) arrays of a `traces.MarketTrace`:
+
+  `calibrate_predictor`  fit `manager.RevocationPredictor` (the SpotTune
+                         stand-in Algorithm 1 scores offers with): pick
+                         the EWMA alpha minimizing one-step-ahead error
+                         on the trace's per-epoch per-site revocation
+                         rates, seed the rate vector from the data, and
+                         report the residual calibration error.
+  `fit_walk`             moment-match the synthetic walk (mean via the
+                         sample mean, vol by inverting the walk's
+                         residual ``p[t+1] - p[t] - 0.2*(mean - p[t]) =
+                         0.15*vol*mean*noise``) so process-mode sweeps
+                         can run at trace-calibrated parameters.
+
+Pure NumPy — this is host-side control-plane tooling, like `manager`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.manager import RevocationPredictor
+from repro.market.traces import MarketTrace
+
+DEFAULT_ALPHAS = (0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9)
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """What a fit achieved, for `BENCH_market.json` and the tests."""
+    trace: str
+    alpha: float                 # chosen EWMA smoothing
+    empirical: np.ndarray        # (S,) per-tick revocation hazard
+    fitted: np.ndarray           # (S,) predictor rates after the fit
+    mae: float                   # mean |fitted - empirical|
+    one_step_mse: float          # best one-step-ahead MSE over epochs
+
+
+def epoch_revocation_rates(trace: MarketTrace, period_ticks: int
+                           ) -> np.ndarray:
+    """(E, S) per-epoch per-site revocation rates — the fraction of each
+    epoch's ticks a site spends revoked, i.e. exactly what the manager's
+    per-epoch "peek" observes.  Uses the whole epochs only (the ragged
+    tail is dropped); needs at least one full epoch."""
+    E = trace.ticks // period_ticks
+    assert E >= 1, (trace.ticks, period_ticks)
+    r = trace.revoked[:, :E * period_ticks]
+    return r.reshape(trace.sites, E, period_ticks).mean(axis=2).T
+
+
+def calibrate_predictor(trace: MarketTrace, period_ticks: int, *,
+                        alphas: Sequence[float] = DEFAULT_ALPHAS,
+                        prior: float = 0.02
+                        ) -> Tuple[RevocationPredictor, CalibrationReport]:
+    """Fit `RevocationPredictor` to a trace: replay the trace's per-epoch
+    revocation rates through the EWMA for every candidate alpha, score
+    each by one-step-ahead MSE (predict *before* updating — exactly the
+    order Algorithm 1 consumes the predictor in), keep the best, and
+    report the calibration error of the final rates against the trace's
+    overall empirical hazard."""
+    obs = epoch_revocation_rates(trace, period_ticks)       # (E, S)
+    S = trace.sites
+    leased = np.ones(S)
+
+    def replay(alpha: float) -> Tuple[RevocationPredictor, float]:
+        p = RevocationPredictor(S, alpha=alpha, prior=prior)
+        err = 0.0
+        for e in range(obs.shape[0]):
+            err += float(np.mean((p.predict() - obs[e]) ** 2))
+            p.update(obs[e], leased)
+        return p, err / obs.shape[0]
+
+    scored = [(replay(a), a) for a in alphas]
+    (predictor, mse), alpha = min(scored, key=lambda t: t[0][1])
+    empirical = trace.empirical_revocation_rates()
+    report = CalibrationReport(
+        trace=trace.name, alpha=float(alpha), empirical=empirical,
+        fitted=predictor.predict(),
+        mae=float(np.mean(np.abs(predictor.predict() - empirical))),
+        one_step_mse=float(mse))
+    return predictor, report
+
+
+@dataclasses.dataclass
+class WalkFit:
+    """Moment-matched walk parameters recovered from a price trace."""
+    trace: str
+    mean: np.ndarray             # (S,) fitted reversion targets
+    vol: float                   # fitted relative volatility (pooled)
+    vol_per_site: np.ndarray     # (S,)
+    # one-step fit quality: 1 - SSE(fitted reversion)/SSE(hold-last-price)
+    # — the share of one-step price variance the fitted mean reversion
+    # explains beyond predicting "price stays put".  > 0 means the walk
+    # structure is present in the trace; ~0 means a driftless random
+    # walk fits as well and the recovered mean/vol should be distrusted.
+    reversion_r2: float
+
+
+def fit_walk(trace: MarketTrace) -> WalkFit:
+    """Invert the walk recurrence on a price trace: the reversion target
+    is the per-site sample mean, and since the one-step residual of the
+    true walk is ``0.15 * vol * mean * N(0,1)`` (away from the price
+    floor), ``vol ≈ std(residual) / (0.15 * mean)`` per site.  Floor-
+    clamped ticks are excluded from the residual (the clamp truncates
+    the noise and would bias vol low).  `reversion_r2` scores the fit
+    against the hold-last-price null model."""
+    p = np.asarray(trace.price, np.float64)
+    mean = p.mean(axis=1)
+    resid = p[:, 1:] - (p[:, :-1] + 0.2 * (mean[:, None] - p[:, :-1]))
+    off_floor = p[:, 1:] > 0.1 * mean[:, None] * (1 + 1e-6)
+    vol_site = np.array([
+        resid[s][off_floor[s]].std() / (0.15 * max(mean[s], 1e-9))
+        if off_floor[s].any() else 0.0
+        for s in range(trace.sites)])
+    hold_err = p[:, 1:] - p[:, :-1]
+    r2 = 1.0 - float(np.sum(resid ** 2)) / \
+        max(float(np.sum(hold_err ** 2)), 1e-12)
+    return WalkFit(trace=trace.name, mean=mean.astype(np.float32),
+                   vol=float(vol_site.mean()),
+                   vol_per_site=vol_site.astype(np.float32),
+                   reversion_r2=r2)

@@ -1,0 +1,211 @@
+"""Synthetic market providers: processes that materialize to (S, T) traces.
+
+Three generators, all compiling down to `traces.MarketTrace` (the §10
+provider contract):
+
+  `MeanRevertingWalk`      THE in-sim process: `walk_price_update` below
+                           is the exact expression `step.spot_step` runs,
+                           and `export_walk_trace` replays the sim's key
+                           schedule, so an exported walk fed back through
+                           the trace path is **bit-identical** to the
+                           process path (the §10 replay invariant,
+                           `tests/test_market.py`).
+  `RegimeSwitchingWalk`    calm/spike Markov-modulated vol+mean — the
+                           bursty AZ-wide price spikes real AWS histories
+                           show, which a single-vol walk cannot produce.
+  `CorrelatedSiteShocks`   a common cross-site shock factor — correlated
+                           capacity crunches, the failure mode that
+                           revokes several sites in one tick and actually
+                           threatens quorums.
+
+Every provider exposes ``materialize(ticks, *, seed) -> MarketTrace``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as state_mod
+from repro.core.cluster_config import ClusterConfig
+from repro.market.traces import MarketTrace
+
+
+def walk_price_update(price, mean, vol, r_price):
+    """One tick of the mean-reverting site price walk — the process the
+    paper's synthetic market runs.  Factored out of `step.spot_step` so
+    the in-sim step and the trace exporter share ONE expression and the
+    exported trace replays bit-identically (DESIGN.md §10).  Keep the
+    operation order untouched: any reformulation breaks the replay
+    invariant at the last float32 bit."""
+    noise = jax.random.normal(r_price, price.shape) * vol * mean
+    price = price + 0.2 * (mean - price) + 0.15 * noise
+    return jnp.maximum(price, 0.1 * mean)
+
+
+def walk_params_from_cluster(cfg: ClusterConfig, *, pad_sites: int = 0,
+                             spot_price_vol: Optional[float] = None
+                             ) -> Tuple[np.ndarray, float, np.ndarray,
+                                        np.ndarray]:
+    """(mean, vol, price0, bid) of the in-sim walk for this cluster —
+    the same derivations `runtime.make_cfg_arrays` (mean/vol, padded
+    sites repeat the last real site) and `state.init_state`
+    (price0/bid via `state.site_price_init`) use."""
+    sp = [s.spot_price_mean for s in cfg.sites]
+    sp = sp + [sp[-1]] * pad_sites
+    vol = (cfg.sites[0].spot_price_vol if spot_price_vol is None
+           else spot_price_vol)
+    price0, bid = state_mod.site_price_init(cfg, cfg.num_sites + pad_sites)
+    return np.asarray(sp, np.float32), float(vol), price0, bid
+
+
+@functools.partial(jax.jit, static_argnames=("T",))
+def _epoch_walk_prices(price, sub, mean, vol, *, T: int):
+    """One epoch of walk prices under the sim's exact key schedule: tick
+    keys = split(epoch key, T); per tick the sim splits into
+    (r_spot, r_work, r_lead, r_elec) and `spot_step` splits r_spot into
+    (r_price, r_revoke, r_fail) — the price consumes r_price only."""
+    keys = jax.random.split(sub, T)
+
+    def body(p, k):
+        r_spot = jax.random.split(k, 4)[0]
+        r_price = jax.random.split(r_spot, 3)[0]
+        p = walk_price_update(p, mean, vol, r_price)
+        return p, p
+    return jax.lax.scan(body, price, keys)
+
+
+def export_walk_trace(cfg: ClusterConfig, *, seed: int, epochs: int,
+                      pad_sites: int = 0,
+                      spot_price_vol: Optional[float] = None,
+                      name: Optional[str] = None) -> MarketTrace:
+    """Materialize the in-sim mean-reverting walk as a `MarketTrace`
+    covering `epochs` x `cfg.period_ticks` ticks, bit-identical to what a
+    `BWRaftSim(cfg, seed=seed)` / same-seed fleet member would draw: the
+    run key is PRNGKey(seed), each epoch consumes one
+    ``rng, sub = split(rng)`` exactly as `BWRaftSim.run_epoch` /
+    `FleetSim._split_epoch_rngs` do.  Revocations follow the in-sim bid
+    rule (price > 1.5x site mean).  This is the §10 replay-invariant
+    exporter (`tests/test_market.py`, `benchmarks/perf_market.py`)."""
+    mean, vol, price0, bid = walk_params_from_cluster(
+        cfg, pad_sites=pad_sites, spot_price_vol=spot_price_vol)
+    rng = jax.random.PRNGKey(seed)
+    price = jnp.asarray(price0)
+    mean_j = jnp.asarray(mean, jnp.float32)
+    vol_j = jnp.float32(vol)
+    cols: List[np.ndarray] = []
+    for _ in range(epochs):
+        rng, sub = jax.random.split(rng)
+        price, ps = _epoch_walk_prices(price, sub, mean_j, vol_j,
+                                       T=cfg.period_ticks)
+        cols.append(np.asarray(ps))                      # (T, S)
+    prices = np.concatenate(cols, axis=0).T.astype(np.float32)  # (S, E*T)
+    return MarketTrace(name or f"walk-{cfg.name}-seed{seed}",
+                       prices, prices > bid[:, None])
+
+
+@dataclasses.dataclass(eq=False)
+class MeanRevertingWalk:
+    """The in-sim walk as a provider object (`materialize(ticks, seed)`);
+    `ticks` must be a whole number of `cfg.period_ticks` epochs because
+    bit-identity is defined against the sim's per-epoch key schedule."""
+    cfg: ClusterConfig
+    pad_sites: int = 0
+    spot_price_vol: Optional[float] = None
+
+    def materialize(self, ticks: int, *, seed: int) -> MarketTrace:
+        T = self.cfg.period_ticks
+        assert ticks % T == 0, \
+            f"ticks={ticks} must be a multiple of period_ticks={T}"
+        return export_walk_trace(self.cfg, seed=seed, epochs=ticks // T,
+                                 pad_sites=self.pad_sites,
+                                 spot_price_vol=self.spot_price_vol)
+
+
+def _floor_clamp(price: np.ndarray, mean: np.ndarray) -> np.ndarray:
+    """The walk's price floor (0.1x mean), applied at generation time —
+    traces replay verbatim, so the floor must be in the data
+    (DESIGN.md §10)."""
+    return np.maximum(price, 0.1 * mean)
+
+
+@dataclasses.dataclass(eq=False)
+class RegimeSwitchingWalk:
+    """Calm/spike Markov-modulated walk: each site carries a two-state
+    regime chain (calm -> spike w.p. `p_spike` per tick, spike -> calm
+    w.p. `p_calm`); the spike regime multiplies the walk's volatility by
+    `spike_vol_mult` and its reversion target by `spike_mean_mult`, which
+    is what drives prices through the bid and produces the *clustered*
+    revocation bursts AWS spot histories show."""
+    mean: np.ndarray
+    vol: float
+    bid: np.ndarray
+    p_spike: float = 0.02
+    p_calm: float = 0.25
+    spike_vol_mult: float = 4.0
+    spike_mean_mult: float = 1.8
+
+    @classmethod
+    def from_cluster(cls, cfg: ClusterConfig, **kw) -> "RegimeSwitchingWalk":
+        mean, vol, _, bid = walk_params_from_cluster(cfg)
+        return cls(mean=mean, vol=vol, bid=bid, **kw)
+
+    def materialize(self, ticks: int, *, seed: int) -> MarketTrace:
+        rng = np.random.default_rng(seed)
+        S = len(self.mean)
+        mean = np.asarray(self.mean, np.float64)
+        price = mean.copy()
+        spike = np.zeros(S, bool)
+        prices = np.empty((S, ticks), np.float32)
+        for t in range(ticks):
+            flip = rng.random(S)
+            spike = np.where(spike, flip >= self.p_calm, flip < self.p_spike)
+            target = mean * np.where(spike, self.spike_mean_mult, 1.0)
+            vol_t = self.vol * np.where(spike, self.spike_vol_mult, 1.0)
+            noise = rng.standard_normal(S) * vol_t * mean
+            price = _floor_clamp(price + 0.2 * (target - price) +
+                                 0.15 * noise, mean)
+            prices[:, t] = price
+        return MarketTrace(f"regime-seed{seed}", prices,
+                           prices > np.asarray(self.bid)[:, None])
+
+
+@dataclasses.dataclass(eq=False)
+class CorrelatedSiteShocks:
+    """Mean-reverting walk whose per-tick noise shares a common factor
+    across sites: ``z_s = sqrt(c)*z_common + sqrt(1-c)*z_site`` with
+    ``c = correlation`` — region-wide capacity crunches that push several
+    sites over their bids in the SAME tick, the simultaneous-revocation
+    pattern that actually threatens a quorum (and that i.i.d. per-site
+    noise essentially never produces)."""
+    mean: np.ndarray
+    vol: float
+    bid: np.ndarray
+    correlation: float = 0.6
+
+    @classmethod
+    def from_cluster(cls, cfg: ClusterConfig, **kw) -> "CorrelatedSiteShocks":
+        mean, vol, _, bid = walk_params_from_cluster(cfg)
+        return cls(mean=mean, vol=vol, bid=bid, **kw)
+
+    def materialize(self, ticks: int, *, seed: int) -> MarketTrace:
+        assert 0.0 <= self.correlation <= 1.0, self.correlation
+        rng = np.random.default_rng(seed)
+        S = len(self.mean)
+        mean = np.asarray(self.mean, np.float64)
+        price = mean.copy()
+        prices = np.empty((S, ticks), np.float32)
+        w_common = np.sqrt(self.correlation)
+        w_site = np.sqrt(1.0 - self.correlation)
+        for t in range(ticks):
+            z = w_common * rng.standard_normal() + \
+                w_site * rng.standard_normal(S)
+            price = _floor_clamp(price + 0.2 * (mean - price) +
+                                 0.15 * z * self.vol * mean, mean)
+            prices[:, t] = price
+        return MarketTrace(f"corr-seed{seed}", prices,
+                           prices > np.asarray(self.bid)[:, None])

@@ -45,3 +45,13 @@ def test_kernel_layer_is_cross_referenced():
     cited_from = set(refs.get("8", []))
     assert any("core/step.py" in f for f in cited_from), cited_from
     assert any("kernels/raft_tick" in f for f in cited_from), cited_from
+
+
+def test_market_contract_is_cross_referenced():
+    """Same rule for the §10 market-provider contract: cited from the
+    tick that replays traces (`spot_step`) and from the market package
+    that produces them."""
+    refs = _references()
+    cited_from = set(refs.get("10", []))
+    assert any("core/step.py" in f for f in cited_from), cited_from
+    assert any("repro/market/" in f for f in cited_from), cited_from

@@ -1,0 +1,441 @@
+"""The market provider contract (DESIGN.md §10): every market compiles to
+(S, T) price/revocation arrays riding in cfg_c as jit arguments; the
+synthetic walk exported as a trace replays **bit-identically** through
+the trace path (solo and fleet); a B-member trace sweep is ONE compiled
+program and ONE dispatch per run; resampling follows the zero-order-hold
+/ event-bucketing rules; and `market.calibrate` fits the
+RevocationPredictor and walk parameters against a trace."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import fleet as fleet_mod
+from repro.core import step as step_mod
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.fleet import FleetSim, MemberSpec
+from repro.core.runtime import BWRaftSim
+from repro.market import (MarketTrace, CorrelatedSiteShocks,
+                          RegimeSwitchingWalk, available_traces,
+                          bucket_events, calibrate_predictor,
+                          epoch_revocation_rates, export_walk_trace,
+                          fit_walk, load, resample_price,
+                          walk_params_from_cluster, walk_price_update)
+
+
+def _small_cluster(name="mkt", followers=(2, 2, 1), max_log=1024):
+    sites = tuple(
+        SiteConfig(f"{name}-s{i}", followers=f, rtt_intra=1,
+                   rtt_inter=6 + 2 * i, on_demand_price=0.0416,
+                   spot_price_mean=0.0125)
+        for i, f in enumerate(followers))
+    return ClusterConfig(name=name, sites=sites, max_log=max_log,
+                         key_space=256, max_secretaries=4,
+                         max_observers=8, period_ticks=60)
+
+
+def _states_equal(a, b):
+    return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+               for k in a)
+
+
+def _reports_equal(a, b):
+    keys = ("reads_arrived", "writes_arrived", "reads_served",
+            "writes_committed", "killed", "n_secretaries", "n_observers",
+            "leader_changes", "no_leader_ticks")
+    ok = all(getattr(a, k) == getattr(b, k) for k in keys)
+    return ok and a.cost == b.cost
+
+
+# --------------------------------------------------------------------- #
+# §10 replay invariant
+# --------------------------------------------------------------------- #
+def test_walk_export_replays_bit_identically_solo():
+    """A synthetic walk exported as a trace and replayed through the
+    trace path reproduces today's process-path trajectory bit for bit —
+    management, phi kills, reports and all (same seed => same RNG
+    schedule, market values replayed verbatim)."""
+    cfg = _small_cluster()
+    epochs = 3
+    kw = dict(write_rate=6.0, read_rate=24.0, phi=0.03, seed=11)
+    process = BWRaftSim(cfg, **kw)
+    process_reports = process.run(epochs)
+
+    trace = export_walk_trace(cfg, seed=11, epochs=epochs)
+    replay = BWRaftSim(cfg, **kw, market="trace", trace=trace)
+    replay_reports = replay.run(epochs)
+
+    assert _states_equal(process.state, replay.state)
+    for e, (a, b) in enumerate(zip(process_reports, replay_reports)):
+        assert _reports_equal(a, b), f"epoch {e}"
+        if a.decision is not None or b.decision is not None:
+            assert (a.decision.dk_s, a.decision.dk_o) == \
+                (b.decision.dk_s, b.decision.dk_o)
+
+
+def test_walk_export_replays_bit_identically_fleet():
+    """Same invariant across a batched fleet: a B=3 process fleet and the
+    B=3 trace-replay fleet (each member its own exported walk) land on
+    bit-identical states and equal reports — including through the
+    single-dispatch multi-epoch scan both fleets take."""
+    cfg = _small_cluster()
+    epochs = 2
+    knobs = [dict(write_rate=6.0, seed=0), dict(write_rate=12.0, seed=1),
+             dict(write_rate=3.0, seed=2)]
+    base = dict(read_rate=24.0, phi=0.02, manage_resources=False,
+                prelease=(2, 4))
+    process = FleetSim([MemberSpec(cfg=cfg, **base, **k) for k in knobs])
+    assert process.single_dispatch_eligible
+    process_reports = process.run(epochs)
+
+    replay = FleetSim([
+        MemberSpec(cfg=cfg, **base, **k, market="trace",
+                   trace=export_walk_trace(cfg, seed=k["seed"],
+                                           epochs=epochs))
+        for k in knobs])
+    replay_reports = replay.run(epochs)
+
+    assert _states_equal(process.state, replay.state)
+    for i in range(len(knobs)):
+        for a, b in zip(process_reports[i], replay_reports[i]):
+            assert _reports_equal(a, b), f"member {i}"
+
+
+def test_trace_sweep_one_compile_one_dispatch():
+    """An (S, T)-trace sweep across B fleet members costs ONE compiled
+    program for the whole run (the multi-epoch scan), and swapping in
+    different traces at the same shapes reuses it — traces are jit
+    arguments, never part of the program (DESIGN.md §10)."""
+    cfg = _small_cluster("sweep", followers=(1, 1), max_log=256)
+    epochs = 3
+    providers = [
+        lambda s: export_walk_trace(cfg, seed=s, epochs=epochs),
+        lambda s: RegimeSwitchingWalk.from_cluster(cfg).materialize(
+            epochs * cfg.period_ticks, seed=s),
+        lambda s: CorrelatedSiteShocks.from_cluster(cfg).materialize(
+            epochs * cfg.period_ticks, seed=s),
+    ]
+
+    def build(seed0):
+        return FleetSim([
+            MemberSpec(cfg=cfg, write_rate=4.0 + 2 * i, read_rate=8.0,
+                       seed=seed0 + i, manage_resources=False,
+                       market="trace", trace=mk(seed0 + i))
+            for i, mk in enumerate(providers)])
+
+    before = fleet_mod.total_compile_count()
+    fleet = build(0)
+    assert fleet.single_dispatch_eligible
+    fleet.run(epochs)
+    assert fleet_mod.total_compile_count() - before == 1, \
+        "a B-trace sweep must compile exactly one program"
+    build(7).run(epochs)                    # new traces, same shapes
+    assert fleet_mod.total_compile_count() - before == 1, \
+        "swapping traces must not recompile"
+
+
+def test_mixed_market_fleet_one_program():
+    """Process and trace members mix in ONE fleet program (the market
+    flag is per-member data): the process member's trajectory is
+    unaffected by its traced neighbor."""
+    cfg = _small_cluster("mixed", followers=(1, 1), max_log=256)
+    epochs = 2
+    trace = export_walk_trace(cfg, seed=5, epochs=epochs)
+    spec = dict(write_rate=6.0, read_rate=12.0, seed=3,
+                manage_resources=False, prelease=(1, 2))
+    mixed = FleetSim([
+        MemberSpec(cfg=cfg, **spec),
+        MemberSpec(cfg=cfg, write_rate=6.0, read_rate=12.0, seed=5,
+                   manage_resources=False, market="trace", trace=trace)])
+    mixed_reports = mixed.run(epochs)
+    # the process member's placeholder is widened to the fleet's trace
+    # width, but the select discards the trace operand, so a plain solo
+    # run (default (S, 1) placeholder) must still match bit for bit
+    solo_reports = BWRaftSim(cfg, **spec).run(epochs)
+    for a, b in zip(mixed_reports[0], solo_reports):
+        assert _reports_equal(a, b)
+
+
+# --------------------------------------------------------------------- #
+# spot_step edge cases — pinned on BOTH market paths
+# --------------------------------------------------------------------- #
+def _edge_state(S=2, price=(0.0125, 0.0125), bid=(0.01875, 0.01875),
+                tick=0):
+    # three nodes per site: voter, spot-alive, spot-dead
+    N = 3 * S
+    role = jnp.asarray([0, 3, 5] * S, jnp.int32)
+    alive = jnp.asarray([True, True, False] * S)
+    return {
+        "spot_price": jnp.asarray(price, jnp.float32),
+        "spot_bid": jnp.asarray(bid, jnp.float32),
+        "alive": alive, "role": role,
+        "tick": jnp.int32(tick),
+    }, {
+        "site": np.repeat(np.arange(S), 3).astype(np.int32),
+        "is_voter": np.asarray([True, False, False] * S),
+    }
+
+
+def _edge_cfg(S=2, *, mean=0.0125, vol=0.0, phi=0.0, price_trace=None,
+              revoke_trace=None):
+    use_trace = price_trace is not None
+    if price_trace is None:
+        price_trace = np.zeros((S, 1), np.float32)
+    if revoke_trace is None:
+        revoke_trace = np.zeros_like(np.asarray(price_trace), bool)
+    return {
+        "spot_price_mean": jnp.full((S,), mean, jnp.float32),
+        "spot_price_vol": jnp.float32(vol),
+        "phi": jnp.float32(phi),
+        "market_trace": jnp.asarray(use_trace),
+        "price_trace": jnp.asarray(price_trace, jnp.float32),
+        "revoke_trace": jnp.asarray(revoke_trace, bool),
+        "trace_len": jnp.int32(np.asarray(price_trace).shape[1]),
+    }
+
+
+def test_spot_bid_boundary_both_paths():
+    """Price exactly AT the bid revokes nothing (the rule is strictly
+    `price > bid`); one ulp above revokes — on both market sources."""
+    bid = 0.0125 * 1.5
+    above = float(np.nextafter(np.float32(bid), np.float32(np.inf)))
+    # synthetic: vol=0 and price already at the mean => new price == mean
+    for mean, expect_kill in ((bid, False), (above, True)):
+        st, static = _edge_state(price=(mean, mean), bid=(bid, bid))
+        cfg_c = _edge_cfg(mean=mean, vol=0.0)
+        out, killed = step_mod.spot_step(st, static, cfg_c,
+                                         jax.random.PRNGKey(0))
+        assert bool(np.asarray(killed).any()) == expect_kill, mean
+    # trace: replayed price at/above the bid, revocation FROM THE TRACE
+    for price, expect_kill in ((bid, False), (above, True)):
+        tr_price = np.full((2, 4), price, np.float32)
+        tr_rev = tr_price > bid                     # the §10 bid rule
+        st, static = _edge_state(bid=(bid, bid))
+        cfg_c = _edge_cfg(price_trace=tr_price, revoke_trace=tr_rev)
+        out, killed = step_mod.spot_step(st, static, cfg_c,
+                                         jax.random.PRNGKey(0))
+        assert bool(np.asarray(killed).any()) == expect_kill, price
+        assert (np.asarray(out["spot_price"]) == np.float32(price)).all()
+
+
+def test_phi_one_kills_all_spot_in_one_tick_both_paths():
+    """phi=1.0 revokes every alive spot node in a single tick (uniform
+    draws land in [0, 1)), voters untouched — on both market sources."""
+    for cfg_c in (_edge_cfg(phi=1.0),
+                  _edge_cfg(phi=1.0,
+                            price_trace=np.full((2, 3), 0.01, np.float32))):
+        st, static = _edge_state()
+        out, killed = step_mod.spot_step(st, static, cfg_c,
+                                         jax.random.PRNGKey(1))
+        killed = np.asarray(killed)
+        is_spot_alive = ~static["is_voter"] & np.asarray(st["alive"])
+        assert (killed == is_spot_alive).all()
+        assert not np.asarray(out["alive"])[~static["is_voter"]].any()
+        assert np.asarray(out["alive"])[static["is_voter"]].all()
+
+
+def test_price_floor_clamp_both_paths():
+    """The walk clamps at 0.1x mean in-step; traces carry the floor in
+    the data (generation-time clamp) and replay verbatim —
+    `export_walk_trace` of a high-vol walk therefore never dips below
+    the floor, and the replayed in-step price equals the trace exactly."""
+    mean, vol = 0.0125, 50.0                    # vol huge => clamp active
+    keys = jax.random.split(jax.random.PRNGKey(2), 64)
+    prices = np.stack([
+        np.asarray(walk_price_update(jnp.full((2,), mean, jnp.float32),
+                                     jnp.full((2,), mean, jnp.float32),
+                                     jnp.float32(vol), k))
+        for k in keys])
+    floor = np.float32(0.1) * np.float32(mean)    # f32 mult, as in-step
+    assert (prices >= floor).all(), "clamp must bound the walk below"
+    assert (prices == floor).any(), "vol=50 must actually hit the floor"
+
+    cfg = _small_cluster("floor", followers=(1, 1), max_log=256)
+    trace = export_walk_trace(cfg, seed=0, epochs=2, spot_price_vol=50.0)
+    mean_arr, _, _, _ = walk_params_from_cluster(cfg, spot_price_vol=50.0)
+    assert (trace.price >= 0.1 * mean_arr[:, None]).all()
+    # replay is verbatim: the in-step price equals the trace column
+    st, static = _edge_state()
+    cfg_c = _edge_cfg(price_trace=trace.price[:, :4],
+                      revoke_trace=trace.revoked[:, :4])
+    out, _ = step_mod.spot_step(st, static, cfg_c, jax.random.PRNGKey(3))
+    assert np.array_equal(np.asarray(out["spot_price"]),
+                          trace.price[:, 0])
+
+
+def test_trace_lookup_wraps_modulo():
+    """Tick t reads trace column t % trace_len (the §10 time-wrap rule),
+    so short traces loop instead of running off the end — and the wrap
+    uses the member's OWN period even when the array was widened to a
+    fleet-shared width."""
+    tr = np.asarray([[1.0, 2.0, 3.0]], np.float32)
+    st, static = _edge_state(S=1, price=(1.0,), bid=(9.0,), tick=5)
+    cfg_c = _edge_cfg(S=1, price_trace=tr)
+    out, _ = step_mod.spot_step(st, static, cfg_c, jax.random.PRNGKey(0))
+    assert float(np.asarray(out["spot_price"])[0]) == 3.0   # 5 % 3 == 2
+    # widened to width 5 next to a longer neighbor: trace_len stays 3,
+    # so tick 5 still reads source column 2 (not widened column 0)
+    wide = MarketTrace("w", tr, np.zeros_like(tr, bool)).fit_to(1, 5)
+    cfg_c = dict(_edge_cfg(S=1, price_trace=wide.price),
+                 trace_len=jnp.int32(3))
+    out, _ = step_mod.spot_step(st, static, cfg_c, jax.random.PRNGKey(0))
+    assert float(np.asarray(out["spot_price"])[0]) == 3.0
+
+
+def test_mixed_length_traces_replay_neutral():
+    """A short trace widened to a longer neighbor's width replays its
+    own columns exactly: the fleet member equals a solo run on the
+    unwidened trace, past the point where the widths diverge."""
+    sites = tuple(SiteConfig(f"ml-s{i}", followers=1, rtt_intra=1,
+                             rtt_inter=6, on_demand_price=0.0416,
+                             spot_price_mean=0.0125) for i in range(2))
+    cfg = ClusterConfig(name="ml", sites=sites, max_log=256, key_space=128,
+                        max_secretaries=2, max_observers=4,
+                        period_ticks=40)
+    epochs = 3                                   # run 120 ticks
+    short = export_walk_trace(cfg, seed=6, epochs=1)        # 40 ticks
+    long_tr = RegimeSwitchingWalk.from_cluster(cfg).materialize(
+        90, seed=7)                              # 90: not a multiple of 40
+    spec = dict(write_rate=6.0, read_rate=12.0, manage_resources=False,
+                prelease=(1, 2))
+    fleet = FleetSim([
+        MemberSpec(cfg=cfg, **spec, seed=6, market="trace", trace=short),
+        MemberSpec(cfg=cfg, **spec, seed=7, market="trace",
+                   trace=long_tr)])
+    assert fleet.trace_ticks == 90
+    fleet_reports = fleet.run(epochs)
+    solo = BWRaftSim(cfg, **spec, seed=6, market="trace", trace=short)
+    for a, b in zip(fleet_reports[0], solo.run(epochs)):
+        assert _reports_equal(a, b)
+
+
+# --------------------------------------------------------------------- #
+# loaders / resampling
+# --------------------------------------------------------------------- #
+def test_resample_zero_order_hold_pinned():
+    times = np.array([0.0, 10.0, 20.0])
+    values = np.array([1.0, 2.0, 3.0])
+    out = resample_price(times, values, 5, (0.0, 20.0))
+    # grid = 0, 5, 10, 15, 20 -> last obs at or before each instant
+    assert out.tolist() == [1.0, 1.0, 2.0, 2.0, 3.0]
+    # ticks before the first observation hold the first value
+    assert resample_price(times, values, 3, (-10.0, 0.0)).tolist() == \
+        [1.0, 1.0, 1.0]
+
+
+def test_bucket_events_pinned():
+    out = bucket_events(np.array([0.0, 9.99, 5.0]), 10, (0.0, 10.0))
+    assert out.tolist() == [True, False, False, False, False, True,
+                            False, False, False, True]
+
+
+def test_bundled_traces_load_and_fit():
+    assert set(available_traces()) == {"aws-us-east", "google-evict"}
+    for name in available_traces():
+        tr = load(name, ticks=120)
+        assert tr.ticks == 120 and tr.sites >= 2
+        assert (tr.price > 0).all()
+        fitted = tr.fit_to(5, 300)
+        assert fitted.price.shape == (5, 300)
+        # site tiling: row s reads source row s % S0
+        assert np.array_equal(fitted.price[tr.sites], fitted.price[0])
+        # time wrap: column t reads source column t % T0
+        assert np.array_equal(fitted.price[:, 120:240],
+                              fitted.price[:, :120])
+    aws = load("aws-us-east", ticks=200)
+    # derived revocations follow the §10 bid rule
+    bid = 1.5 * aws.price.mean(axis=1, keepdims=True)
+    assert np.array_equal(aws.revoked, aws.price > bid)
+    assert aws.revoked.any(), "sample trace must contain revocations"
+    google = load("google-evict", ticks=200)
+    assert google.revoked.any()
+    assert (google.price == google.price[0, 0]).all(), "flat price rows"
+
+
+# --------------------------------------------------------------------- #
+# RevocationPredictor (unit) + calibration
+# --------------------------------------------------------------------- #
+def test_revocation_predictor_converges_to_trace_empirical_rate():
+    """Fed a market trace's per-epoch revocation observations, the EWMA
+    converges to the trace's empirical per-site hazard (DESIGN.md §10)."""
+    from repro.core import manager as mgr
+
+    rng = np.random.default_rng(3)
+    hazard = np.array([0.15, 0.03])
+    revoked = rng.random((2, 1800)) < hazard[:, None]
+    trace = MarketTrace("unit", np.full((2, 1800), 0.0125), revoked)
+    obs = epoch_revocation_rates(trace, 60)                  # (E, S)
+    p = mgr.RevocationPredictor(2, alpha=0.3)
+    for e in range(obs.shape[0]):
+        p.update(obs[e], np.ones(2))
+    empirical = trace.empirical_revocation_rates()
+    assert np.abs(p.predict() - empirical).max() < 0.05
+    assert np.abs(p.predict() - hazard).max() < 0.05
+
+
+def test_revocation_predictor_leased_zero_untouched():
+    """Sites with leased == 0 made no observation this period — `update`
+    must leave their rate estimate exactly as it was."""
+    from repro.core import manager as mgr
+
+    p = mgr.RevocationPredictor(3, alpha=0.5, prior=0.02)
+    p.update(np.array([4.0, 0.0, 7.0]), np.array([8.0, 0.0, 0.0]))
+    rate = p.predict()
+    assert rate[0] != 0.02, "leased site must update"
+    assert rate[1] == 0.02 and rate[2] == 0.02, \
+        "unleased sites must be untouched (even with nonzero revoked)"
+
+
+def test_revocation_predictor_calibrated_seed():
+    from repro.core import manager as mgr
+
+    p = mgr.RevocationPredictor.calibrated([0.2, 0.0], alpha=0.4)
+    assert p.predict().tolist() == [0.2, 0.0] and p.alpha == 0.4
+
+
+def test_calibrate_predictor_converges_to_empirical_rates():
+    """The fitted EWMA lands on the trace's per-site empirical hazard
+    (heterogeneous sites, incl. a zero-revocation site) and beats the
+    uncalibrated flat prior by a wide margin."""
+    rng = np.random.default_rng(0)
+    hazard = np.array([0.2, 0.05, 0.0])
+    revoked = rng.random((3, 1200)) < hazard[:, None]
+    trace = MarketTrace("unit", np.full((3, 1200), 0.0125), revoked)
+    predictor, report = calibrate_predictor(trace, period_ticks=60)
+    empirical = trace.empirical_revocation_rates()
+    assert report.mae < 0.02
+    assert np.abs(predictor.predict() - empirical).max() < 0.05
+    prior_mae = float(np.mean(np.abs(0.02 - empirical)))
+    assert report.mae < prior_mae / 3
+    assert report.alpha in (0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9)
+
+
+def test_epoch_revocation_rates_shape_and_values():
+    revoked = np.zeros((2, 120), bool)
+    revoked[0, :60] = True                      # site 0: epoch 0 only
+    trace = MarketTrace("unit", np.ones((2, 120)), revoked)
+    obs = epoch_revocation_rates(trace, 60)
+    assert obs.shape == (2, 2)
+    assert obs[0].tolist() == [1.0, 0.0] and obs[1].tolist() == [0.0, 0.0]
+
+
+def test_fit_walk_recovers_walk_parameters():
+    """Moment-matching inverts the exported walk: fitted means land on
+    the sites' reversion targets and the pooled vol recovers the true
+    volatility within sampling error."""
+    cfg = _small_cluster("fit", followers=(1, 1), max_log=256)
+    mean, vol, _, _ = walk_params_from_cluster(cfg)
+    trace = export_walk_trace(cfg, seed=1, epochs=40)     # 2400 ticks
+    fit = fit_walk(trace)
+    assert np.abs(fit.mean - mean).max() / mean.max() < 0.1
+    assert abs(fit.vol - vol) / vol < 0.25
+    assert fit.vol_per_site.shape == (cfg.num_sites,)
+    # the true walk IS mean-reverting: the fitted reversion must explain
+    # one-step variance beyond hold-last-price...
+    assert fit.reversion_r2 > 0.02, fit.reversion_r2
+    # ...and a driftless random walk (no reversion) must score ~0
+    rng = np.random.default_rng(0)
+    rw = 0.0125 + 0.001 * np.cumsum(rng.standard_normal((2, 2400)),
+                                    axis=1)
+    null = fit_walk(MarketTrace("rw", np.maximum(rw, 1e-4),
+                                np.zeros((2, 2400), bool)))
+    assert null.reversion_r2 < fit.reversion_r2
