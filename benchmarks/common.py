@@ -52,7 +52,8 @@ def tick_ms(ticks: float) -> float:
 
 def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
                  shards=2, group_id=0, market="process",
-                 trace=None) -> List[MemberSpec]:
+                 trace=None, arrivals=None, keypop=None
+                 ) -> List[MemberSpec]:
     """Fleet members for one (bwraft, raft, multiraft-shards) comparison
     point: 2 + `shards` members, batched into whatever FleetSim they join.
     The shard members carry the group identity `group_id` (DESIGN.md §9),
@@ -61,16 +62,22 @@ def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
     comparison points sharing a fleet must use distinct group ids.
     `market`/`trace` select the BW-Raft member's spot market
     (DESIGN.md §10) — the on-demand baselines lease no spot nodes, so
-    the market only moves the spot consumer."""
+    the market only moves the spot consumer.  `arrivals`/`keypop`
+    (DESIGN.md §11) put every system under the SAME open-loop plan: the
+    whole-system members replay it as is, the shards at the
+    `shard_workload`-divided intensity."""
     return ([MemberSpec(cfg=cfg, mode="bwraft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed,
-                        market=market, trace=trace),
+                        market=market, trace=trace,
+                        arrivals=arrivals, keypop=keypop),
              MemberSpec(cfg=cfg, mode="raft", write_rate=write_rate,
-                        read_rate=read_rate, phi=phi, seed=seed)]
+                        read_rate=read_rate, phi=phi, seed=seed,
+                        arrivals=arrivals, keypop=keypop)]
             + multiraft.shard_specs(cfg, shards=shards,
                                     write_rate=write_rate,
                                     read_rate=read_rate, seed=seed,
-                                    group_id=group_id))
+                                    group_id=group_id,
+                                    arrivals=arrivals, keypop=keypop))
 
 
 def collect_systems(fleet, lo, *, group_id):

@@ -15,6 +15,10 @@ def run(quick: bool = True):
         rows.append((f"fig8.cost.{name}", r.cost * 1e6, "usd_x1e6"))
         rows.append((f"fig8.cost_per_kop.{name}",
                      1e9 * r.cost / max(r.goodput, 1), "usd_per_kop_x1e6"))
+        # read-path tail, recovered exactly from the device-resident
+        # read histogram (DESIGN.md §11)
+        rows.append((f"fig8.read_lat_p95.{name}", r.read_lat_p95,
+                     "ticks_p95"))
     rows.append(("fig8.two_pc_prepares.multiraft", mr.two_pc_prepares,
                  "prepares_per_epoch"))
     rows.append(("fig8.two_pc_aborts.multiraft", mr.two_pc_aborts,

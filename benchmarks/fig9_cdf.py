@@ -7,7 +7,7 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import PAPER_CLUSTER, tick_ms
-from repro.core.runtime import BWRaftSim
+from repro.core.runtime import BWRaftSim, goodput_under_deadline
 from repro.core.multiraft import MultiRaftSim
 
 
@@ -38,4 +38,21 @@ def run(quick: bool = True):
         ok = r.goodput if p95[name] <= slo * 1.001 else \
             r.goodput * max(0.1, slo / max(p95[name], 1e-9))
         rows.append((f"fig9.goodput_within_slo.{name}", ok, "ops"))
+    # read-path tails + MEASURED SLO goodput, straight off the last
+    # epoch's digest histograms (DESIGN.md §11) — fleet engine only;
+    # --sequential keeps just the synthesized rows above
+    deadline = 30                          # 300 ms, see common.tick_ms
+    digests = {"bwraft": bw.last_digest, "original": og.last_digest}
+    if mr.engine == "fleet" and mr.fleet.last_group_digest is not None:
+        digests["multiraft"] = {
+            k: v[0] for k, v in mr.fleet.last_group_digest.items()}
+    for name, rs in reps.items():
+        rows.append((f"fig9.p95_read.{name}",
+                     tick_ms(rs[-1].read_lat_p95) * 1e3, "us_p95"))
+        dg = digests.get(name)
+        if dg is not None:
+            good = (goodput_under_deadline(dg["read_lat_hist"], deadline) +
+                    goodput_under_deadline(dg["write_lat_hist"], deadline))
+            rows.append((f"fig9.goodput_under_deadline.{name}", good,
+                         "ops"))
     return rows

@@ -80,7 +80,7 @@ _BATCHED_STATIC_KEYS = ("site", "is_voter", "rtt", "majority")
 # spec fields sweepable via FleetSim.from_sweep axes
 _SWEEP_AXES = ("mode", "write_rate", "read_rate", "phi", "seed",
                "manage_resources", "spot_price_vol", "budget_per_period",
-               "market", "trace")
+               "market", "trace", "arrivals", "keypop")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +119,15 @@ class MemberSpec:
     # traced and process members and a B-trace sweep is one dispatch)
     market: str = "process"
     trace: Optional[object] = None          # market.MarketTrace
+    # open-loop workload source (DESIGN.md §11): None keeps the closed-
+    # loop scalar rates above; a `workload.OpenLoop` plan rides in cfg_c
+    # as per-tick rate curves, every member's curves fitted to the
+    # fleet-wide max plan length the way market traces are — one batched
+    # program serves any mix of open- and closed-loop members.  `keypop`
+    # (a `workload.ZipfianKeys`) skews the leader's write-key draws; None
+    # keeps the uniform draw.
+    arrivals: Optional[object] = None       # workload.OpenLoop
+    keypop: Optional[object] = None         # workload.ZipfianKeys
 
     @property
     def manage(self) -> bool:
@@ -149,10 +158,11 @@ def total_compile_count() -> int:
 # per-member digest fields reduced to a per-group digest in-graph
 # (DESIGN.md §9): everything a MultiRaftReport needs, pooled over the
 # shards of each group by a segment sum (read_lat_max by a segment max)
-_GROUP_SUM_KEYS = ("write_lat_hist", "reads_arrived", "writes_arrived",
-                   "reads_served", "read_lat_sum", "cost_delta", "killed",
-                   "no_leader_ticks", "leader_changes", "cross_arrived",
-                   "two_pc_prepares", "two_pc_aborts")
+_GROUP_SUM_KEYS = ("write_lat_hist", "read_lat_hist", "reads_arrived",
+                   "writes_arrived", "reads_served", "read_lat_sum",
+                   "cost_delta", "killed", "no_leader_ticks",
+                   "leader_changes", "cross_arrived", "two_pc_prepares",
+                   "two_pc_aborts")
 
 
 def _group_digest(digest: Dict, gids, n_groups: int) -> Dict:
@@ -260,10 +270,11 @@ def _fleet_epoch_fn_host(shapes: FleetShapes, shared: Dict):
 class _Member:
     """Host-side bookkeeping for one fleet slot.  `trace_ticks` is the
     fleet-wide market-trace width every member's cfg_c arrays share
-    (DESIGN.md §10)."""
+    (DESIGN.md §10); `arrival_ticks` the fleet-wide arrival-curve width
+    (DESIGN.md §11)."""
 
     def __init__(self, spec: MemberSpec, shapes: FleetShapes,
-                 trace_ticks: int = 1):
+                 trace_ticks: int = 1, arrival_ticks: int = 1):
         assert spec.mode in ("bwraft", "raft")
         cfg = spec.cfg
         if spec.budget_per_period is not None:
@@ -295,9 +306,12 @@ class _Member:
         self.cfg_c = make_cfg_arrays(
             cfg, write_rate=spec.write_rate, read_rate=spec.read_rate,
             phi=spec.phi, pad_sites=self.pads["pad_sites"],
+            pad_keys=self.pads["pad_keys"],
             spot_price_vol=spec.spot_price_vol,
             cross_shard_frac=spec.cross_shard_frac, two_pc_ticks=two_pc,
-            market=spec.market, trace=spec.trace, trace_ticks=trace_ticks)
+            market=spec.market, trace=spec.trace, trace_ticks=trace_ticks,
+            arrivals=spec.arrivals, arrival_ticks=arrival_ticks,
+            keypop=spec.keypop)
         self.rng = jax.random.PRNGKey(spec.seed)
         self.controller = ClusterController(cfg, self.static,
                                             seed=spec.seed)
@@ -359,7 +373,15 @@ class FleetSim:
         self.trace_ticks = max(
             [s.trace.ticks for s in specs if s.trace is not None],
             default=1)
-        self.members = [_Member(s, self.shapes, self.trace_ticks)
+        # fleet-shared arrival-curve width (DESIGN.md §11): every member's
+        # cfg_c rate curves stack to (B, Ta); shorter plans time-wrap
+        # (`OpenLoop.fit_to`, matching the in-step modulo lookup) and
+        # closed-loop members carry inert zero curves of the same width
+        self.arrival_ticks = max(
+            [s.arrivals.ticks for s in specs if s.arrivals is not None],
+            default=1)
+        self.members = [_Member(s, self.shapes, self.trace_ticks,
+                                self.arrival_ticks)
                         for s in specs]
 
         # ---- shard groups (DESIGN.md §9) -----------------------------
@@ -425,6 +447,12 @@ class FleetSim:
         # (digest leaves on the device path, full state + T-stacked
         # metrics on the host path) — perf_fleet.py reads the deltas
         self.d2h_bytes = 0
+        # most recent epoch's per-member digest (numpy, leading axis =
+        # member; group subtree popped off separately) — raw-histogram
+        # access for goodput-under-deadline (DESIGN.md §11).  Digest
+        # pipeline only; stays None on the host path.
+        self.last_digest: Optional[Dict] = None
+        self.last_group_digest: Optional[Dict] = None
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -515,7 +543,9 @@ class FleetSim:
         dg = jax.tree.map(np.asarray, digest)
         self.d2h_bytes += pytree_nbytes(dg)
         if self.n_groups:
-            self._append_group_reports(dg.pop("group"))
+            self.last_group_digest = dg.pop("group")
+            self._append_group_reports(self.last_group_digest)
+        self.last_digest = dg
 
         managed_rows: List[int] = []
         managed_vals: List[Tuple] = []
@@ -635,6 +665,9 @@ class FleetSim:
         dg = jax.tree.map(np.asarray, digests)
         self.d2h_bytes += pytree_nbytes(dg)
         gdg = dg.pop("group") if self.n_groups else None
+        self.last_digest = {k: v[-1] for k, v in dg.items()}
+        if gdg is not None:
+            self.last_group_digest = {k: v[-1] for k, v in gdg.items()}
         for e in range(epochs):
             if gdg is not None:
                 self._append_group_reports({k: v[e] for k, v in

@@ -57,6 +57,10 @@ class MultiRaftReport:
     write_lat_p99: float
     read_lat_mean: float
     cost: float
+    # read-path tails from the group's pooled read histogram (grouped
+    # engine only, DESIGN.md §11); NaN on the sequential reference
+    read_lat_p95: float = float("nan")
+    read_lat_p99: float = float("nan")
     # 2PC census (grouped engine only — measured in-graph, DESIGN.md §9):
     # cross-shard coordinator arrivals, prepares sampled by coordinators,
     # and prepares whose commit never landed inside the epoch (the
@@ -90,7 +94,7 @@ def two_pc_penalty(cfg: ClusterConfig) -> int:
 def shard_specs(cfg: ClusterConfig, *, shards: int = 2,
                 write_rate: float = 8.0, read_rate: float = 32.0,
                 cross_shard_frac: float = 0.1, seed: int = 0,
-                group_id: int = 0) -> List:
+                group_id: int = 0, arrivals=None, keypop=None) -> List:
     """The batched entry point: this Multi-Raft instance as `shards`
     fleet members (mode="raft", unmanaged) for a single vmapped program.
 
@@ -99,14 +103,24 @@ def shard_specs(cfg: ClusterConfig, *, shards: int = 2,
     2PC step and reduces their digests to per-group `MultiRaftReport`s
     (`FleetSim.group_reports[group_id]`).  Pass `group_id=-1` for the
     pre-group behavior (independent members; blend the per-shard
-    EpochReports with the reference-only `aggregate_shards`)."""
+    EpochReports with the reference-only `aggregate_shards`).
+
+    `arrivals` (a system-wide `workload.OpenLoop` plan) is divided over
+    the shards with the same `shard_workload` factors as the scalar
+    rates — each shard replays the plan's shape at 1/shards intensity,
+    writes inflated by (1 + chi) for the duplicated prepares
+    (DESIGN.md §11); `keypop` passes through to every shard."""
     from repro.core.fleet import MemberSpec  # deferred: fleet imports runtime
     w_eff, r_eff = shard_workload(write_rate, read_rate, shards,
                                   cross_shard_frac)
+    shard_plan = (arrivals.scaled((1 + cross_shard_frac) / shards,
+                                  1.0 / shards)
+                  if arrivals is not None else None)
     grouped = group_id >= 0
     return [MemberSpec(cfg=cfg, mode="raft", write_rate=w_eff,
                        read_rate=r_eff, seed=seed + 17 * i,
                        manage_resources=False,
+                       arrivals=shard_plan, keypop=keypop,
                        group_id=group_id,
                        shards_per_group=shards if grouped else 1,
                        cross_shard_frac=cross_shard_frac if grouped
@@ -182,7 +196,10 @@ def report_from_group_digest(epoch: int, gdg: Dict,
     chi = cross_shard_frac
     n_done, lat_mean, lat_p95, lat_p99 = hist_stats(gdg["write_lat_hist"])
     reads_served = int(gdg["reads_served"])
+    _, _, read_p95, read_p99 = hist_stats(gdg["read_lat_hist"])
     return MultiRaftReport(
+        read_lat_p95=read_p95,
+        read_lat_p99=read_p99,
         epoch=epoch,
         writes_committed=int(n_done / (1 + chi)),
         writes_arrived=int(int(gdg["writes_arrived"]) / (1 + chi)),

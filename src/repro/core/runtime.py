@@ -40,7 +40,9 @@ from repro.core import mcsa
 from repro.core import step as step_mod
 from repro.core import state as state_mod
 from repro.core.cluster_config import ClusterConfig
-from repro.core.state import (DEAD, FOLLOWER, LEADER, OBSERVER, SECRETARY)
+from repro.core.state import (DEAD, FOLLOWER, LEADER, OBSERVER, SECRETARY,
+                              HIST_TAIL)
+from repro.workload import arrivals as workload_arrivals
 
 
 class CountingJit:
@@ -72,21 +74,22 @@ class CountingJit:
             return len(self._sigs)
 
 
-# extra unit bins past T in the write-latency histogram, so the in-graph
-# 2PC tax (DESIGN.md §9) lands in measurable bins instead of clipping;
-# `make_cfg_arrays` asserts every member's `two_pc_ticks` fits.  Static
-# (part of the digest shape), shared by every member of a fleet.
-HIST_TAIL = 64
+# HIST_TAIL moved to `state.py` with the read-histogram state (§11); it
+# is re-exported here so `runtime.HIST_TAIL` keeps resolving — both the
+# write and read latency histograms share the T + 1 + HIST_TAIL layout
+# (`state.hist_bins`, DESIGN.md §7.1/§11).
 
 
 def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
                     read_rate: float, phi: float = 0.0,
-                    pad_sites: int = 0,
+                    pad_sites: int = 0, pad_keys: int = 0,
                     spot_price_vol: Optional[float] = None,
                     cross_shard_frac: float = 0.0,
                     two_pc_ticks: int = 0,
                     market: str = "process",
-                    trace=None, trace_ticks: Optional[int] = None) -> Dict:
+                    trace=None, trace_ticks: Optional[int] = None,
+                    arrivals=None, arrival_ticks: Optional[int] = None,
+                    keypop=None) -> Dict:
     """Per-epoch dynamic knobs — all jit arguments, never baked into the
     compiled program.  `pad_sites` repeats the last site's prices so padded
     clusters share one (S,) shape (DESIGN.md §7).  `cross_shard_frac` /
@@ -101,7 +104,18 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
     padded site count), so swapping traces at one shape never recompiles.
     `trace_ticks` widens the trace arrays to a fleet-shared Tt (time
     wrap, `MarketTrace.fit_to`); process-only members carry an inert
-    (S, max(trace_ticks, 1)) placeholder so mixed fleets still stack."""
+    (S, max(trace_ticks, 1)) placeholder so mixed fleets still stack.
+
+    `arrivals` selects the workload source (DESIGN.md §11): None keeps
+    the closed-loop scalar knob (bit-identical to the pre-§11 tick); a
+    `workload.OpenLoop` plan enters as the `write_curve`/`read_curve`
+    jit-argument arrays, wrapped at the plan's own length, optionally
+    widened to a fleet-shared `arrival_ticks` (replay-neutral, like
+    market traces).  `keypop` is the write-key popularity: None keeps
+    the uniform draw, a `workload.ZipfianKeys` rides in as the (K,)
+    `key_cdf` the leader inverse-transform samples; `pad_keys` widens
+    the CDF with a saturated (never-sampled) tail so padded fleets
+    stack."""
     assert 0.0 <= cross_shard_frac <= 1.0, cross_shard_frac
     assert 0 <= two_pc_ticks <= HIST_TAIL, \
         f"two_pc_ticks={two_pc_ticks} exceeds the histogram tail " \
@@ -125,6 +139,18 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         price_trace = jnp.zeros((S, trace_ticks or 1), jnp.float32)
         revoke_trace = jnp.zeros((S, trace_ticks or 1), bool)
         trace_len = 1
+    if arrivals is not None:
+        width = arrival_ticks or arrivals.ticks
+        write_curve, read_curve, arrival_len = arrivals.fit_to(width)
+    else:
+        width = arrival_ticks or 1
+        write_curve = np.zeros((width,), np.float32)
+        read_curve = np.zeros((width,), np.float32)
+        arrival_len = 1
+    if keypop is not None:
+        key_cdf = keypop.materialize(cfg.key_space, pad_keys)
+    else:
+        key_cdf = workload_arrivals.uniform_key_cdf(cfg.key_space, pad_keys)
     od = [s.on_demand_price for s in cfg.sites]
     sp = [s.spot_price_mean for s in cfg.sites]
     od = od + [od[-1]] * pad_sites
@@ -132,6 +158,12 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
     vol = (cfg.sites[0].spot_price_vol if spot_price_vol is None
            else spot_price_vol)
     return {
+        "open_loop": jnp.asarray(arrivals is not None),
+        "write_curve": jnp.asarray(write_curve, jnp.float32),
+        "read_curve": jnp.asarray(read_curve, jnp.float32),
+        "arrival_len": jnp.int32(arrival_len),
+        "key_zipf": jnp.asarray(keypop is not None),
+        "key_cdf": jnp.asarray(key_cdf, jnp.float32),
         "market_trace": jnp.asarray(market == "trace"),
         "price_trace": price_trace,
         "revoke_trace": revoke_trace,
@@ -170,6 +202,10 @@ class EpochReport:
     leader_changes: int
     no_leader_ticks: int
     killed: int
+    # read-path tail stats, recovered exactly from the per-request
+    # read-latency histogram (DESIGN.md §11) — NaN when no read served
+    read_lat_p95: float = float("nan")
+    read_lat_p99: float = float("nan")
     decision: Optional[mgr.PeekDecision] = None
 
     @property
@@ -192,7 +228,10 @@ def build_report(epoch: int, st: Dict, ms: Dict,
     done = (sub_t >= 0) & (com_t >= 0)
     lat = (com_t[done] - sub_t[done]).astype(float)
     reads_served = int(st["reads_served"])
+    _, _, read_p95, read_p99 = hist_stats(st["read_lat_hist"])
     return EpochReport(
+        read_lat_p95=read_p95,
+        read_lat_p99=read_p99,
         epoch=epoch,
         reads_arrived=int(st["reads_arrived"]),
         writes_arrived=int(st["writes_arrived"]),
@@ -274,6 +313,10 @@ def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int,
         "reads_served": state["reads_served"],
         "read_lat_sum": state["read_lat_sum"],
         "read_lat_max": state["read_lat_max"],
+        # per-request read latencies, accumulated tick by tick on device
+        # (`step.read_step`) — same unit-bin layout as the write
+        # histogram below (DESIGN.md §11)
+        "read_lat_hist": state["read_lat_hist"],
         "write_lat_hist": hist,
         "cost_delta": state["cost_accrued"] - cost_before,
         "n_secretaries": jnp.sum((state["role"] == SECRETARY) &
@@ -343,6 +386,19 @@ def hist_stats(hist) -> Tuple[int, float, float, float]:
     return n, mean, hist_percentile(hist, 95), hist_percentile(hist, 99)
 
 
+def goodput_under_deadline(hist, deadline: int) -> int:
+    """Requests that finished within `deadline` ticks, read straight off a
+    unit-bin latency histogram: ``sum(hist[:deadline+1])``.  The SLO-
+    goodput metric of `benchmarks/perf_serving.py` (DESIGN.md §11);
+    `tests/test_serving.py` pins it against a numpy recomputation over
+    the raw per-request latencies."""
+    hist = np.asarray(hist)
+    d = min(int(deadline), hist.shape[0] - 1)
+    if d < 0:
+        return 0
+    return int(hist[:d + 1].sum())
+
+
 def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
     """Distill one cluster's epoch digest (numpy leaves, O(T + N + S)
     bytes) into an EpochReport — the digest-path twin of `build_report`.
@@ -350,7 +406,10 @@ def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
     unit-bin histogram (integer-tick latencies, see `_finalize_digest`)."""
     n_done, lat_mean, lat_p95, lat_p99 = hist_stats(dg["write_lat_hist"])
     reads_served = int(dg["reads_served"])
+    _, _, read_p95, read_p99 = hist_stats(dg["read_lat_hist"])
     return EpochReport(
+        read_lat_p95=read_p95,
+        read_lat_p99=read_p99,
         epoch=epoch,
         reads_arrived=int(dg["reads_arrived"]),
         writes_arrived=int(dg["writes_arrived"]),
@@ -395,6 +454,7 @@ def compact_state(state: Dict) -> Dict:
         writes_committed=jnp.zeros_like(state["writes_committed"]),
         read_lat_sum=jnp.zeros_like(state["read_lat_sum"]),
         read_lat_max=jnp.zeros_like(state["read_lat_max"]),
+        read_lat_hist=jnp.zeros_like(state["read_lat_hist"]),
     )
 
 
@@ -572,7 +632,8 @@ class BWRaftSim:
                  prelease: Optional[Tuple[int, int]] = None,
                  backend: str = "xla",
                  cross_shard_frac: float = 0.0, two_pc_ticks: int = 0,
-                 market: str = "process", trace=None, predictor=None):
+                 market: str = "process", trace=None, predictor=None,
+                 arrivals=None, keypop=None):
         assert mode in ("bwraft", "raft")
         assert backend in ("xla", "pallas"), backend
         self.cfg = cfg
@@ -584,17 +645,22 @@ class BWRaftSim:
                                           pad_keys=pad_keys)
         self.cfg_c = make_cfg_arrays(cfg, write_rate=write_rate,
                                      read_rate=read_rate, phi=phi,
-                                     pad_sites=pad_sites,
+                                     pad_sites=pad_sites, pad_keys=pad_keys,
                                      spot_price_vol=spot_price_vol,
                                      cross_shard_frac=cross_shard_frac,
                                      two_pc_ticks=two_pc_ticks,
-                                     market=market, trace=trace)
+                                     market=market, trace=trace,
+                                     arrivals=arrivals, keypop=keypop)
         self.rng = jax.random.PRNGKey(seed)
         self.manage = manage_resources and mode == "bwraft"
         self.controller = ClusterController(cfg, self.static, seed=seed,
                                             predictor=predictor)
         self.epoch = 0
         self._reports: List[EpochReport] = []
+        # most recent epoch digest (numpy leaves) — kept so benchmarks
+        # and tests can reach the raw unit-bin latency histograms
+        # (goodput-under-deadline, DESIGN.md §11) without re-marshalling
+        self.last_digest: Optional[Dict] = None
 
         self._epoch_fn = _epoch_fn_for(
             cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys),
@@ -612,6 +678,18 @@ class BWRaftSim:
             self.cfg_c["read_rate"] = jnp.float32(read_rate)
         if phi is not None:
             self.cfg_c["phi"] = jnp.float32(phi)
+
+    def set_arrivals(self, arrivals) -> None:
+        """Swap the open-loop arrival plan in place.  Curves are jit
+        arguments at a fixed width (the width the sim was built with),
+        so the swap never recompiles (DESIGN.md §11) — the serving-side
+        twin of swapping market traces at one shape."""
+        width = int(self.cfg_c["write_curve"].shape[0])
+        w, r, alen = arrivals.fit_to(width)
+        self.cfg_c["open_loop"] = jnp.asarray(True)
+        self.cfg_c["write_curve"] = jnp.asarray(w)
+        self.cfg_c["read_curve"] = jnp.asarray(r)
+        self.cfg_c["arrival_len"] = jnp.int32(alen)
 
     def _lease(self, want_sec: int, want_obs: int) -> None:
         """Peak: score a spot-offer pool (eq. 2), MCSA-select, wire roles."""
@@ -639,6 +717,7 @@ class BWRaftSim:
         self.rng, sub = jax.random.split(self.rng)
         self.state, digest = self._epoch_fn(self.state, sub, self.cfg_c)
         dg = jax.tree.map(np.asarray, digest)
+        self.last_digest = dg
 
         rep = report_from_digest(self.epoch, dg)
 

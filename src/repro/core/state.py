@@ -35,6 +35,24 @@ from repro.core.cluster_config import ClusterConfig
 FOLLOWER, CANDIDATE, LEADER, SECRETARY, OBSERVER, DEAD = range(6)
 NONE = jnp.int32(-1)
 
+# extra unit bins past T in the latency histograms, so in-graph latency
+# surcharges (the 2PC rounds of DESIGN.md §9, the read-index fence of
+# §11) land in measurable bins instead of clipping; `make_cfg_arrays`
+# asserts every member's `two_pc_ticks` fits.  Static (part of the state
+# and digest shapes), shared by every member of a fleet.  Both the write
+# histogram (built at digest time from entry submit/commit ticks) and the
+# read histogram (`state["read_lat_hist"]`, accumulated per tick by
+# `step.read_step`) are `period_ticks + 1 + HIST_TAIL` unit bins wide —
+# one layout, one recovery routine (`runtime.hist_stats`).
+HIST_TAIL = 64
+
+
+def hist_bins(cfg: ClusterConfig) -> int:
+    """Latency-histogram width for this cluster: unit bins covering
+    [0, period_ticks + HIST_TAIL], shared by the write and read
+    histograms (DESIGN.md §7.1, §11)."""
+    return cfg.period_ticks + 1 + HIST_TAIL
+
 
 def build_static(cfg: ClusterConfig, *, pad_nodes: int = 0,
                  pad_sites: int = 0) -> Dict[str, np.ndarray]:
@@ -180,9 +198,13 @@ def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
         "cross_arrived": jnp.zeros((), jnp.int32),
         "reads_served": jnp.zeros((), jnp.int32),
         "writes_committed": jnp.zeros((), jnp.int32),
-        # read latency accounting (aggregate)
+        # read latency accounting: aggregate moments plus the unit-bin
+        # per-request histogram the read path samples into (DESIGN.md
+        # §11) — the read-side twin of the write histogram the digest
+        # builds from entry_submit_t/entry_commit_t
         "read_lat_sum": jnp.zeros((), jnp.float32),
         "read_lat_max": jnp.zeros((), jnp.float32),
+        "read_lat_hist": z(hist_bins(cfg)),
         "cost_accrued": jnp.zeros((), jnp.float32),
     }
     return st

@@ -113,8 +113,19 @@ def workload_step(state, static, cfg_c, rng):
     cross arrivals = floor(cumulative writes * cross_frac) — so it costs
     no RNG draw and is inert at `cross_frac == 0`."""
     r_w, r_r, r_key = _rand(rng, 3)
-    lam_w = cfg_c["write_rate"]
-    lam_r = cfg_c["read_rate"]
+    # open-loop arrival schedule (DESIGN.md §11): per-tick rate curves
+    # ride in cfg_c as jit-argument arrays the way market traces do
+    # (DESIGN.md §10) — the lookup wraps at the plan's OWN length, so
+    # fleet-widened curves replay identically and swapping schedules at
+    # one shape never recompiles.  Closed loop (`open_loop` off) keeps
+    # the scalar-rate knob: the `where` selects the identical rate
+    # value, so pre-§11 trajectories are bit-identical
+    # (`tests/test_serving.py` golden regression).
+    ta = jnp.mod(state["tick"], cfg_c["arrival_len"])
+    lam_w = jnp.where(cfg_c["open_loop"], cfg_c["write_curve"][ta],
+                      cfg_c["write_rate"])
+    lam_r = jnp.where(cfg_c["open_loop"], cfg_c["read_curve"][ta],
+                      cfg_c["read_rate"])
     n_writes = jax.random.poisson(r_w, lam_w).astype(jnp.int32)
     n_reads = jax.random.poisson(r_r, lam_r).astype(jnp.int32)
 
@@ -169,7 +180,18 @@ def leader_step(state, static, cfg_c, rng_key):
     start = state["log_len"][lid_c]
     idxs = start + jnp.arange(64)                             # static window
     take = jnp.arange(64) < n_accept
-    keys = jax.random.randint(rng_key, (64,), 0, state["kv"].shape[1])
+    # key popularity (DESIGN.md §11): uniform draw (the pre-§11 stream,
+    # untouched) or inverse-transform sampling of the (K,) cfg_c CDF —
+    # Zipfian hot keys under `workload.ZipfianKeys`.  The Zipfian draw
+    # uses a FRESH fold of the tick key, so closed-loop runs
+    # (`key_zipf` off) consume exactly the pre-§11 RNG stream.
+    keys_uniform = jax.random.randint(rng_key, (64,), 0,
+                                      state["kv"].shape[1])
+    u = jax.random.uniform(jax.random.fold_in(rng_key, 2), (64,))
+    keys_zipf = jnp.clip(
+        jnp.searchsorted(cfg_c["key_cdf"], u, side="left"),
+        0, state["kv"].shape[1] - 1).astype(jnp.int32)
+    keys = jnp.where(cfg_c["key_zipf"], keys_zipf, keys_uniform)
     vals = jax.random.randint(jax.random.fold_in(rng_key, 1), (64,),
                               0, 2**20)
     safe_idx = jnp.where(take, idxs, L - 1)
@@ -537,11 +559,20 @@ def observer_sync_step(state, static, cfg_c):
 
 
 def read_step(state, static, cfg_c):
-    """Serve queued reads.  Observers serve only if applied >= readindex
-    (= leader commit at request time; approximated by current leader commit);
-    otherwise the read reroutes to the observer's follower (+rtt).  Latency
-    = service wait (queue/capacity) + routing RTTs (readindex via global
-    secretary when present — §4.3)."""
+    """Serve queued reads through the read-index round (DESIGN.md §11).
+
+    Observers serve only if applied >= readindex (= leader commit at
+    request time; approximated by current leader commit) — the observer
+    apply-index wait; otherwise the read reroutes to the observer's
+    follower (+rtt).  Latency = service wait (queue/capacity) + the
+    readindex confirmation fence (via global secretary when present —
+    §4.3).  Every served request's integer-tick latency lands in the
+    unit-bin `read_lat_hist` — the read-side twin of the write
+    histogram, same `period_ticks + 1 + HIST_TAIL` layout (DESIGN.md
+    §7.1/§11), so `runtime.hist_stats` recovers read p95/p99 exactly.
+    Returns `(state, (served, lat))` — the per-node raw sample this tick,
+    consumed by the tick metrics for the numpy-recomputation pin test
+    (`tests/test_serving.py`)."""
     N = state["role"].shape[0]
     lid = leader_id(state, static)
     lid_c = jnp.maximum(lid, 0)
@@ -573,10 +604,18 @@ def read_step(state, static, cfg_c):
     lat_sum = jnp.sum(jnp.where(served > 0,
                                 lat.astype(jnp.float32) * served, 0.0))
     lat_max = jnp.max(jnp.where(served > 0, lat.astype(jnp.float32), 0.0))
-    return dict(state, read_queue=read_queue,
-                reads_served=state["reads_served"] + jnp.sum(served),
-                read_lat_sum=state["read_lat_sum"] + lat_sum,
-                read_lat_max=jnp.maximum(state["read_lat_max"], lat_max))
+    # per-request histogram: `served` requests at integer latency `lat`
+    # per node, overload tails clipped into the last bin
+    H = state["read_lat_hist"].shape[0]
+    bins = jnp.clip(lat, 0, H - 1)
+    read_hist = state["read_lat_hist"].at[
+        jnp.where(served > 0, bins, H)].add(served, mode="drop")
+    state = dict(state, read_queue=read_queue,
+                 reads_served=state["reads_served"] + jnp.sum(served),
+                 read_lat_sum=state["read_lat_sum"] + lat_sum,
+                 read_lat_max=jnp.maximum(state["read_lat_max"], lat_max),
+                 read_lat_hist=read_hist)
+    return state, (served, lat)
 
 
 def election_step(state, static, cfg_c, rng):
@@ -725,7 +764,7 @@ def tick(state, static, cfg_c, rng, *, reference=False,
     state = apply_step(state, static, cfg_c, reference=reference,
                        backend=backend)
     state = observer_sync_step(state, static, cfg_c)
-    state = read_step(state, static, cfg_c)
+    state, (read_served, read_lat) = read_step(state, static, cfg_c)
     state = cost_step(state, static, cfg_c)
     state = dict(state, tick=state["tick"] + 1)
 
@@ -743,5 +782,10 @@ def tick(state, static, cfg_c, rng, *, reference=False,
         "read_queue": jnp.sum(state["read_queue"]),
         "killed": jnp.sum(killed),
         "cost": state["cost_accrued"],
+        # raw per-node read service sample this tick (DESIGN.md §11):
+        # the host-path reference for the read histogram pin test —
+        # ignored by the in-scan digest reduction
+        "read_served_tick": read_served,
+        "read_lat_tick": read_lat,
     }
     return state, metrics

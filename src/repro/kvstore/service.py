@@ -6,7 +6,15 @@ Mirrors Listing 1's client surface:
 
 String keys hash into the bounded integer key space of the jitted state
 machine (DESIGN.md §6).  `put` submits through the leader write path and
-returns once the entry commits; `get` follows the observer/readindex path.
+returns once the entry commits; `get` runs an explicit read-index round
+(DESIGN.md §11): fence on the leader's commit index at request time,
+pick a serving replica (observer preferred), wait until its apply index
+reaches the fence, then read — so a read can never return uncommitted
+data, and a read issued to a caught-up replica still reflects every
+write acknowledged before it.  Per-request read latency is recorded on
+the service (`read_latencies`) AND folded into the cluster's device-
+resident read histogram (`state["read_lat_hist"]`), the same unit-bin
+digest histogram the simulator's aggregate read path samples into.
 This is the host-facing service layer used by the examples; throughput-
 scale experiments drive the simulator's aggregate workload instead.
 """
@@ -45,6 +53,16 @@ class BWKVService:
         self.sim = sim
         self.timeout = timeout_ticks
         self._tickfn = None
+        # per-request read latencies (ticks), in completion order — the
+        # host-side twin of the device read histogram (DESIGN.md §11)
+        self.read_latencies: list = []
+        # session fence floor: the highest log length this client has
+        # been acked (writes) or served (reads).  A read-index round
+        # fences at max(leader commit index, floor), so a read can never
+        # return a value older than the last write acknowledged to this
+        # session — even across a leader change whose fresh leader has
+        # not re-established the old commit index yet (DESIGN.md §11).
+        self.session_floor: int = 0
 
     def _key_id(self, key: str) -> int:
         K = self.sim.cfg.key_space
@@ -93,39 +111,89 @@ class BWKVService:
             st = self.sim.state
             lid_now = int(SM.leader_id(st, self.sim.static))
             if lid_now >= 0 and int(st["commit_len"][lid_now]) > pos:
+                self.session_floor = max(self.session_floor, pos + 1)
                 return PutResult(revision=pos,
                                  latency_ticks=int(st["tick"]) - t0)
             if int(st["tick"]) - t0 > self.timeout:
                 raise Timeout(f"put({key}) not committed "
                               f"after {self.timeout} ticks")
 
-    def get(self, key: str, *, allow_observer: bool = True
-            ) -> Tuple[int, int]:
-        """Read via an observer when one has caught up to readindex,
-        else via a follower (paper §3.1 step 6 / §4.3)."""
+    def _record_read(self, latency_ticks: int) -> None:
+        """Fold one completed read into the service's latency record and
+        the cluster's device-resident read histogram — the same unit-bin
+        digest histogram the aggregate read path samples into, so client
+        reads and simulated reads share one percentile machinery
+        (DESIGN.md §11)."""
+        self.read_latencies.append(int(latency_ticks))
+        st = self.sim.state
+        H = st["read_lat_hist"].shape[0]
+        b = min(max(int(latency_ticks), 0), H - 1)
+        self.sim.state = dict(
+            st,
+            reads_served=st["reads_served"] + 1,
+            read_lat_sum=st["read_lat_sum"] + float(latency_ticks),
+            read_lat_max=jnp.maximum(st["read_lat_max"],
+                                     float(latency_ticks)),
+            read_lat_hist=st["read_lat_hist"].at[b].add(1),
+        )
+
+    def get(self, key: str, *, allow_observer: bool = True,
+            wait_for_leader: bool = False) -> Tuple[int, int]:
+        """One explicit read-index round (paper §3.1 step 6 / §4.3,
+        DESIGN.md §11):
+
+        1. *leader fence* — find the leader and capture its commit index
+           (`readindex`, floored at `session_floor` so the fence always
+           covers every write already acked to this session, leader
+           changes included) at request time; with no leader, raise
+           `NotLeader`, or — `wait_for_leader=True` — step until one is
+           elected (Timeout bounds the wait), so a read during an
+           election waits or times out, never serves stale state;
+        2. *replica pick* — serve from a caught-up observer when
+           allowed, else a caught-up follower/leader, else fall back to
+           the leader itself;
+        3. *apply wait* — step until the serving replica's apply index
+           reaches the fence, so the value returned reflects every
+           entry committed before the read began.
+
+        Returns ``(value, revision)`` with ``revision = readindex``; the
+        round's latency (ticks from request to serve) is recorded via
+        `_record_read`."""
         kid = self._key_id(key)
+        t0 = int(self.sim.state["tick"])
+        lid = int(SM.leader_id(self.sim.state, self.sim.static))
+        if lid < 0 and not wait_for_leader:
+            raise NotLeader("no leader for readindex")
+        waited = 0
+        while lid < 0:
+            self._step(5)
+            waited += 5
+            if waited > self.timeout:
+                raise Timeout("read: no leader elected")
+            lid = int(SM.leader_id(self.sim.state, self.sim.static))
         st = self.sim.state
         role = np.asarray(st["role"])
         alive = np.asarray(st["alive"])
-        lid = int(SM.leader_id(st, self.sim.static))
-        if lid < 0:
-            raise NotLeader("no leader for readindex")
-        readindex = int(st["commit_len"][lid])
+        readindex = max(int(st["commit_len"][lid]), self.session_floor)
         applied = np.asarray(st["applied_len"])
+        node = None
         if allow_observer:
             obs = np.where((role == SM.OBSERVER) & alive &
                            (applied >= readindex))[0]
             if obs.size:
                 node = int(obs[0])
-                return int(st["kv"][node, kid]), readindex
-        fol = np.where(((role == SM.FOLLOWER) | (role == SM.LEADER)) &
-                       alive & (applied >= readindex))[0]
-        node = int(fol[0]) if fol.size else lid
-        # wait for the serving node to apply up to readindex
+        if node is None:
+            fol = np.where(((role == SM.FOLLOWER) | (role == SM.LEADER)) &
+                           alive & (applied >= readindex))[0]
+            node = int(fol[0]) if fol.size else lid
+        # apply-index wait: the serving replica must reach the fence
         waited = 0
         while int(self.sim.state["applied_len"][node]) < readindex:
             self._step(1)
             waited += 1
             if waited > self.timeout:
                 raise Timeout("read: node never reached readindex")
-        return int(self.sim.state["kv"][node, kid]), readindex
+        value = int(self.sim.state["kv"][node, kid])
+        self.session_floor = max(self.session_floor, readindex)
+        self._record_read(int(self.sim.state["tick"]) - t0)
+        return value, readindex

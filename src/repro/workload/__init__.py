@@ -1,0 +1,13 @@
+"""Open-loop workload surface (DESIGN.md §11): arrival-rate processes
+and key-popularity models that compile to cfg_c jit-argument arrays —
+the serving-side twin of the market-trace contract (DESIGN.md §10)."""
+from repro.workload.arrivals import (ConstantRate, DiurnalRate, FlashCrowd,
+                                     OpenLoop, RateProcess, ZipfianKeys,
+                                     host_poisson_totals, materialize_curve,
+                                     uniform_key_cdf)
+
+__all__ = [
+    "ConstantRate", "DiurnalRate", "FlashCrowd", "OpenLoop", "RateProcess",
+    "ZipfianKeys", "host_poisson_totals", "materialize_curve",
+    "uniform_key_cdf",
+]

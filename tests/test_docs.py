@@ -55,3 +55,16 @@ def test_market_contract_is_cross_referenced():
     cited_from = set(refs.get("10", []))
     assert any("core/step.py" in f for f in cited_from), cited_from
     assert any("repro/market/" in f for f in cited_from), cited_from
+
+
+def test_serving_contract_is_cross_referenced():
+    """Same rule for the §11 serving surface: cited from the tick that
+    consumes arrival curves and serves the read-index round
+    (`workload_step`/`read_step`), from the workload package that
+    produces the plans, and from the service whose `get` runs the
+    explicit round."""
+    refs = _references()
+    cited_from = set(refs.get("11", []))
+    assert any("core/step.py" in f for f in cited_from), cited_from
+    assert any("repro/workload/" in f for f in cited_from), cited_from
+    assert any("kvstore/service.py" in f for f in cited_from), cited_from

@@ -1,13 +1,19 @@
-"""Wing&Gong checker unit tests + checking a simulated write history."""
+"""Wing&Gong checker unit tests, checking a simulated write history, and
+checking the service's observer read-index round (DESIGN.md §11) against
+the same checker."""
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis",
-                    reason="property-based tests need hypothesis "
-                           "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
+from repro.configs.bwraft_kv import CONFIG as CC
 from repro.core.linearizability import Op, is_linearizable
+from repro.core.runtime import BWRaftSim
+from repro.kvstore.service import BWKVService
 
 
 def test_trivially_linearizable():
@@ -31,9 +37,7 @@ def test_read_your_write_violation():
     assert not is_linearizable(h)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(0, 99999))
-def test_sequential_histories_always_linearizable(seed):
+def _check_sequential_history(seed):
     rng = np.random.default_rng(seed)
     t, val, h = 0.0, {}, []
     for _ in range(rng.integers(2, 10)):
@@ -46,6 +50,17 @@ def test_sequential_histories_always_linearizable(seed):
             h.append(Op("r", k, val.get(k, 0), t, t + 1))
         t += 2
     assert is_linearizable(h)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 99999))
+    def test_sequential_histories_always_linearizable(seed):
+        _check_sequential_history(seed)
+else:                                                 # fixed-seed fallback
+    @pytest.mark.parametrize("seed", [0, 17, 4242, 99998])
+    def test_sequential_histories_always_linearizable(seed):
+        _check_sequential_history(seed)
 
 
 def test_sim_write_history_linearizable(sim_trace_factory):
@@ -82,3 +97,75 @@ def test_sim_write_history_linearizable(sim_trace_factory):
     else:
         ops_checked = ops[:8]
     assert is_linearizable(ops_checked[:10])
+
+
+# ------------------------------------------------------------------ #
+# the service's observer read-index round vs the checker
+# ------------------------------------------------------------------ #
+def _service(*, seed, observers=0, timeout_ticks=400):
+    sim = BWRaftSim(CC, write_rate=0.0, read_rate=0.0, seed=seed,
+                    manage_resources=False)
+    if observers:
+        sim._lease(0, observers)
+    s = BWKVService(sim, timeout_ticks=timeout_ticks)
+    s._step(120)                       # elect a leader
+    return s
+
+
+def _timed(svc, fn, *args, **kw):
+    """Invocation interval in cluster ticks: (result, t_invoke, t_return)."""
+    t0 = float(svc.sim.state["tick"])
+    out = fn(*args, **kw)
+    return out, t0, float(svc.sim.state["tick"])
+
+
+def test_observer_read_history_linearizable():
+    """A put/get interleaving over one key, reads served through the
+    observer read-index round, timed in cluster ticks — the history must
+    pass the same Wing&Gong checker the aggregate traces do."""
+    s = _service(seed=21, observers=4)
+    h = []
+    rng = np.random.default_rng(3)
+    for i in range(1, 7):
+        _, t0, t1 = _timed(s, s.put, "lin", i)
+        h.append(Op("w", 0, i, t0, t1))
+        if rng.uniform() < 0.7:
+            (v, _), t0, t1 = _timed(s, s.get, "lin")
+            h.append(Op("r", 0, v, t0, t1))
+    (v, _), t0, t1 = _timed(s, s.get, "lin")
+    h.append(Op("r", 0, v, t0, t1))
+    assert is_linearizable(h)
+
+
+def test_leader_only_read_history_linearizable():
+    """The same contract holds with observers disallowed (fallback to a
+    caught-up follower or the leader)."""
+    s = _service(seed=23)
+    h = []
+    for i in (5, 9, 2):
+        _, t0, t1 = _timed(s, s.put, "k", i)
+        h.append(Op("w", 0, i, t0, t1))
+        (v, _), t0, t1 = _timed(s, s.get, "k", allow_observer=False)
+        h.append(Op("r", 0, v, t0, t1))
+    assert is_linearizable(h)
+
+
+def test_session_read_never_older_than_acked_write():
+    """Session monotonicity (DESIGN.md §11): a read-index read returns a
+    revision at or past the session floor, so a get never observes state
+    older than the last write acked to the same client session — and
+    successive reads never travel backwards."""
+    s = _service(seed=25, observers=3)
+    last_rev = -1
+    for i in range(1, 6):
+        res = s.put("mono", i * 11)
+        assert s.session_floor > res.revision
+        v, rev = s.get("mono")
+        assert v == i * 11             # exactly the acked write, no older
+        assert rev >= s.session_floor - 1 and rev >= res.revision + 1
+        assert rev >= last_rev
+        last_rev = rev
+    # an interleaved read on another key still rides the same floor
+    s.put("other", 1)
+    v, rev = s.get("mono")
+    assert v == 55 and rev >= last_rev

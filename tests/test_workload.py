@@ -1,0 +1,240 @@
+"""The open-loop workload contract (DESIGN.md §11): arrival curves are
+conserved against the host generator, inert at zero rate, Zipfian key
+popularity matches `scipy.stats.zipfian`, and swapping plans at one
+shape never recompiles (CountingJit-asserted).
+
+Randomized sweeps run through hypothesis when it is installed
+(requirements-dev.txt) and fall back to fixed-seed sweeps otherwise
+(the `test_raft_tick_kernels.py` convention)."""
+import numpy as np
+import pytest
+import scipy.stats
+
+from repro.configs.bwraft_kv import CONFIG
+from repro.core.runtime import BWRaftSim
+from repro.workload import (ConstantRate, DiurnalRate, FlashCrowd, OpenLoop,
+                            ZipfianKeys, host_poisson_totals,
+                            materialize_curve, uniform_key_cdf)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+T = CONFIG.period_ticks
+
+
+# --------------------------------------------------------------------- #
+# curve materialization
+# --------------------------------------------------------------------- #
+def test_constant_rate_curve():
+    c = ConstantRate(7.5).materialize(40)
+    assert c.shape == (40,) and c.dtype == np.float32
+    assert np.all(c == np.float32(7.5))
+
+
+def test_diurnal_curve_bounds_and_period():
+    c = DiurnalRate(10.0, amplitude=0.5, period_ticks=50).materialize(100)
+    assert c.min() >= 4.9 and c.max() <= 15.1
+    assert np.allclose(c[:50], c[50:], atol=1e-4)     # one period repeats
+    # amplitude > 1 floors at zero instead of going negative
+    deep = DiurnalRate(10.0, amplitude=2.0).materialize(100)
+    assert deep.min() == 0.0
+
+
+def test_flash_crowd_burst_windows():
+    c = FlashCrowd(ConstantRate(2.0), mult=8.0, every_ticks=20,
+                   burst_ticks=3, offset=5).materialize(60)
+    burst = (np.arange(60) - 5) % 20 < 3
+    assert np.all(c[burst] == np.float32(16.0))
+    assert np.all(c[~burst] == np.float32(2.0))
+
+
+def test_materialize_curve_validates():
+    with pytest.raises(AssertionError):
+        materialize_curve(np.ones((5,)), 6)           # wrong length
+    with pytest.raises(AssertionError):
+        materialize_curve(-np.ones((6,)), 6)          # negative rate
+
+
+def _check_fit_to_wraps(ticks, width):
+    plan = OpenLoop(write=DiurnalRate(5.0, period_ticks=ticks),
+                    read=FlashCrowd(ConstantRate(8.0), every_ticks=7),
+                    ticks=ticks)
+    w0, r0 = plan.materialize()
+    w, r, alen = plan.fit_to(width)
+    assert w.shape == (width,) and r.shape == (width,)
+    assert alen == min(ticks, width)
+    # replay-neutral widening: the wrapped lookup on the widened curve
+    # equals the lookup on the original plan at its own length
+    idx = np.arange(width) % alen
+    assert np.array_equal(w[idx % w.shape[0]][:alen], w0[:alen])
+    assert np.array_equal(w[:alen], w0[:alen])
+    assert np.array_equal(r[:alen], r0[:alen])
+
+
+@pytest.mark.parametrize("ticks,width", [(10, 25), (25, 10), (16, 16)])
+def test_fit_to_wraps(ticks, width):
+    _check_fit_to_wraps(ticks, width)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 64), st.integers(1, 64))
+    def test_fit_to_wraps_hypothesis(ticks, width):
+        _check_fit_to_wraps(ticks, width)
+
+
+# --------------------------------------------------------------------- #
+# arrival totals: device path vs host generator
+# --------------------------------------------------------------------- #
+def _run_open_loop(plan, *, seed=0, epochs=1, keypop=None):
+    sim = BWRaftSim(CONFIG, write_rate=0.0, read_rate=0.0, seed=seed,
+                    manage_resources=False, arrivals=plan, keypop=keypop)
+    return sim, sim.run(epochs)
+
+
+def _check_totals_conserved(seed):
+    """Device Poisson totals match the host generator's expected totals
+    within sampling error (total ~ Poisson(M) => sd = sqrt(M))."""
+    epochs = 2
+    plan = OpenLoop(write=DiurnalRate(6.0, amplitude=0.5),
+                    read=FlashCrowd(ConstantRate(20.0), mult=4.0,
+                                    every_ticks=30, burst_ticks=4),
+                    ticks=T)
+    w, r = plan.materialize()
+    sim, reps = _run_open_loop(plan, seed=seed, epochs=epochs)
+    got_w = sum(rep.writes_arrived for rep in reps)
+    got_r = sum(rep.reads_arrived for rep in reps)
+    want_w = host_poisson_totals(w, plan.ticks, epochs * T)
+    want_r = host_poisson_totals(r, plan.ticks, epochs * T)
+    assert abs(got_w - want_w) <= 6 * np.sqrt(want_w) + 1, (got_w, want_w)
+    assert abs(got_r - want_r) <= 6 * np.sqrt(want_r) + 1, (got_r, want_r)
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_arrival_totals_conserved(seed):
+    _check_totals_conserved(seed)
+
+
+def test_zero_rate_curves_inert():
+    """An all-zero plan generates nothing: no arrivals, no serves, no
+    latency samples — open-loop zero == closed-loop zero."""
+    plan = OpenLoop(write=ConstantRate(0.0), read=ConstantRate(0.0),
+                    ticks=T)
+    sim, reps = _run_open_loop(plan, seed=3, epochs=2)
+    assert all(rep.reads_arrived == 0 and rep.writes_arrived == 0 and
+               rep.reads_served == 0 and rep.writes_committed == 0
+               for rep in reps)
+    assert all(np.isnan(rep.read_lat_p95) for rep in reps)
+
+
+def test_short_plan_wraps_across_epochs():
+    """A plan shorter than the epoch wraps at its OWN length: expected
+    totals follow the wrapped schedule, not zero-padding."""
+    short = OpenLoop(write=ConstantRate(4.0), read=ConstantRate(12.0),
+                     ticks=T // 4)
+    w, _ = short.materialize()
+    want = host_poisson_totals(w, short.ticks, T)
+    assert want == pytest.approx(4.0 * T)
+    _, reps = _run_open_loop(short, seed=5)
+    got = reps[0].writes_arrived
+    assert abs(got - want) <= 6 * np.sqrt(want) + 1
+
+
+# --------------------------------------------------------------------- #
+# Zipfian key popularity vs scipy.stats.zipfian
+# --------------------------------------------------------------------- #
+def _check_zipf_cdf(s, K):
+    cdf = ZipfianKeys(s).materialize(K)
+    want = scipy.stats.zipfian(a=s, n=K).cdf(np.arange(1, K + 1))
+    assert cdf.shape == (K,)
+    assert float(cdf[-1]) == 1.0
+    np.testing.assert_allclose(cdf, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("s,K", [(1.1, 64), (0.8, 256), (1.5, 1024)])
+def test_zipf_cdf_matches_scipy(s, K):
+    _check_zipf_cdf(s, K)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0.3, 2.5), st.integers(2, 512))
+    def test_zipf_cdf_matches_scipy_hypothesis(s, K):
+        _check_zipf_cdf(s, K)
+
+
+def test_zipf_sampler_frequency_ranks():
+    """Inverse-transform draws off the materialized CDF (the exact
+    `step.leader_step` formula) reproduce `scipy.stats.zipfian`
+    frequencies: rank order on well-separated ranks, and total
+    variation within sampling tolerance."""
+    s, K, n = 1.2, 64, 200_000
+    cdf = ZipfianKeys(s).materialize(K)
+    rng = np.random.default_rng(0)
+    keys = np.clip(np.searchsorted(cdf, rng.random(n), side="left"),
+                   0, K - 1)
+    freq = np.bincount(keys, minlength=K) / n
+    pmf = scipy.stats.zipfian(a=s, n=K).pmf(np.arange(1, K + 1))
+    assert 0.5 * np.abs(freq - pmf).sum() < 0.01          # TVD
+    assert freq[0] > freq[4] > freq[16] > freq[48]        # rank order
+
+
+def test_zipf_padded_tail_never_sampled():
+    cdf = ZipfianKeys(1.1).materialize(16, pad_keys=8)
+    assert cdf.shape == (24,)
+    assert np.all(cdf[16:] == 1.0)
+    u = np.random.default_rng(1).random(10_000)
+    keys = np.searchsorted(cdf, u, side="left")
+    assert keys.max() < 16
+
+
+def test_uniform_cdf_is_uniform():
+    cdf = uniform_key_cdf(8, pad_keys=4)
+    np.testing.assert_allclose(np.diff(cdf[:8]), 1 / 8, atol=1e-6)
+    assert np.all(cdf[8:] == 1.0)
+
+
+def test_zipf_skews_device_write_keys():
+    """End to end through the jitted tick: a Zipfian member's committed
+    writes concentrate on the hot head of the key space."""
+    plan = OpenLoop(write=ConstantRate(8.0), read=ConstantRate(0.0),
+                    ticks=T)
+    sim, _ = _run_open_loop(plan, seed=2, epochs=2,
+                            keypop=ZipfianKeys(1.5))
+    kv = np.asarray(sim.state["kv"])
+    touched = np.where((kv != 0).any(axis=0))[0]
+    assert touched.size > 0
+    # with s=1.5 over 1024 keys, most writes land in the first decile
+    assert np.median(touched) < CONFIG.key_space // 8
+
+
+# --------------------------------------------------------------------- #
+# plan swaps never recompile (CountingJit)
+# --------------------------------------------------------------------- #
+def test_plan_swap_triggers_no_recompile():
+    """Arrival curves are jit arguments: swapping the plan (same width)
+    and flipping open-loop on a running sim reuses the compiled epoch
+    program — the §11 twin of the market-trace no-recompile contract."""
+    plan_a = OpenLoop(write=DiurnalRate(6.0), read=ConstantRate(24.0),
+                      ticks=T)
+    plan_b = OpenLoop(write=FlashCrowd(ConstantRate(3.0), mult=6.0),
+                      read=DiurnalRate(20.0, amplitude=0.8), ticks=T)
+    sim = BWRaftSim(CONFIG, write_rate=5.0, read_rate=15.0, seed=8,
+                    manage_resources=False, arrivals=plan_a)
+    sim.run(1)
+    compiled = sim._epoch_fn.cache_size()
+    sim.set_arrivals(plan_b)
+    sim.run(1)
+    assert sim._epoch_fn.cache_size() == compiled
+    # swapping back is free too, and a second sim at the same curve
+    # width shares the cached program outright
+    sim.set_arrivals(plan_a)
+    sim.run(1)
+    twin = BWRaftSim(CONFIG, write_rate=5.0, read_rate=15.0, seed=9,
+                     manage_resources=False, arrivals=plan_b)
+    twin.run(1)
+    assert twin._epoch_fn is sim._epoch_fn
+    assert sim._epoch_fn.cache_size() == compiled
