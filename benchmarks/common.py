@@ -52,7 +52,8 @@ def tick_ms(ticks: float) -> float:
 
 def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
                  shards=2, group_id=0, market="process",
-                 trace=None, arrivals=None, keypop=None
+                 trace=None, arrivals=None, keypop=None,
+                 warning_ticks=0, bid_policy=None, bid_on_trace=False
                  ) -> List[MemberSpec]:
     """Fleet members for one (bwraft, raft, multiraft-shards) comparison
     point: 2 + `shards` members, batched into whatever FleetSim they join.
@@ -65,11 +66,16 @@ def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
     the market only moves the spot consumer.  `arrivals`/`keypop`
     (DESIGN.md §11) put every system under the SAME open-loop plan: the
     whole-system members replay it as is, the shards at the
-    `shard_workload`-divided intensity."""
+    `shard_workload`-divided intensity.  `warning_ticks`/`bid_policy`/
+    `bid_on_trace` (DESIGN.md §12) harden the BW-Raft member's spot
+    consumption — advance-warned degradation and per-epoch hazard-aware
+    bids; the on-demand baselines have no spot exposure to harden."""
     return ([MemberSpec(cfg=cfg, mode="bwraft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed,
                         market=market, trace=trace,
-                        arrivals=arrivals, keypop=keypop),
+                        arrivals=arrivals, keypop=keypop,
+                        warning_ticks=warning_ticks, bid_policy=bid_policy,
+                        bid_on_trace=bid_on_trace),
              MemberSpec(cfg=cfg, mode="raft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed,
                         arrivals=arrivals, keypop=keypop)]
@@ -91,7 +97,8 @@ def collect_systems(fleet, lo, *, group_id):
 
 
 def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
-                shards=2, market="process", trace=None):
+                shards=2, market="process", trace=None,
+                warning_ticks=0, bid_policy=None, bid_on_trace=False):
     """(bwraft, raft, multiraft) steady-state reports.
 
     Fleet path: all three systems (2 + `shards` members) advance in one
@@ -104,7 +111,9 @@ def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
     if not USE_FLEET:
         bw = BWRaftSim(cfg, mode="bwraft", write_rate=write_rate,
                        read_rate=read_rate, phi=phi, seed=seed,
-                       market=market, trace=trace)
+                       market=market, trace=trace,
+                       warning_ticks=warning_ticks, bid_policy=bid_policy,
+                       bid_on_trace=bid_on_trace)
         og = BWRaftSim(cfg, mode="raft", write_rate=write_rate,
                        read_rate=read_rate, phi=phi, seed=seed)
         mr = multiraft.MultiRaftSim(cfg, shards=shards,
@@ -115,7 +124,9 @@ def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
 
     specs = system_specs(cfg, write_rate=write_rate, read_rate=read_rate,
                          seed=seed, phi=phi, shards=shards, group_id=0,
-                         market=market, trace=trace)
+                         market=market, trace=trace,
+                         warning_ticks=warning_ticks, bid_policy=bid_policy,
+                         bid_on_trace=bid_on_trace)
     fleet = FleetSim(specs)
     fleet.run(epochs)
     return collect_systems(fleet, 0, group_id=0)

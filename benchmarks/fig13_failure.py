@@ -1,4 +1,5 @@
-"""Fig. 13: impact of the spot failure rate phi.
+"""Fig. 13: impact of the spot failure rate phi — and the §12 warning
+window W.
 
 The kill-rate grid runs as one `FleetSim` over the phi axis: phi is a
 per-member jit argument, so every point shares the single compiled
@@ -10,6 +11,14 @@ attrition on a provisioned cluster (kills summed over the run, survivor
 counts in `n_secretaries`) and run as ONE device dispatch via the
 multi-epoch scan (DESIGN.md §7.1).  The manager's ability to re-lease
 under churn is exercised separately (fig14, tests/test_system.py).
+
+Each phi point also reports recovery (leaderless ticks over the run)
+and goodput retention vs the phi=0 member.  A second fixed-role grid
+sweeps the advance-warning window W (DESIGN.md §12) at a hot market
+(`spot_price_vol=2.0`, so price-over-bid revocations actually fire):
+W is cfg_c data, so the whole W axis shares one compiled program; a
+longer warning delays every kill and degrades warned relays gracefully,
+so retention vs the calm-market member recovers with W.
 """
 from benchmarks import common
 from benchmarks.common import PAPER_CLUSTER
@@ -17,31 +26,47 @@ from repro.core.fleet import FleetSim, MemberSpec
 from repro.core.runtime import BWRaftSim
 
 FIXED_ROLES = (4, 8)    # provisioned complement the phi axis erodes
+HOT_VOL = 2.0           # W-grid market: hot enough to cross the bid
+
+
+def _fixed_role_reports(specs, epochs):
+    """The fig13 recipe: stabilize one epoch, wire FIXED_ROLES once,
+    then one multi-epoch dispatch (fleet) or per-member loop."""
+    if common.USE_FLEET:
+        fleet = FleetSim(specs)
+        assert fleet.single_dispatch_eligible
+        fleet.run(1)                            # leadership stabilizes
+        fleet.lease_fixed(*FIXED_ROLES)
+        return fleet.run(epochs - 1)            # ONE dispatch
+    out = []
+    for spec in specs:
+        sim = BWRaftSim(spec.cfg, mode=spec.mode,
+                        write_rate=spec.write_rate,
+                        read_rate=spec.read_rate, phi=spec.phi,
+                        seed=spec.seed, manage_resources=False,
+                        spot_price_vol=spec.spot_price_vol,
+                        warning_ticks=spec.warning_ticks)
+        sim.run(1)
+        sim.lease_fixed(*FIXED_ROLES)
+        out.append(sim.run(epochs - 1))
+    return out
 
 
 def run(quick: bool = True):
     rows = []
     phis = [0.0, 0.05] if quick else [0.0, 0.01, 0.05, 0.1, 0.2]
+    warns = [0, 5] if quick else [0, 2, 5, 10, 20]
     epochs = 5 if quick else 15
 
-    if common.USE_FLEET:
-        fleet = FleetSim([MemberSpec(cfg=PAPER_CLUSTER, write_rate=12.0,
-                                     read_rate=48.0, phi=phi, seed=12,
-                                     manage_resources=False)
-                          for phi in phis])
-        assert fleet.single_dispatch_eligible
-        fleet.run(1)                            # leadership stabilizes
-        fleet.lease_fixed(*FIXED_ROLES)
-        reports = fleet.run(epochs - 1)         # ONE dispatch
-    else:
-        reports = []
-        for phi in phis:
-            sim = BWRaftSim(PAPER_CLUSTER, write_rate=12.0, read_rate=48.0,
-                            phi=phi, seed=12, manage_resources=False)
-            sim.run(1)
-            sim.lease_fixed(*FIXED_ROLES)
-            reports.append(sim.run(epochs - 1))
+    reports = _fixed_role_reports(
+        [MemberSpec(cfg=PAPER_CLUSTER, write_rate=12.0, read_rate=48.0,
+                    phi=phi, seed=12, manage_resources=False)
+         for phi in phis], epochs)
 
+    # retention compares RUN-SUMMED goodput (kills erode a fixed-role
+    # cluster permanently, so "how long the complement survived" is the
+    # signal — the last epoch alone saturates once everything is dead)
+    base_goodput = max(sum(r.goodput for r in reports[0]), 1)   # phi=0
     for phi, reps in zip(phis, reports):
         rows.append((f"fig13.goodput.phi{int(phi*100)}", reps[-1].goodput,
                      "ops_per_epoch"))
@@ -49,4 +74,40 @@ def run(quick: bool = True):
                      sum(r.killed for r in reps), "revocations_per_run"))
         rows.append((f"fig13.secretaries.phi{int(phi*100)}",
                      reps[-1].n_secretaries, "alive"))
+        rows.append((f"fig13.recovery.phi{int(phi*100)}",
+                     sum(r.no_leader_ticks for r in reps),
+                     "leaderless_ticks_per_run"))
+        rows.append((f"fig13.retention.phi{int(phi*100)}",
+                     sum(r.goodput for r in reps) / base_goodput,
+                     "frac_of_phi0"))
+
+    # W grid (DESIGN.md §12): same fixed-role recipe on a hot market,
+    # plus one calm-market member (vol=0: the walk never leaves the
+    # mean, no revocations) as the retention baseline.  Read rate is
+    # pushed into the capacity-bound regime so the observers actually
+    # carry goodput — that is where losing them (and getting them back
+    # via warnings/reprieves) moves retention.
+    w_read_rate = 240.0
+    w_reports = _fixed_role_reports(
+        [MemberSpec(cfg=PAPER_CLUSTER, write_rate=12.0,
+                    read_rate=w_read_rate, seed=12,
+                    manage_resources=False, spot_price_vol=0.0)]
+        + [MemberSpec(cfg=PAPER_CLUSTER, write_rate=12.0,
+                      read_rate=w_read_rate, seed=12,
+                      manage_resources=False,
+                      spot_price_vol=HOT_VOL, warning_ticks=w)
+           for w in warns], epochs)
+
+    calm_goodput = max(sum(r.goodput for r in w_reports[0]), 1)
+    for w, reps in zip(warns, w_reports[1:]):
+        rows.append((f"fig13.goodput.W{w}", reps[-1].goodput,
+                     "ops_per_epoch"))
+        rows.append((f"fig13.killed.W{w}", sum(r.killed for r in reps),
+                     "revocations_per_run"))
+        rows.append((f"fig13.recovery.W{w}",
+                     sum(r.no_leader_ticks for r in reps),
+                     "leaderless_ticks_per_run"))
+        rows.append((f"fig13.retention.W{w}",
+                     sum(r.goodput for r in reps) / calm_goodput,
+                     "frac_of_calm"))
     return rows

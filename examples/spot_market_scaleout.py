@@ -11,6 +11,13 @@ events, while the on-demand baselines are market-blind — the paper's
 Fig. 8 story on a real market.
 
     PYTHONPATH=src python examples/spot_market_scaleout.py --trace aws-us-east
+
+``--warning-ticks W`` grants BW-Raft's spot nodes an EC2-style advance
+warning — a revocation signal W ticks before the kill lands, degraded
+through in-graph (DESIGN.md §12) — and ``--bid-policy hazard`` switches
+the member from the static init-time bid to per-epoch `HazardAwareBid`
+updates (bid up on calm sites, shed on hot ones; pair with ``--trace``
+so the hazard is a real market's).
 """
 import argparse
 import os
@@ -19,7 +26,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import scaled_cluster, run_systems
-from repro.market import available_traces, load
+from repro.market import HazardAwareBid, available_traces, load
 
 
 def main():
@@ -28,9 +35,21 @@ def main():
     ap.add_argument("--trace", default=None, choices=available_traces(),
                     help="replay a committed sample market trace instead "
                          "of the synthetic walk (DESIGN.md §10)")
+    ap.add_argument("--warning-ticks", type=int, default=0,
+                    help="advance-warning window W in ticks "
+                         "(DESIGN.md §12); 0 = unwarned kills")
+    ap.add_argument("--bid-policy", default="static",
+                    choices=("static", "hazard"),
+                    help="spot bidding: 'static' keeps the init-time "
+                         "1.5x-mean bid, 'hazard' recalibrates per epoch "
+                         "from the revocation hazard (DESIGN.md §12)")
     args = ap.parse_args()
     if args.trace is not None:
         print(f"market: replaying trace '{args.trace}'")
+    if args.warning_ticks:
+        print(f"revocation warning: {args.warning_ticks} ticks")
+    if args.bid_policy == "hazard":
+        print("bidding: per-epoch hazard-aware recalibration")
     print(f"{'F':>4} {'system':>10} {'goodput':>9} {'w_lat p95':>10} "
           f"{'cost/epoch':>11} {'cost/kop':>9}")
     for f_per_site in (2, 8):
@@ -39,13 +58,24 @@ def main():
         if args.trace is not None:
             trace = load(args.trace,
                          ticks=args.epochs * cfg.period_ticks)
+        policy = None
+        if args.bid_policy == "hazard":
+            mean = (trace.fit_to(cfg.num_sites, trace.ticks).price.mean(1)
+                    if trace is not None else
+                    [s.spot_price_mean for s in cfg.sites])
+            policy = HazardAwareBid(mean_price=mean,
+                                    window_ticks=cfg.period_ticks)
         bw, og, mr = run_systems(cfg, write_rate=4.0 * f_per_site,
                                  read_rate=12.0 * f_per_site,
                                  epochs=args.epochs,
                                  shards=max(f_per_site // 2, 2),
                                  market="process" if trace is None
                                  else "trace",
-                                 trace=trace)
+                                 trace=trace,
+                                 warning_ticks=args.warning_ticks,
+                                 bid_policy=policy,
+                                 bid_on_trace=trace is not None
+                                 and args.bid_policy == "hazard")
         for name, r in (("bwraft", bw), ("original", og),
                         ("multiraft", mr)):
             print(f"{4*f_per_site:>4} {name:>10} {r.goodput:>9.0f} "

@@ -80,7 +80,8 @@ _BATCHED_STATIC_KEYS = ("site", "is_voter", "rtt", "majority")
 # spec fields sweepable via FleetSim.from_sweep axes
 _SWEEP_AXES = ("mode", "write_rate", "read_rate", "phi", "seed",
                "manage_resources", "spot_price_vol", "budget_per_period",
-               "market", "trace", "arrivals", "keypop")
+               "market", "trace", "arrivals", "keypop",
+               "warning_ticks", "bid_policy", "faults", "bid_on_trace")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +129,19 @@ class MemberSpec:
     # keeps the uniform draw.
     arrivals: Optional[object] = None       # workload.OpenLoop
     keypop: Optional[object] = None         # workload.ZipfianKeys
+    # revocation robustness (DESIGN.md §12): `warning_ticks` is the
+    # advance-warning window W (cfg_c data — a W sweep is one program);
+    # `bid_on_trace` re-derives trace revocations from replayed prices
+    # vs the member's CURRENT bid; `bid_policy` (e.g.
+    # `market.calibrate.HazardAwareBid`, eq=False so the frozen spec
+    # stays hashable) recomputes the (S,) bids per epoch — a cfg_c row
+    # write, never a recompile, but it does exclude the fleet from the
+    # multi-epoch single-dispatch scan; `faults` is a deterministic
+    # `market.chaos.FaultSchedule` riding in cfg_c like market traces
+    warning_ticks: int = 0
+    bid_on_trace: bool = False
+    bid_policy: Optional[object] = None     # market.calibrate.HazardAwareBid
+    faults: Optional[object] = None         # market.chaos.FaultSchedule
 
     @property
     def manage(self) -> bool:
@@ -204,15 +218,20 @@ def _vmapped_epoch(shapes: FleetShapes, shared: Dict, backend: str = "xla",
 
 
 def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict,
-                    backend: str = "xla", n_groups: int = 0):
+                    backend: str = "xla", n_groups: int = 0,
+                    widths: Tuple[int, ...] = ()):
     """Digest pipeline: a jitted, vmapped, fully device-resident epoch —
     in-scan metric reduction, in-graph compaction, donated state buffers.
     Returns `(compacted_state, digest)` with digest leaves batched over B.
-    One compile per (static shape, backend, group count); `shared`
-    (python ints) is closed over, batched statics, cfg_c, and the group
-    segment ids are runtime arguments."""
+    One compile per (static shape, backend, group count, cfg_c array
+    widths); `shared` (python ints) is closed over, batched statics,
+    cfg_c, and the group segment ids are runtime arguments.  `widths`
+    (the fleet's trace/arrival/fault-schedule tick widths, §10–§12) are
+    jit-static shapes of the cfg_c arguments, so they belong in the
+    cache key — two same-shape fleets at different widths are different
+    programs and must not share one compile counter."""
     key = ("device", shapes, tuple(sorted(shared.items())), backend,
-           n_groups)
+           n_groups, widths)
     if key not in _FLEET_EPOCH_CACHE:
         _FLEET_EPOCH_CACHE[key] = CountingJit(
             _vmapped_epoch(shapes, shared, backend, n_groups),
@@ -221,13 +240,14 @@ def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict,
 
 
 def _fleet_multi_epoch_fn(shapes: FleetShapes, shared: Dict, epochs: int,
-                          backend: str = "xla", n_groups: int = 0):
+                          backend: str = "xla", n_groups: int = 0,
+                          widths: Tuple[int, ...] = ()):
     """Single-dispatch fast path: scan-of-scans over `epochs` device
     epochs (compaction in-graph between them) for fleets with no managing
     member.  Digest leaves come back stacked (E, B, ...) — group leaves,
     when present, (E, G, ...)."""
     key = ("multi", shapes, tuple(sorted(shared.items())), epochs, backend,
-           n_groups)
+           n_groups, widths)
     if key not in _FLEET_EPOCH_CACHE:
         epoch = _vmapped_epoch(shapes, shared, backend, n_groups)
 
@@ -245,12 +265,13 @@ def _fleet_multi_epoch_fn(shapes: FleetShapes, shared: Dict, epochs: int,
     return _FLEET_EPOCH_CACHE[key]
 
 
-def _fleet_epoch_fn_host(shapes: FleetShapes, shared: Dict):
+def _fleet_epoch_fn_host(shapes: FleetShapes, shared: Dict,
+                         widths: Tuple[int, ...] = ()):
     """The PR-1 reference path, op for op: the original tick formulations
     (`step.tick(reference=True)`), per-tick metrics stacked over T,
     compaction as a separate dispatch, no donation.  Kept for A/B
     benchmarking and the digest-equivalence tests (DESIGN.md §7.1)."""
-    key = ("host", shapes, tuple(sorted(shared.items())))
+    key = ("host", shapes, tuple(sorted(shared.items())), widths)
     if key not in _FLEET_EPOCH_CACHE:
         def epoch_fn(state, rngs, bstatic, cfg_c):
             def one_epoch(st, rng, bstat, cc):
@@ -274,7 +295,8 @@ class _Member:
     (DESIGN.md §11)."""
 
     def __init__(self, spec: MemberSpec, shapes: FleetShapes,
-                 trace_ticks: int = 1, arrival_ticks: int = 1):
+                 trace_ticks: int = 1, arrival_ticks: int = 1,
+                 fault_ticks: int = 1):
         assert spec.mode in ("bwraft", "raft")
         cfg = spec.cfg
         if spec.budget_per_period is not None:
@@ -305,13 +327,17 @@ class _Member:
             two_pc = 0
         self.cfg_c = make_cfg_arrays(
             cfg, write_rate=spec.write_rate, read_rate=spec.read_rate,
-            phi=spec.phi, pad_sites=self.pads["pad_sites"],
+            phi=spec.phi, pad_nodes=self.pads["pad_nodes"],
+            pad_sites=self.pads["pad_sites"],
             pad_keys=self.pads["pad_keys"],
             spot_price_vol=spec.spot_price_vol,
             cross_shard_frac=spec.cross_shard_frac, two_pc_ticks=two_pc,
             market=spec.market, trace=spec.trace, trace_ticks=trace_ticks,
             arrivals=spec.arrivals, arrival_ticks=arrival_ticks,
-            keypop=spec.keypop)
+            keypop=spec.keypop,
+            warning_ticks=spec.warning_ticks,
+            bid_on_trace=spec.bid_on_trace,
+            faults=spec.faults, fault_ticks=fault_ticks)
         self.rng = jax.random.PRNGKey(spec.seed)
         self.controller = ClusterController(cfg, self.static,
                                             seed=spec.seed)
@@ -380,8 +406,14 @@ class FleetSim:
         self.arrival_ticks = max(
             [s.arrivals.ticks for s in specs if s.arrivals is not None],
             default=1)
+        # fleet-shared fault-schedule width (DESIGN.md §12): members'
+        # (N, Tf) kill schedules stack like market traces; schedule-free
+        # members carry inert all-False placeholders of the same width
+        self.fault_ticks = max(
+            [s.faults.ticks for s in specs if s.faults is not None],
+            default=1)
         self.members = [_Member(s, self.shapes, self.trace_ticks,
-                                self.arrival_ticks)
+                                self.arrival_ticks, self.fault_ticks)
                         for s in specs]
 
         # ---- shard groups (DESIGN.md §9) -----------------------------
@@ -439,10 +471,12 @@ class FleetSim:
         assert pipeline == "device" or self.n_groups == 0, \
             "shard groups need the digest pipeline (the host pipeline " \
             "is the frozen PR-1 reference and has no group reduction)"
+        widths = (self.trace_ticks, self.arrival_ticks, self.fault_ticks)
         self._epoch_fn = (_fleet_epoch_fn(self.shapes, self._shared,
-                                          backend, self.n_groups)
+                                          backend, self.n_groups, widths)
                           if pipeline == "device" else
-                          _fleet_epoch_fn_host(self.shapes, self._shared))
+                          _fleet_epoch_fn_host(self.shapes, self._shared,
+                                               widths))
         # cumulative device->host bytes fetched for report building
         # (digest leaves on the device path, full state + T-stacked
         # metrics on the host path) — perf_fleet.py reads the deltas
@@ -559,13 +593,24 @@ class FleetSim:
                     float(np.mean(dgi["spot_price"][:m.cfg.num_sites])))
                 rep.decision = dec
                 managed_rows.append(i)
+                # warned census (DESIGN.md §12): replace warned
+                # secretaries/observers on top of Algorithm 1's delta
+                # and drop warned secretaries from the wiring — inert
+                # (exact pre-§12 lease) when no warnings are raised
+                warned = np.asarray(dgi["warned"])
+                roles = np.asarray(dgi["role"])
                 managed_vals.append(m.controller.lease(
                     dgi["role"], dgi["alive"],
-                    max(dec.dk_s, 0), max(dec.dk_o, 0)))
+                    max(dec.dk_s, 0) + int(((roles == state_mod.SECRETARY)
+                                            & warned).sum()),
+                    max(dec.dk_o, 0) + int(((roles == state_mod.OBSERVER)
+                                            & warned).sum()),
+                    warned=warned))
             m.controller.end_epoch(rep)
             m.epoch += 1
             m.reports.append(rep)
             out.append(rep)
+        self._apply_bid_policies()
 
         if managed_rows:
             # write back ONLY the managed members' role/wiring rows — the
@@ -609,18 +654,47 @@ class FleetSim:
                     rep,
                     float(np.mean(sti["spot_price"][:m.cfg.num_sites])))
                 rep.decision = dec
+                # same warned-aware lease as the digest path (§12), so
+                # the two pipelines stay decision-equal under warnings
+                warned = sti["alive"] & (sti["warn_timer"] >= 0)
                 role[i], alive[i], sec_of[i], obs_of[i] = m.controller.lease(
-                    role[i], alive[i], max(dec.dk_s, 0), max(dec.dk_o, 0))
+                    role[i], alive[i],
+                    max(dec.dk_s, 0) + int(((role[i] == state_mod.SECRETARY)
+                                            & warned).sum()),
+                    max(dec.dk_o, 0) + int(((role[i] == state_mod.OBSERVER)
+                                            & warned).sum()),
+                    warned=warned)
             m.controller.end_epoch(rep)
             m.epoch += 1
             m.reports.append(rep)
             out.append(rep)
+        self._apply_bid_policies()
 
         self._state = compact_state(dict(
             self._state,
             role=jnp.asarray(role), alive=jnp.asarray(alive),
             sec_of=jnp.asarray(sec_of), obs_of=jnp.asarray(obs_of)))
         return out
+
+    def _apply_bid_policies(self) -> None:
+        """Per-epoch hazard-aware bid updates (DESIGN.md §12): recompute
+        each policy member's (S,) bids on the host and write ONLY those
+        members' `spot_bid` cfg_c rows back.  cfg_c is jit-argument data
+        at a fixed shape, so the swap never recompiles (the market-side
+        twin of the manage write-back above)."""
+        rows, vals = [], []
+        for i, m in enumerate(self.members):
+            if m.spec.bid_policy is None:
+                continue
+            rows.append(i)
+            vals.append(np.asarray(m.spec.bid_policy.update(
+                predictor=m.controller.predictor, trace=m.spec.trace,
+                end_tick=m.epoch * m.cfg.period_ticks,
+                sites=self.shapes.S), np.float32))
+        if rows:
+            idx = jnp.asarray(rows, jnp.int32)
+            self._cfg_c["spot_bid"] = self._cfg_c["spot_bid"].at[idx].set(
+                jnp.asarray(np.stack(vals), jnp.float32))
 
     def lease_fixed(self, want_sec: int, want_obs: int) -> None:
         """One-shot fixed-role wiring for every member: lease/wire
@@ -647,16 +721,22 @@ class FleetSim:
     def single_dispatch_eligible(self) -> bool:
         """True when `run(E)` can collapse into one device dispatch: the
         digest pipeline with no member running the per-epoch control
-        plane (plain-Raft baselines, fixed-role `prelease` sweeps)."""
+        plane (plain-Raft baselines, fixed-role `prelease` sweeps) and
+        no per-epoch bid policy (bid updates are host writes between
+        epochs, DESIGN.md §12)."""
         return (self.pipeline == "device" and
-                not any(m.manage for m in self.members))
+                not any(m.manage for m in self.members) and
+                not any(m.spec.bid_policy is not None
+                        for m in self.members))
 
     def _run_scan(self, epochs: int) -> None:
         """The multi-epoch fast path: ONE dispatch scans over `epochs`
         device epochs (in-graph compaction between them) and returns the
         digests stacked (E, B, ...)."""
         fn = _fleet_multi_epoch_fn(self.shapes, self._shared, epochs,
-                                   self.backend, self.n_groups)
+                                   self.backend, self.n_groups,
+                                   (self.trace_ticks, self.arrival_ticks,
+                                    self.fault_ticks))
         # identical split order to the epoch-by-epoch path, so the two are
         # trajectory-equal at the same seeds (tests/test_fleet.py)
         rngs = jnp.stack([self._split_epoch_rngs() for _ in range(epochs)])

@@ -82,6 +82,7 @@ class CountingJit:
 
 def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
                     read_rate: float, phi: float = 0.0,
+                    pad_nodes: int = 0,
                     pad_sites: int = 0, pad_keys: int = 0,
                     spot_price_vol: Optional[float] = None,
                     cross_shard_frac: float = 0.0,
@@ -89,7 +90,10 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
                     market: str = "process",
                     trace=None, trace_ticks: Optional[int] = None,
                     arrivals=None, arrival_ticks: Optional[int] = None,
-                    keypop=None) -> Dict:
+                    keypop=None,
+                    warning_ticks: int = 0, spot_bid=None,
+                    bid_on_trace: bool = False,
+                    faults=None, fault_ticks: Optional[int] = None) -> Dict:
     """Per-epoch dynamic knobs — all jit arguments, never baked into the
     compiled program.  `pad_sites` repeats the last site's prices so padded
     clusters share one (S,) shape (DESIGN.md §7).  `cross_shard_frac` /
@@ -115,7 +119,23 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
     the uniform draw, a `workload.ZipfianKeys` rides in as the (K,)
     `key_cdf` the leader inverse-transform samples; `pad_keys` widens
     the CDF with a saturated (never-sampled) tail so padded fleets
-    stack."""
+    stack.
+
+    Revocation-robustness knobs (DESIGN.md §12), all cfg_c data:
+    `warning_ticks` is the advance-warning window W (0 = today's
+    immediate kill, bit-identical); `spot_bid` overrides the per-site
+    bid (default: `state.site_price_init`'s 1.5x-mean rule) — carried
+    here instead of in state so per-epoch bid-policy updates never
+    recompile; `bid_on_trace` re-derives trace-path revocations from
+    the replayed prices vs the CURRENT bid (default False = verbatim
+    replay of the trace's revocation columns); a trace with per-node
+    `revoked_node` columns enters as `revoke_node_trace` (node rows
+    round-robin, time wrap shared with the site arrays); `faults` is a
+    deterministic `market.chaos.FaultSchedule` riding in as the (N, Tf)
+    `fault_trace` jit-argument array (widened to a fleet-shared
+    `fault_ticks` with inert False padding; the in-step lookup wraps at
+    the array width, so build schedules covering the full run for
+    one-shot semantics)."""
     assert 0.0 <= cross_shard_frac <= 1.0, cross_shard_frac
     assert 0 <= two_pc_ticks <= HIST_TAIL, \
         f"two_pc_ticks={two_pc_ticks} exceeds the histogram tail " \
@@ -125,6 +145,9 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         "market='trace' needs a market.MarketTrace (see market.load / " \
         "market/synthetic.py providers)"
     S = cfg.num_sites + pad_sites
+    N = cfg.max_nodes + pad_nodes
+    per_node = (trace is not None
+                and getattr(trace, "revoked_node", None) is not None)
     if trace is not None:
         width = trace_ticks or trace.ticks
         fitted = trace.fit_to(S, width)
@@ -139,6 +162,27 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         price_trace = jnp.zeros((S, trace_ticks or 1), jnp.float32)
         revoke_trace = jnp.zeros((S, trace_ticks or 1), bool)
         trace_len = 1
+    if per_node:
+        revoke_node = jnp.asarray(
+            trace.node_columns(N, int(price_trace.shape[1])), bool)
+    else:
+        revoke_node = jnp.zeros((N, int(price_trace.shape[1])), bool)
+    if faults is not None:
+        fault_len = fault_ticks or faults.ticks
+        fault_trace = jnp.asarray(faults.fit_to(N, fault_len), bool)
+    else:
+        fault_len = 1
+        fault_trace = jnp.zeros((N, fault_ticks or 1), bool)
+    if spot_bid is None:
+        bid = state_mod.site_price_init(cfg, S)[1]
+    else:
+        bid = np.asarray(spot_bid, np.float32).reshape(-1)
+        if bid.size == 1:
+            bid = np.full((S,), bid[0], np.float32)
+        elif bid.size < S:           # padded sites repeat the last bid
+            bid = np.concatenate(
+                [bid, np.full((S - bid.size,), bid[-1], np.float32)])
+        bid = bid[:S]
     if arrivals is not None:
         width = arrival_ticks or arrivals.ticks
         write_curve, read_curve, arrival_len = arrivals.fit_to(width)
@@ -168,6 +212,15 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         "price_trace": price_trace,
         "revoke_trace": revoke_trace,
         "trace_len": jnp.int32(trace_len),
+        # revocation-robustness data (DESIGN.md §12)
+        "spot_bid": jnp.asarray(bid, jnp.float32),
+        "warn_ticks": jnp.int32(warning_ticks),
+        "bid_on_trace": jnp.asarray(bool(bid_on_trace)),
+        "node_trace": jnp.asarray(per_node),
+        "revoke_node_trace": revoke_node,
+        "fault_on": jnp.asarray(faults is not None),
+        "fault_trace": fault_trace,
+        "fault_len": jnp.int32(fault_len),
         "write_rate": jnp.float32(write_rate),
         "read_rate": jnp.float32(read_rate),
         "phi": jnp.float32(phi),
@@ -206,6 +259,9 @@ class EpochReport:
     # read-latency histogram (DESIGN.md §11) — NaN when no read served
     read_lat_p95: float = float("nan")
     read_lat_p99: float = float("nan")
+    # end-of-epoch warning census: nodes alive with a raised advance-
+    # warning bit (DESIGN.md §12) — 0 whenever warning_ticks == 0
+    n_warned: int = 0
     decision: Optional[mgr.PeekDecision] = None
 
     @property
@@ -232,6 +288,8 @@ def build_report(epoch: int, st: Dict, ms: Dict,
     return EpochReport(
         read_lat_p95=read_p95,
         read_lat_p99=read_p99,
+        n_warned=int((np.asarray(st["alive"]) &
+                      (np.asarray(st["warn_timer"]) >= 0)).sum()),
         epoch=epoch,
         reads_arrived=int(st["reads_arrived"]),
         writes_arrived=int(st["writes_arrived"]),
@@ -331,6 +389,12 @@ def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int,
         "role": state["role"],
         "alive": alive,
         "spot_price": state["spot_price"],
+        # advance-warning census (DESIGN.md §12): which nodes carry a
+        # raised warning bit at epoch end, so the control plane can
+        # re-lease replacements BEFORE the kill lands
+        "warned": alive & (state["warn_timer"] >= 0),
+        "n_warned": jnp.sum(alive &
+                            (state["warn_timer"] >= 0)).astype(jnp.int32),
     }
 
 
@@ -410,6 +474,7 @@ def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
     return EpochReport(
         read_lat_p95=read_p95,
         read_lat_p99=read_p99,
+        n_warned=int(dg["n_warned"]),
         epoch=epoch,
         reads_arrived=int(dg["reads_arrived"]),
         writes_arrived=int(dg["writes_arrived"]),
@@ -460,20 +525,27 @@ def compact_state(state: Dict) -> Dict:
 
 def lease_and_wire(cfg: ClusterConfig, static, role: np.ndarray,
                    alive: np.ndarray, np_rng, predictor, leased: np.ndarray,
-                   want_sec: int, want_obs: int
+                   want_sec: int, want_obs: int,
+                   warned: Optional[np.ndarray] = None
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                               np.ndarray]:
     """Peak: score a spot-offer pool (eq. 2), MCSA-select, wire roles.
 
     Pure numpy control-plane step shared by BWRaftSim and FleetSim.
     Returns updated (role, alive, sec_of, obs_of); `leased` is a per-site
-    lease census updated in place.
+    lease census updated in place.  `warned` (optional (N,) bool, the
+    digest's advance-warning census, DESIGN.md §12) excludes warned
+    secretaries from the follower fan-out wiring so replacements leased
+    this epoch take over BEFORE the kill lands; None or all-False is
+    bit-identical to the pre-warning wiring.
     """
     site = static["site"]
     V = static["V"]
     n_sites = cfg.num_sites
     role = np.asarray(role).copy()
     alive = np.asarray(alive).copy()
+    warned = (np.zeros(role.shape, bool) if warned is None
+              else np.asarray(warned).astype(bool))
 
     def lease_slots(slot_mask, want):
         free = np.where(slot_mask & (role == DEAD))[0]
@@ -513,7 +585,8 @@ def lease_and_wire(cfg: ClusterConfig, static, role: np.ndarray,
     obs_of = np.full(role.shape, -1, np.int32)
     for s_id in range(n_sites):
         secs = [i for i in range(len(role))
-                if role[i] == SECRETARY and alive[i] and site[i] == s_id]
+                if role[i] == SECRETARY and alive[i] and not warned[i]
+                and site[i] == s_id]
         fols = [i for i in range(V)
                 if role[i] in (FOLLOWER, LEADER) and alive[i]
                 and site[i] == s_id]
@@ -576,10 +649,11 @@ class ClusterController:
         )
         return mgr.algorithm1(self.cfg, stats)
 
-    def lease(self, role, alive, want_sec: int, want_obs: int):
+    def lease(self, role, alive, want_sec: int, want_obs: int,
+              warned=None):
         return lease_and_wire(self.cfg, self.static, role, alive,
                               self.np_rng, self.predictor, self.leased,
-                              want_sec, want_obs)
+                              want_sec, want_obs, warned=warned)
 
     def end_epoch(self, rep: EpochReport) -> None:
         self.reads_prev = rep.reads_arrived
@@ -633,7 +707,10 @@ class BWRaftSim:
                  backend: str = "xla",
                  cross_shard_frac: float = 0.0, two_pc_ticks: int = 0,
                  market: str = "process", trace=None, predictor=None,
-                 arrivals=None, keypop=None):
+                 arrivals=None, keypop=None,
+                 warning_ticks: int = 0, spot_bid=None,
+                 bid_on_trace: bool = False, faults=None,
+                 fault_ticks: Optional[int] = None, bid_policy=None):
         assert mode in ("bwraft", "raft")
         assert backend in ("xla", "pallas"), backend
         self.cfg = cfg
@@ -645,12 +722,23 @@ class BWRaftSim:
                                           pad_keys=pad_keys)
         self.cfg_c = make_cfg_arrays(cfg, write_rate=write_rate,
                                      read_rate=read_rate, phi=phi,
+                                     pad_nodes=pad_nodes,
                                      pad_sites=pad_sites, pad_keys=pad_keys,
                                      spot_price_vol=spot_price_vol,
                                      cross_shard_frac=cross_shard_frac,
                                      two_pc_ticks=two_pc_ticks,
                                      market=market, trace=trace,
-                                     arrivals=arrivals, keypop=keypop)
+                                     arrivals=arrivals, keypop=keypop,
+                                     warning_ticks=warning_ticks,
+                                     spot_bid=spot_bid,
+                                     bid_on_trace=bid_on_trace,
+                                     faults=faults, fault_ticks=fault_ticks)
+        # hazard-aware bid policy (DESIGN.md §12): an object with
+        # `.update(predictor=, trace=, end_tick=, sites=)` returning the
+        # next (S,) bids — applied per epoch through `set_bid`, which is
+        # a cfg_c data swap (never recompiles)
+        self.bid_policy = bid_policy
+        self._trace = trace
         self.rng = jax.random.PRNGKey(seed)
         self.manage = manage_resources and mode == "bwraft"
         self.controller = ClusterController(cfg, self.static, seed=seed,
@@ -691,11 +779,26 @@ class BWRaftSim:
         self.cfg_c["read_curve"] = jnp.asarray(r)
         self.cfg_c["arrival_len"] = jnp.int32(alen)
 
-    def _lease(self, want_sec: int, want_obs: int) -> None:
+    def set_bid(self, bids) -> None:
+        """Swap the per-site spot bids in place — cfg_c data at a fixed
+        (S,) shape, so bid-policy updates never recompile (DESIGN.md
+        §12); the market-side twin of `set_arrivals`.  A scalar
+        broadcasts; a short vector repeats its last site (the
+        `site_price_init` padding rule)."""
+        S = int(self.cfg_c["spot_bid"].shape[0])
+        b = np.asarray(bids, np.float32).reshape(-1)
+        if b.size == 1:
+            b = np.full((S,), b[0], np.float32)
+        elif b.size < S:
+            b = np.concatenate(
+                [b, np.full((S - b.size,), b[-1], np.float32)])
+        self.cfg_c["spot_bid"] = jnp.asarray(b[:S], jnp.float32)
+
+    def _lease(self, want_sec: int, want_obs: int, warned=None) -> None:
         """Peak: score a spot-offer pool (eq. 2), MCSA-select, wire roles."""
         role, alive, sec_of, obs_of = self.controller.lease(
             np.asarray(self.state["role"]), np.asarray(self.state["alive"]),
-            want_sec, want_obs)
+            want_sec, want_obs, warned=warned)
         self.state = dict(self.state,
                           role=jnp.asarray(role),
                           alive=jnp.asarray(alive),
@@ -726,7 +829,23 @@ class BWRaftSim:
             dec = self.controller.decide(
                 rep, float(np.mean(dg["spot_price"][:self.cfg.num_sites])))
             rep.decision = dec
-            self._lease(max(dec.dk_s, 0), max(dec.dk_o, 0))
+            # re-lease BEFORE the kill lands (DESIGN.md §12): warned
+            # secretaries/observers get replacements on top of Algorithm
+            # 1's delta, and warned secretaries drop out of the wiring;
+            # with no warnings raised this is exactly the pre-§12 lease
+            warned = np.asarray(dg["warned"])
+            roles = np.asarray(dg["role"])
+            self._lease(
+                max(dec.dk_s, 0) + int(((roles == SECRETARY) &
+                                        warned).sum()),
+                max(dec.dk_o, 0) + int(((roles == OBSERVER) &
+                                        warned).sum()),
+                warned=warned)
+        if self.bid_policy is not None:
+            self.set_bid(self.bid_policy.update(
+                predictor=self.controller.predictor, trace=self._trace,
+                end_tick=(self.epoch + 1) * self.cfg.period_ticks,
+                sites=int(self.cfg_c["spot_bid"].shape[0])))
         self.controller.end_epoch(rep)
 
         self.epoch += 1

@@ -189,7 +189,13 @@ def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
         "entry_commit_t": jnp.full((L,), -1, jnp.int32),
         # spot market
         "spot_price": jnp.asarray(price0, jnp.float32),
+        # kept as a state leaf for golden-trajectory compatibility; the
+        # dynamics read cfg_c["spot_bid"] (jit-argument data) so bid
+        # policies can update per epoch without recompiling (DESIGN.md §12)
         "spot_bid": jnp.asarray(bid0, jnp.float32),
+        # advance-warning countdown (DESIGN.md §12): -1 = no warning;
+        # >= 0 = revocation signal raised, kill lands when it hits 0
+        "warn_timer": jnp.full((N,), -1, jnp.int32),
         # workload stats accumulators (reset each period by the manager)
         "reads_arrived": jnp.zeros((), jnp.int32),
         "writes_arrived": jnp.zeros((), jnp.int32),

@@ -80,6 +80,26 @@ def spot_step(state, static, cfg_c, rng):
     (`market/synthetic.export_walk_trace`) replays **bit-identically**
     through this function — the §10 replay invariant
     (`tests/test_market.py`, gated by `benchmarks/perf_market.py`).
+
+    Revocation robustness (DESIGN.md §12) rides on top, all cfg_c data
+    and RNG-free so `warn_ticks == 0` with no faults is bit-identical to
+    the frozen site-level rule (`spot_step_reference`):
+
+      * the standing bid is `cfg_c["spot_bid"]` (per-epoch policy
+        updates without recompiles); `bid_on_trace` re-derives trace
+        revocations from replayed prices vs the CURRENT bid
+      * per-node revocation columns (`node_trace` /
+        `revoke_node_trace`) replace the site broadcast when the trace
+        carries them
+      * deterministic chaos schedules (`fault_on` / `fault_trace`,
+        column `tick % fault_len`) raise the same signal on ANY node —
+        voters included (leader-kill drills)
+      * the advance-warning window: a raised revocation signal arms
+        `warn_timer` at W = `warn_ticks` and counts down while the
+        signal holds; the kill lands only when it hits 0, and a signal
+        that drops early (price dips back under the bid) is a
+        *reprieve* — the timer resets to -1 and the node resumes.  The
+        `phi` i.i.d. knob stays an unwarned immediate kill.
     """
     S = state["spot_price"].shape[0]
     r_price, r_revoke, r_fail = _rand(rng, 3)
@@ -90,11 +110,62 @@ def spot_step(state, static, cfg_c, rng):
     t = jnp.mod(state["tick"], cfg_c["trace_len"])
     price = jnp.where(use_trace, cfg_c["price_trace"][:, t], synth_price)
 
-    revoked_site = jnp.where(use_trace, cfg_c["revoke_trace"][:, t],
-                             price > state["spot_bid"])       # (S,)
+    over_bid = price > cfg_c["spot_bid"]                      # (S,)
+    revoked_site = jnp.where(use_trace & ~cfg_c["bid_on_trace"],
+                             cfg_c["revoke_trace"][:, t],
+                             over_bid)                        # (S,)
     site = jnp.asarray(static["site"])
     is_spot = ~jnp.asarray(static["is_voter"])
-    # i.i.d. failure knob phi on top of price-driven revocation
+    # per-node revocation columns, else the site signal broadcast (N,)
+    market_sig = jnp.where(cfg_c["node_trace"] & use_trace,
+                           cfg_c["revoke_node_trace"][:, t],
+                           revoked_site[site])
+    # deterministic chaos schedule: hits any node, voters included
+    tf = jnp.mod(state["tick"], cfg_c["fault_len"])
+    fault_sig = cfg_c["fault_on"] & cfg_c["fault_trace"][:, tf]
+    sig = state["alive"] & ((is_spot & market_sig) | fault_sig)
+
+    # advance-warning countdown (RNG-free; W=0 kills the tick the
+    # signal rises, exactly the pre-§12 rule)
+    timer = state["warn_timer"]
+    newly = sig & (timer < 0)
+    timer = jnp.where(sig,
+                      jnp.where(newly, cfg_c["warn_ticks"],
+                                jnp.maximum(timer - 1, 0)),
+                      -1)
+    due = sig & (timer <= 0)
+
+    # i.i.d. failure knob phi on top: immediate, no warning
+    iid_fail = jax.random.uniform(r_fail, site.shape) < cfg_c["phi"]
+    killed = state["alive"] & (due | (is_spot & iid_fail))
+    timer = jnp.where(killed, -1, timer)
+
+    alive = state["alive"] & ~killed
+    role = jnp.where(killed, DEAD, state["role"])
+    return dict(state, spot_price=price, alive=alive, role=role,
+                warn_timer=timer), killed
+
+
+def spot_step_reference(state, static, cfg_c, rng):
+    """The frozen pre-§12 site-level market step: immediate kills, no
+    warning window, no per-node columns, no chaos schedules.  Kept
+    verbatim as the reference twin — `tests/test_faults.py` pins
+    `spot_step` at `warn_ticks=0` (and no faults) bit-identical to this
+    on both market paths (DESIGN.md §12); the only delta from the
+    historical body is that the standing bid now reads from
+    `cfg_c["spot_bid"]` (same values at init, see `state.init_state`)."""
+    r_price, r_revoke, r_fail = _rand(rng, 3)
+    synth_price = market_synth.walk_price_update(
+        state["spot_price"], cfg_c["spot_price_mean"],
+        cfg_c["spot_price_vol"], r_price)
+    use_trace = cfg_c["market_trace"]
+    t = jnp.mod(state["tick"], cfg_c["trace_len"])
+    price = jnp.where(use_trace, cfg_c["price_trace"][:, t], synth_price)
+
+    revoked_site = jnp.where(use_trace, cfg_c["revoke_trace"][:, t],
+                             price > cfg_c["spot_bid"])       # (S,)
+    site = jnp.asarray(static["site"])
+    is_spot = ~jnp.asarray(static["is_voter"])
     iid_fail = jax.random.uniform(r_fail, site.shape) < cfg_c["phi"]
     killed = is_spot & state["alive"] & (revoked_site[site] | iid_fail)
 
@@ -136,8 +207,12 @@ def workload_step(state, static, cfg_c, rng):
                jnp.floor(w_before * chi)).astype(jnp.int32)
 
     N = state["role"].shape[0]
-    # read routing: spread over alive observers; overflow to followers
-    is_obs = (state["role"] == OBSERVER) & state["alive"]
+    # read routing: spread over alive observers; overflow to followers.
+    # Warned observers drain: they take no NEW reads (routing skips
+    # them, DESIGN.md §12) but `read_step` still serves their queue
+    # until the kill lands
+    is_obs = (state["role"] == OBSERVER) & state["alive"] & \
+        (state["warn_timer"] < 0)
     is_fol = ((state["role"] == FOLLOWER) | (state["role"] == LEADER)) & \
         state["alive"]
     n_obs = jnp.maximum(jnp.sum(is_obs), 0)
@@ -222,8 +297,12 @@ def leader_step(state, static, cfg_c, rng_key):
     # secretary relay wiring: follower f's batch goes via sec_of[f] if that
     # secretary is alive, else directly from the leader.
     sec = state["sec_of"]                                     # (N,)
+    # a warned secretary hands its fan-out back to the leader NOW, so
+    # no in-flight batch is stranded when the kill lands (DESIGN.md §12;
+    # `warn_timer < 0` is all-True whenever warnings are off)
     sec_alive = (sec >= 0) & state["alive"][jnp.maximum(sec, 0)] & \
-        (state["role"][jnp.maximum(sec, 0)] == SECRETARY)
+        (state["role"][jnp.maximum(sec, 0)] == SECRETARY) & \
+        (state["warn_timer"][jnp.maximum(sec, 0)] < 0)
     relay = jnp.where(sec_alive, sec, lid_c)                  # hop node
     is_target = ((state["role"] == FOLLOWER) | (state["role"] == CANDIDATE)) \
         & state["alive"] & (jnp.arange(N) != lid_c)
@@ -241,7 +320,8 @@ def leader_step(state, static, cfg_c, rng_key):
     direct = want & (relay == lid_c)
     relayed = want & (relay != lid_c)
     n_sec_msgs = jnp.sum(jnp.any(relayed) &
-                         ((state["role"] == SECRETARY) & state["alive"]))
+                         ((state["role"] == SECRETARY) & state["alive"] &
+                          (state["warn_timer"] < 0)))
     msg_budget = jnp.maximum(
         jnp.int32(static["msg_budget"]) - n_sec_msgs, 0)
     # cost of a batch scales with its payload (network/CPU bytes): this is
@@ -379,8 +459,12 @@ def follower_step(state, static, cfg_c, *, reference=False, backend="xla"):
 
     # ack back via the same relay path
     sec = state["sec_of"]
+    # a warned secretary hands its fan-out back to the leader NOW, so
+    # no in-flight batch is stranded when the kill lands (DESIGN.md §12;
+    # `warn_timer < 0` is all-True whenever warnings are off)
     sec_alive = (sec >= 0) & state["alive"][jnp.maximum(sec, 0)] & \
-        (state["role"][jnp.maximum(sec, 0)] == SECRETARY)
+        (state["role"][jnp.maximum(sec, 0)] == SECRETARY) & \
+        (state["warn_timer"][jnp.maximum(sec, 0)] < 0)
     relay = jnp.where(sec_alive, sec, lid_c)
     lat = rtt[jnp.arange(N), relay] + rtt[relay, lid_c] * (relay != lid_c)
     ack_arrive_t = jnp.where(accept | nack, tick + lat,
@@ -426,8 +510,12 @@ def commit_step(state, static, cfg_c, *, reference=False, backend="xla"):
     # ack ingestion is budgeted the same way: direct acks consume leader
     # capacity, secretary-aggregated reports are O(#secretaries)
     sec = state["sec_of"]
+    # a warned secretary hands its fan-out back to the leader NOW, so
+    # no in-flight batch is stranded when the kill lands (DESIGN.md §12;
+    # `warn_timer < 0` is all-True whenever warnings are off)
     sec_alive = (sec >= 0) & state["alive"][jnp.maximum(sec, 0)] & \
-        (state["role"][jnp.maximum(sec, 0)] == SECRETARY)
+        (state["role"][jnp.maximum(sec, 0)] == SECRETARY) & \
+        (state["warn_timer"][jnp.maximum(sec, 0)] < 0)
     direct_ack = ack_due & ~sec_alive
     rank = jnp.cumsum(direct_ack.astype(jnp.int32))
     ingest = (ack_due & sec_alive) | \

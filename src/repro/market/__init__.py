@@ -20,15 +20,22 @@ from repro.market.synthetic import (CorrelatedSiteShocks, MeanRevertingWalk,
                                     RegimeSwitchingWalk, export_walk_trace,
                                     walk_params_from_cluster,
                                     walk_price_update)
-from repro.market.calibrate import (CalibrationReport, WalkFit,
-                                    calibrate_predictor,
-                                    epoch_revocation_rates, fit_walk)
+from repro.market.calibrate import (CalibrationReport, HazardAwareBid,
+                                    WalkFit, calibrate_predictor,
+                                    epoch_revocation_rates, fit_walk,
+                                    sliding_window_rates)
+# chaos last: its runner lazily imports repro.core, which imports market
+from repro.market.chaos import (ChaosReport, FaultSchedule, kill_mask,
+                                kill_nodes, mass_kill, run_chaos,
+                                warning_then_reprieve)
 
 __all__ = [
     "MarketTrace", "available_traces", "bucket_events", "load",
     "load_aws_spot_history", "load_google_cluster_events", "resample_price",
     "CorrelatedSiteShocks", "MeanRevertingWalk", "RegimeSwitchingWalk",
     "export_walk_trace", "walk_params_from_cluster", "walk_price_update",
-    "CalibrationReport", "WalkFit", "calibrate_predictor",
-    "epoch_revocation_rates", "fit_walk",
+    "CalibrationReport", "HazardAwareBid", "WalkFit", "calibrate_predictor",
+    "epoch_revocation_rates", "fit_walk", "sliding_window_rates",
+    "ChaosReport", "FaultSchedule", "kill_mask", "kill_nodes", "mass_kill",
+    "run_chaos", "warning_then_reprieve",
 ]

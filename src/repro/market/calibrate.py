@@ -85,6 +85,77 @@ def calibrate_predictor(trace: MarketTrace, period_ticks: int, *,
     return predictor, report
 
 
+def sliding_window_rates(trace: MarketTrace, end_tick: int,
+                         window_ticks: int) -> np.ndarray:
+    """(S,) empirical revocation rates over the trailing `window_ticks`
+    ticks ending at `end_tick` (exclusive), read through the §10 time
+    wrap (``t % T``) so a recalibration window keeps sliding on runs
+    longer than the trace.  ``end_tick <= 0`` or a window at least the
+    trace length degrades to the full-trace rates — the same target
+    `calibrate_predictor` fits against."""
+    T = trace.ticks
+    if end_tick <= 0 or window_ticks >= T:
+        return trace.empirical_revocation_rates()
+    idx = np.arange(end_tick - window_ticks, end_tick) % T
+    return trace.revoked[:, idx].mean(axis=1)
+
+
+@dataclasses.dataclass(eq=False)
+class HazardAwareBid:
+    """Per-epoch hazard-aware bidding policy (DESIGN.md §12).
+
+    Maps a per-site revocation hazard to a per-site bid as a multiple
+    of the site's mean price: a calm site (hazard 0) bids
+    ``high_mult * mean`` (bid up: out-wait transient spikes), a hot
+    site (hazard >= `hazard_ref`) bids ``low_mult * mean`` (shed:
+    surrender early rather than ride the spike into an unwarned kill),
+    with linear interpolation between.  The hazard source is the
+    trailing-window trace rates (`sliding_window_rates`) when
+    `window_ticks` > 0 and a trace is at hand, else the manager's
+    `RevocationPredictor` — the same signal Algorithm 1 peeks.
+
+    Bids are *data*: `runtime.BWRaftSim`/`fleet.FleetSim` call
+    `update` once per epoch and write the result into
+    ``cfg_c["spot_bid"]``, so sweeping policies never recompiles.
+    `eq=False` keeps identity hashing for `fleet.MemberSpec`.
+    """
+    mean_price: np.ndarray            # (S,) per-site mean prices
+    low_mult: float = 1.1             # shed bid at/above hazard_ref
+    high_mult: float = 2.5            # bid-up bid at hazard 0
+    hazard_ref: float = 0.05          # hazard that pins the shed bid
+    window_ticks: int = 0             # 0: predictor; >0: trailing window
+
+    def __post_init__(self):
+        self.mean_price = np.atleast_1d(
+            np.asarray(self.mean_price, np.float64))
+
+    def bids(self, hazard: np.ndarray) -> np.ndarray:
+        """(S,) bids for (S,) hazards by the interpolation rule."""
+        frac = np.clip(np.asarray(hazard, np.float64)
+                       / max(self.hazard_ref, 1e-9), 0.0, 1.0)
+        mult = self.high_mult - frac * (self.high_mult - self.low_mult)
+        mean = self.mean_price
+        if mean.shape[0] < frac.shape[0]:       # repeat-last, like pads
+            mean = np.concatenate(
+                [mean, np.full(frac.shape[0] - mean.shape[0], mean[-1])])
+        return (mult * mean[:frac.shape[0]]).astype(np.float32)
+
+    def update(self, *, predictor=None, trace: MarketTrace = None,
+               end_tick: int = 0, sites: int = 0) -> np.ndarray:
+        """Recalibrate and return the (sites,) bid vector for the next
+        epoch.  Hazard rows tile onto sites by ``s % len`` (the site
+        round-robin rule)."""
+        if self.window_ticks > 0 and trace is not None:
+            hazard = sliding_window_rates(trace, end_tick,
+                                          self.window_ticks)
+        elif predictor is not None:
+            hazard = np.asarray(predictor.predict())
+        else:
+            hazard = np.zeros(max(sites, 1))
+        S = sites if sites > 0 else hazard.shape[0]
+        return self.bids(hazard[np.arange(S) % hazard.shape[0]])
+
+
 @dataclasses.dataclass
 class WalkFit:
     """Moment-matched walk parameters recovered from a price trace."""

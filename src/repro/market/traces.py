@@ -45,10 +45,19 @@ class MarketTrace:
     and `revoked` is (S, T) bool — True revokes (kills) every spot node
     at site s on tick t.  `eq=False` keeps identity hashing so a trace
     can ride on a frozen `fleet.MemberSpec` field.
+
+    `revoked_node` (optional, (M, T) bool) carries *per-node* revocation
+    columns (DESIGN.md §12): row m revokes only the single node it maps
+    to, not the whole site — the event-bucket resampling at machine
+    granularity instead of the site broadcast.  When present,
+    `runtime.make_cfg_arrays` fits it to the simulator's node axis
+    (`node_columns`) and `step.spot_step` reads it in place of the site
+    signal; None keeps the frozen site-level semantics.
     """
     name: str
     price: np.ndarray
     revoked: np.ndarray
+    revoked_node: np.ndarray = None         # optional (M, T) bool
 
     def __post_init__(self):
         self.price = np.asarray(self.price, np.float32)
@@ -56,6 +65,11 @@ class MarketTrace:
         assert self.price.ndim == 2, self.price.shape
         assert self.price.shape == self.revoked.shape, \
             (self.price.shape, self.revoked.shape)
+        if self.revoked_node is not None:
+            self.revoked_node = np.asarray(self.revoked_node, bool)
+            assert self.revoked_node.ndim == 2, self.revoked_node.shape
+            assert self.revoked_node.shape[1] == self.ticks, \
+                (self.revoked_node.shape, self.ticks)
 
     @property
     def sites(self) -> int:
@@ -77,7 +91,26 @@ class MarketTrace:
         s_idx = np.arange(sites) % self.sites
         t_idx = np.arange(ticks) % self.ticks
         grid = np.ix_(s_idx, t_idx)
-        return MarketTrace(self.name, self.price[grid], self.revoked[grid])
+        node = None
+        if self.revoked_node is not None:
+            m_idx = np.arange(self.revoked_node.shape[0])
+            node = self.revoked_node[np.ix_(m_idx, t_idx)]
+        return MarketTrace(self.name, self.price[grid], self.revoked[grid],
+                           node)
+
+    def node_columns(self, nodes: int, ticks: int) -> np.ndarray:
+        """Per-node revocation columns fitted to the simulator's
+        (nodes, ticks) grid (DESIGN.md §12): node n reads source row
+        ``n % M`` (round-robin, the site-tiling rule applied to
+        machines) and tick t reads source column ``t % T`` (the §10
+        time wrap — the in-step lookup shares `cfg_c["trace_len"]` with
+        the site arrays)."""
+        assert self.revoked_node is not None, \
+            f"trace {self.name!r} carries no per-node columns"
+        M = self.revoked_node.shape[0]
+        n_idx = np.arange(nodes) % M
+        t_idx = np.arange(ticks) % self.revoked_node.shape[1]
+        return self.revoked_node[np.ix_(n_idx, t_idx)]
 
     def empirical_revocation_rates(self) -> np.ndarray:
         """Per-site per-tick revocation hazard — the calibration target
@@ -157,7 +190,8 @@ def load_aws_spot_history(path, *, ticks: int = 600,
 
 def load_google_cluster_events(path, *, ticks: int = 600,
                                sites: int = 0,
-                               price_mean: float = 0.0125) -> MarketTrace:
+                               price_mean: float = 0.0125,
+                               node_rows: int = 0) -> MarketTrace:
     """Google cluster-trace task-event slice (CSV with a
     ``time_us,machine_id,event_type`` header) → MarketTrace.
 
@@ -166,7 +200,13 @@ def load_google_cluster_events(path, *, ticks: int = 600,
     (event_type 2) marks its tick revoked at the machine's site by the
     §10 bucketing rule.  The trace records preemptions, not prices, so
     the price rows are flat at `price_mean` — pair with an AWS price
-    trace or a synthetic walk when price dynamics matter."""
+    trace or a synthetic walk when price dynamics matter.
+
+    ``node_rows > 0`` additionally buckets each machine's evictions at
+    machine granularity into `revoked_node` (DESIGN.md §12): machine
+    rank m lands in row ``m % node_rows``, so a single eviction kills
+    one simulated node instead of broadcasting over its whole site —
+    the per-node fault model the warning window degrades through."""
     events = []
     machines: Dict[str, int] = {}
     with open(path, newline="") as f:
@@ -186,7 +226,15 @@ def load_google_cluster_events(path, *, ticks: int = 600,
         if site_times:
             revoked[s] = bucket_events(np.array(site_times), ticks, span)
     price = np.full((S, ticks), price_mean, np.float32)
-    return MarketTrace(Path(path).stem, price, revoked)
+    revoked_node = None
+    if node_rows > 0:
+        revoked_node = np.zeros((node_rows, ticks), bool)
+        for n in range(node_rows):
+            node_times = [t for t, m in events if m % node_rows == n]
+            if node_times:
+                revoked_node[n] = bucket_events(np.array(node_times),
+                                                ticks, span)
+    return MarketTrace(Path(path).stem, price, revoked, revoked_node)
 
 
 # --------------------------------------------------------------------- #

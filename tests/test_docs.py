@@ -57,6 +57,16 @@ def test_market_contract_is_cross_referenced():
     assert any("repro/market/" in f for f in cited_from), cited_from
 
 
+def test_fault_contract_is_cross_referenced():
+    """Same rule for the §12 revocation-hardening contract: cited from
+    the tick that runs the warning timer (`spot_step`) and from the
+    market package that builds schedules and bid policies."""
+    refs = _references()
+    cited_from = set(refs.get("12", []))
+    assert any("core/step.py" in f for f in cited_from), cited_from
+    assert any("repro/market/" in f for f in cited_from), cited_from
+
+
 def test_serving_contract_is_cross_referenced():
     """Same rule for the §11 serving surface: cited from the tick that
     consumes arrival curves and serves the read-index round

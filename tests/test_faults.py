@@ -1,0 +1,402 @@
+"""Revocation-robustness semantics (DESIGN.md §12): the W=0/static-bid
+golden gate against the frozen reference step, the advance-warning
+timer contract (sustained signal kills after exactly W ticks; an early
+drop is a reprieve), per-node trace columns killing nodes not sites,
+chaos drills replayed through the paper's safety properties, and bids
+as recompile-free cfg_c data."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fleet as fleet_mod
+from repro.core import invariants
+from repro.core import state as state_mod
+from repro.core import step as step_mod
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.fleet import FleetSim, MemberSpec
+from repro.core.runtime import BWRaftSim, make_cfg_arrays
+from repro.market import (FaultSchedule, HazardAwareBid, MarketTrace,
+                          export_walk_trace, kill_nodes, load, mass_kill,
+                          run_chaos, sliding_window_rates,
+                          warning_then_reprieve)
+
+
+def _small_cluster(name="flt", followers=(2, 2, 1), max_log=1024):
+    sites = tuple(
+        SiteConfig(f"{name}-s{i}", followers=f, rtt_intra=1,
+                   rtt_inter=6 + 2 * i, on_demand_price=0.0416,
+                   spot_price_mean=0.0125)
+        for i, f in enumerate(followers))
+    return ClusterConfig(name=name, sites=sites, max_log=max_log,
+                         key_space=256, max_secretaries=4,
+                         max_observers=8, period_ticks=60)
+
+
+def _reports_equal(a, b):
+    keys = ("reads_arrived", "writes_arrived", "reads_served",
+            "writes_committed", "killed", "n_secretaries", "n_observers",
+            "leader_changes", "no_leader_ticks", "n_warned")
+    return all(getattr(a, k) == getattr(b, k) for k in keys) \
+        and a.cost == b.cost
+
+
+# --------------------------------------------------------------------- #
+# the §12 golden gate: W=0 + static bid == the frozen reference step
+# --------------------------------------------------------------------- #
+def _drive(stepfn, cfg, cfg_c, *, ticks=80, seed=0):
+    static = state_mod.build_static(cfg)
+    state = state_mod.init_state(cfg, static)
+    rng = jax.random.PRNGKey(seed)
+    out = []
+    for t in range(ticks):
+        rng, sub = jax.random.split(rng)
+        state = dict(state, tick=jnp.int32(t))
+        state, killed = stepfn(state, static, cfg_c, sub)
+        out.append((np.asarray(state["spot_price"]).copy(),
+                    np.asarray(state["alive"]).copy(),
+                    np.asarray(state["role"]).copy(),
+                    np.asarray(killed).copy()))
+    return out
+
+
+@pytest.mark.parametrize("market", ["process", "trace"])
+def test_w0_static_bid_bit_identical_to_reference(market):
+    """At warn_ticks=0 with no chaos schedule and the init-time bid,
+    `spot_step` is bit-identical to the frozen pre-§12
+    `spot_step_reference` — prices, kills, roles, every tick, on both
+    market paths (the W=0 golden gate, DESIGN.md §12)."""
+    cfg = _small_cluster()
+    kw = {}
+    if market == "trace":
+        kw = dict(market="trace",
+                  trace=export_walk_trace(cfg, seed=4, epochs=2))
+    cfg_c = make_cfg_arrays(cfg, write_rate=8.0, read_rate=16.0,
+                            phi=0.05, **kw)
+    ref = _drive(step_mod.spot_step_reference, cfg, cfg_c, seed=9)
+    new = _drive(step_mod.spot_step, cfg, cfg_c, seed=9)
+    for t, (r, n) in enumerate(zip(ref, new)):
+        for name, a, b in zip(("price", "alive", "role", "killed"), r, n):
+            assert np.array_equal(a, b), f"tick {t}: {name} diverged"
+
+
+def test_warn_timer_stays_inert_at_w0():
+    """With W=0 the timer leaf never arms: every tick ends at -1
+    everywhere, so recording it in goldens is shape-only."""
+    cfg = _small_cluster()
+    cfg_c = make_cfg_arrays(cfg, write_rate=8.0, read_rate=16.0, phi=0.1)
+    static = state_mod.build_static(cfg)
+    state = state_mod.init_state(cfg, static)
+    rng = jax.random.PRNGKey(2)
+    for t in range(40):
+        rng, sub = jax.random.split(rng)
+        state = dict(state, tick=jnp.int32(t))
+        state, _ = step_mod.spot_step(state, static, cfg_c, sub)
+        assert (np.asarray(state["warn_timer"]) == -1).all(), t
+
+
+# --------------------------------------------------------------------- #
+# the warning contract, tick by tick
+# --------------------------------------------------------------------- #
+def _fault_cfg(cfg, faults, *, warning_ticks, ticks, phi=0.0):
+    return make_cfg_arrays(cfg, write_rate=8.0, read_rate=16.0, phi=phi,
+                           warning_ticks=warning_ticks, spot_bid=10.0,
+                           faults=faults, fault_ticks=ticks)
+
+
+def test_sustained_signal_kills_after_exactly_w_ticks():
+    """A signal that rises at tick `a` and holds kills the node at tick
+    ``a + W`` — not before, not after — with the timer counting
+    W, W-1, ..., 0 in between (DESIGN.md §12)."""
+    cfg = _small_cluster()
+    W, at, node = 3, 5, 2
+    faults = kill_nodes([node], at, n_nodes=cfg.max_nodes, ticks=40,
+                        warning_ticks=W)
+    cfg_c = _fault_cfg(cfg, faults, warning_ticks=W, ticks=40)
+    static = state_mod.build_static(cfg)
+    state = state_mod.init_state(cfg, static)
+    alive0 = np.asarray(state["alive"]).copy()
+    rng = jax.random.PRNGKey(0)
+    for t in range(40):
+        rng, sub = jax.random.split(rng)
+        state = dict(state, tick=jnp.int32(t))
+        state, killed = step_mod.spot_step(state, static, cfg_c, sub)
+        timer = int(np.asarray(state["warn_timer"])[node])
+        dead = bool(np.asarray(killed)[node])
+        if t < at:
+            assert timer == -1 and not dead, t
+        elif t < at + W:
+            assert timer == W - (t - at) and not dead, (t, timer)
+        elif t == at + W:
+            assert dead and timer == -1, (t, timer)
+        else:
+            assert not dead and not np.asarray(state["alive"])[node], t
+    others = np.arange(cfg.max_nodes) != node
+    assert np.array_equal(np.asarray(state["alive"])[others],
+                          alive0[others]), "only the drilled node dies"
+
+
+def test_warning_then_reprieve_resumes_node():
+    """A signal that drops before the window elapses is a reprieve: the
+    timer resets to -1, nothing dies, and the node is a full citizen
+    again (DESIGN.md §12)."""
+    cfg = _small_cluster()
+    W, at, node = 5, 4, 1
+    faults = warning_then_reprieve([node], at, n_nodes=cfg.max_nodes,
+                                   ticks=30, warning_ticks=W)   # hold = W
+    cfg_c = _fault_cfg(cfg, faults, warning_ticks=W, ticks=30)
+    static = state_mod.build_static(cfg)
+    state = state_mod.init_state(cfg, static)
+    rng = jax.random.PRNGKey(1)
+    timers = []
+    for t in range(30):
+        rng, sub = jax.random.split(rng)
+        state = dict(state, tick=jnp.int32(t))
+        state, killed = step_mod.spot_step(state, static, cfg_c, sub)
+        assert not np.asarray(killed).any(), t
+        timers.append(int(np.asarray(state["warn_timer"])[node]))
+    # armed at `at` with W, counts down while the signal holds (W ticks),
+    # resets to -1 the tick it drops — one tick short of landing
+    assert timers[at:at + W] == [W, W - 1, W - 2, W - 3, W - 4]
+    assert timers[at + W] == -1 and np.asarray(state["alive"])[node]
+
+
+def test_fault_schedule_hits_voters_market_does_not():
+    """Chaos columns kill ANY node — voters included (that's the
+    leader-kill drill) — while market revocations only ever touch spot
+    nodes."""
+    cfg = _small_cluster()
+    voter = 0
+    assert bool(state_mod.build_static(cfg)["is_voter"][voter])
+    faults = kill_nodes([voter], 2, n_nodes=cfg.max_nodes, ticks=10)
+    cfg_c = _fault_cfg(cfg, faults, warning_ticks=0, ticks=10)
+    static = state_mod.build_static(cfg)
+    state = state_mod.init_state(cfg, static)
+    rng = jax.random.PRNGKey(3)
+    for t in range(4):
+        rng, sub = jax.random.split(rng)
+        state = dict(state, tick=jnp.int32(t))
+        state, killed = step_mod.spot_step(state, static, cfg_c, sub)
+    assert not np.asarray(state["alive"])[voter], "drill must kill voter"
+    # market path (no faults): price far above every bid kills all spot
+    # nodes but never a voter (everyone forced alive first — init only
+    # wakes voters)
+    cfg_c = make_cfg_arrays(cfg, write_rate=8.0, read_rate=16.0,
+                            spot_bid=1e-6)
+    state = state_mod.init_state(cfg, static)
+    state = dict(state, alive=jnp.ones(cfg.max_nodes, bool))
+    state, killed = step_mod.spot_step(dict(state, tick=jnp.int32(0)),
+                                       static, cfg_c,
+                                       jax.random.PRNGKey(4))
+    is_voter = np.asarray(static["is_voter"])
+    assert np.asarray(killed)[~is_voter].all()
+    assert not np.asarray(killed)[is_voter].any()
+
+
+def test_per_node_trace_kills_single_node_not_site():
+    """A trace carrying `revoked_node` columns kills exactly the mapped
+    node; the site-level broadcast (which would take every spot node at
+    the site) is replaced, not added to (DESIGN.md §12)."""
+    cfg = _small_cluster()
+    static = state_mod.build_static(cfg)
+    N = cfg.max_nodes
+    spot = np.where(~np.asarray(static["is_voter"]))[0]
+    target = int(spot[0])
+    T = 8
+    node_cols = np.zeros((N, T), bool)
+    node_cols[target, 0] = True
+    # site columns scream "revoke everything" — they must be ignored
+    trace = MarketTrace("unit", np.full((cfg.num_sites, T), 0.0125,
+                                        np.float32),
+                        np.ones((cfg.num_sites, T), bool), node_cols)
+    cfg_c = make_cfg_arrays(cfg, write_rate=8.0, read_rate=16.0,
+                            market="trace", trace=trace)
+    state = state_mod.init_state(cfg, static)
+    state = dict(state, alive=jnp.ones(N, bool))
+    state, killed = step_mod.spot_step(dict(state, tick=jnp.int32(0)),
+                                       static, cfg_c,
+                                       jax.random.PRNGKey(0))
+    killed = np.asarray(killed)
+    assert killed[target] and killed.sum() == 1, np.where(killed)
+
+
+def test_node_columns_fit_rules():
+    """`MarketTrace.node_columns` tiles node rows round-robin (n % M)
+    and wraps time (t % T) — the §10 rules at machine granularity —
+    while `FaultSchedule.fit_to` pads False: drills are one-shot."""
+    node = np.array([[1, 0, 1], [0, 1, 0]], bool)
+    tr = MarketTrace("u", np.ones((1, 3), np.float32),
+                     np.zeros((1, 3), bool), node)
+    out = tr.node_columns(5, 7)
+    assert out.shape == (5, 7)
+    assert np.array_equal(out[2], out[0]) and np.array_equal(out[3], out[1])
+    assert np.array_equal(out[0, 3:6], out[0, :3])
+    fs = FaultSchedule("u", node)
+    fit = fs.fit_to(5, 7)
+    assert fit.shape == (5, 7) and fit.sum() == node.sum()
+    assert not fit[2:].any() and not fit[:, 3:].any()
+    assert np.array_equal(fs.fit_to(1, 2), node[:1, :2])
+
+
+# --------------------------------------------------------------------- #
+# chaos drills through the paper's safety properties
+# --------------------------------------------------------------------- #
+def test_leader_kill_recovery_and_safety():
+    """Killing node 0 (a voter) mid-run forces an election; the cluster
+    recovers a leader and every §3 safety property holds over the full
+    per-tick trace (run_chaos raises otherwise)."""
+    from repro.configs.bwraft_kv import CONFIG
+    faults = kill_nodes([0], 20, n_nodes=CONFIG.max_nodes, ticks=120)
+    rep = run_chaos(CONFIG, faults, ticks=120, seed=0, spot_bid=10.0)
+    assert rep.first_kill_tick == 20 and rep.safety_error is None
+    assert rep.recovery_ticks > 0, "the kill must cost leaderless ticks"
+    assert rep.recovery_ticks < 120, "a leader must come back"
+
+
+def test_mass_kill_election_safety_with_warning():
+    """Correlated mass revocation (every node but a voter quorum, warned
+    W=3) stays safe: one leader per term, logs match, committed entries
+    never change."""
+    from repro.configs.bwraft_kv import CONFIG
+    faults = mass_kill(30, n_nodes=CONFIG.max_nodes, ticks=120,
+                       spare=(0, 1, 2), warning_ticks=3)
+    rep = run_chaos(CONFIG, faults, warning_ticks=3, ticks=120, seed=0,
+                    spot_bid=10.0)
+    assert rep.safety_error is None
+    assert rep.first_kill_tick == 33, "kill lands W ticks after signal"
+    assert rep.alive_end >= 3, "the spared quorum survives"
+
+
+def test_phi_one_mass_kill_election_safety(sim_trace_factory):
+    """phi=1 — every spot node dies every tick, unwarned — and election
+    safety + log matching still hold (the §12 chaos harness replays the
+    same invariants the hypothesis suite checks)."""
+    trace, _ = sim_trace_factory(seed=5, ticks=180, every=1, phi=1.0)
+    invariants.check_all(trace)
+
+
+# --------------------------------------------------------------------- #
+# warned degradation keeps the pipeline moving
+# --------------------------------------------------------------------- #
+def test_permanently_warned_cluster_still_commits():
+    """A schedule that warns every spot node forever (signal up for the
+    whole run, W longer than the run) kills nothing — and the §12
+    degradation rules (leader reclaims fan-out, observers drain) keep
+    writes committing and reads serving."""
+    cfg = _small_cluster()
+    static = state_mod.build_static(cfg)
+    is_spot = ~np.asarray(static["is_voter"])
+    T = 2 * cfg.period_ticks
+    kill = np.zeros((cfg.max_nodes, T), bool)
+    kill[is_spot, 10:] = True
+    sim = BWRaftSim(cfg, write_rate=8.0, read_rate=16.0, seed=0,
+                    warning_ticks=10 * T, spot_bid=10.0,
+                    faults=FaultSchedule("warn-all", kill), fault_ticks=T)
+    reports = sim.run(2)
+    assert reports[-1].n_warned > 0, "census must see the warned nodes"
+    assert reports[-1].killed == 0, "W > run length never lands a kill"
+    assert sum(r.writes_committed for r in reports) > 0
+    assert sum(r.reads_served for r in reports) > 0
+    # the census is warned ⊆ spot ∧ alive (a node leased at the final
+    # epoch boundary hasn't ticked yet, so it may be alive but unarmed)
+    warned = np.asarray(sim.state["warn_timer"]) >= 0
+    assert warned.any()
+    assert (warned <= (is_spot & np.asarray(sim.state["alive"]))).all()
+
+
+def test_fleet_member_with_faults_equals_solo():
+    """The whole §12 surface — warning window, chaos schedule, bid
+    override — lands identically through the fleet batch and the solo
+    runtime: a fleet member's reports (n_warned included) equal the
+    solo run bit for bit."""
+    cfg = _small_cluster("feq", followers=(1, 1), max_log=256)
+    T = 2 * cfg.period_ticks
+    # the signal spans the epoch-1 boundary (ticks 57..61, W=4: kill
+    # lands at 61) so the end-of-epoch census catches the warned node
+    faults = kill_nodes([1], 57, n_nodes=cfg.max_nodes, ticks=T,
+                        warning_ticks=4)
+    spec = dict(write_rate=6.0, read_rate=12.0, seed=3,
+                manage_resources=False, prelease=(1, 2),
+                warning_ticks=4)
+    fleet = FleetSim([
+        MemberSpec(cfg=cfg, **spec, faults=faults),
+        MemberSpec(cfg=cfg, write_rate=9.0, read_rate=12.0, seed=7,
+                   manage_resources=False, prelease=(1, 2))])
+    fleet_reports = fleet.run(2)
+    solo = BWRaftSim(cfg, **spec, faults=faults, fault_ticks=T)
+    for e, (a, b) in enumerate(zip(fleet_reports[0], solo.run(2))):
+        assert _reports_equal(a, b), f"epoch {e}"
+    assert any(r.n_warned for r in fleet_reports[0]), \
+        "the drill must produce a nonzero warning census"
+
+
+# --------------------------------------------------------------------- #
+# bids are data: per-epoch policy updates, zero recompiles
+# --------------------------------------------------------------------- #
+def test_set_bid_shapes_and_effect():
+    cfg = _small_cluster()
+    sim = BWRaftSim(cfg, write_rate=8.0, read_rate=16.0, seed=0)
+    S = cfg.num_sites
+    sim.set_bid(0.5)
+    assert np.asarray(sim.cfg_c["spot_bid"]).tolist() == [0.5] * S
+    sim.set_bid([0.1, 0.2])                      # short: repeat-last pad
+    assert np.asarray(sim.cfg_c["spot_bid"]).tolist() == \
+        pytest.approx([0.1, 0.2] + [0.2] * (S - 2))
+    sim.set_bid(np.arange(S + 3, dtype=np.float32))   # long: truncate
+    assert np.asarray(sim.cfg_c["spot_bid"]).tolist() == \
+        pytest.approx(list(range(S)))
+
+
+def test_bid_policy_updates_never_recompile():
+    """A managed fleet running `HazardAwareBid` per-epoch updates (bids
+    re-derived against the replayed AWS trace via `bid_on_trace`)
+    compiles exactly ONE tick program — bids are cfg_c data, not part
+    of the program (the §12 satellite fix: the bid used to be frozen at
+    `site_price_init` forever)."""
+    cfg = _small_cluster("bids", followers=(1, 1), max_log=256)
+    epochs = 3
+    trace = load("aws-us-east", ticks=epochs * cfg.period_ticks,
+                 ).fit_to(cfg.num_sites, epochs * cfg.period_ticks)
+    mean = trace.price.mean(axis=1)
+
+    def member(seed, policy):
+        return MemberSpec(
+            cfg=cfg, write_rate=6.0, read_rate=12.0, seed=seed,
+            market="trace", trace=trace, bid_on_trace=True,
+            bid_policy=policy)
+    before = fleet_mod.total_compile_count()
+    # disjoint mult ranges so the two policies MUST land on different
+    # bids whatever the hazard (AWS hazard saturates hazard_ref)
+    fleet = FleetSim([
+        member(0, HazardAwareBid(mean_price=mean)),
+        member(1, HazardAwareBid(mean_price=mean, low_mult=0.6,
+                                 high_mult=0.9,
+                                 window_ticks=cfg.period_ticks))])
+    fleet.run(epochs)
+    assert fleet_mod.total_compile_count() - before == 1, \
+        "per-epoch bid updates must not recompile"
+    bids = np.asarray(fleet._cfg_c["spot_bid"])
+    assert not np.array_equal(bids[0], bids[1]), \
+        "different policies must land different bids"
+
+
+def test_sliding_window_rates_pinned():
+    revoked = np.array([[1, 1, 0, 0, 1, 0]], bool)
+    tr = MarketTrace("u", np.ones((1, 6), np.float32), revoked)
+    assert sliding_window_rates(tr, 4, 2).tolist() == [0.0]   # cols 2,3
+    assert sliding_window_rates(tr, 5, 4).tolist() == [0.5]   # cols 1..4
+    # the window slides through the time wrap: end 1, width 3 -> 4,5,0
+    assert sliding_window_rates(tr, 1, 3).tolist() == \
+        pytest.approx([2 / 3])
+    # degenerate windows degrade to the full-trace empirical rates
+    assert sliding_window_rates(tr, 0, 2).tolist() == [0.5]
+    assert sliding_window_rates(tr, 4, 6).tolist() == [0.5]
+
+
+def test_hazard_aware_bid_interpolates():
+    pol = HazardAwareBid(mean_price=[1.0], low_mult=1.1, high_mult=2.5,
+                         hazard_ref=0.1)
+    assert pol.bids([0.0]).tolist() == pytest.approx([2.5])   # calm: up
+    assert pol.bids([0.1]).tolist() == pytest.approx([1.1])   # hot: shed
+    assert pol.bids([0.5]).tolist() == pytest.approx([1.1])   # clamped
+    assert pol.bids([0.05]).tolist() == pytest.approx([1.8])  # midpoint

@@ -158,16 +158,15 @@ def test_mixed_market_fleet_one_program():
 # --------------------------------------------------------------------- #
 # spot_step edge cases — pinned on BOTH market paths
 # --------------------------------------------------------------------- #
-def _edge_state(S=2, price=(0.0125, 0.0125), bid=(0.01875, 0.01875),
-                tick=0):
+def _edge_state(S=2, price=(0.0125, 0.0125), tick=0):
     # three nodes per site: voter, spot-alive, spot-dead
     N = 3 * S
     role = jnp.asarray([0, 3, 5] * S, jnp.int32)
     alive = jnp.asarray([True, True, False] * S)
     return {
         "spot_price": jnp.asarray(price, jnp.float32),
-        "spot_bid": jnp.asarray(bid, jnp.float32),
         "alive": alive, "role": role,
+        "warn_timer": jnp.full((N,), -1, jnp.int32),
         "tick": jnp.int32(tick),
     }, {
         "site": np.repeat(np.arange(S), 3).astype(np.int32),
@@ -175,13 +174,25 @@ def _edge_state(S=2, price=(0.0125, 0.0125), bid=(0.01875, 0.01875),
     }
 
 
-def _edge_cfg(S=2, *, mean=0.0125, vol=0.0, phi=0.0, price_trace=None,
-              revoke_trace=None):
+def _edge_cfg(S=2, *, mean=0.0125, vol=0.0, phi=0.0, bid=None,
+              warn_ticks=0, price_trace=None, revoke_trace=None,
+              node_trace=None, fault_trace=None, bid_on_trace=False):
     use_trace = price_trace is not None
     if price_trace is None:
         price_trace = np.zeros((S, 1), np.float32)
     if revoke_trace is None:
         revoke_trace = np.zeros_like(np.asarray(price_trace), bool)
+    if bid is None:
+        bid = np.full((S,), mean * 1.5, np.float32)
+    N = 3 * S                       # matches _edge_state's node layout
+    if node_trace is None:
+        node_cols = np.zeros((N, np.asarray(price_trace).shape[1]), bool)
+    else:
+        node_cols = np.asarray(node_trace, bool)
+    if fault_trace is None:
+        fault_cols = np.zeros((N, 1), bool)
+    else:
+        fault_cols = np.asarray(fault_trace, bool)
     return {
         "spot_price_mean": jnp.full((S,), mean, jnp.float32),
         "spot_price_vol": jnp.float32(vol),
@@ -190,6 +201,14 @@ def _edge_cfg(S=2, *, mean=0.0125, vol=0.0, phi=0.0, price_trace=None,
         "price_trace": jnp.asarray(price_trace, jnp.float32),
         "revoke_trace": jnp.asarray(revoke_trace, bool),
         "trace_len": jnp.int32(np.asarray(price_trace).shape[1]),
+        "spot_bid": jnp.asarray(bid, jnp.float32),
+        "warn_ticks": jnp.int32(warn_ticks),
+        "bid_on_trace": jnp.asarray(bool(bid_on_trace)),
+        "node_trace": jnp.asarray(node_trace is not None),
+        "revoke_node_trace": jnp.asarray(node_cols, bool),
+        "fault_on": jnp.asarray(fault_trace is not None),
+        "fault_trace": jnp.asarray(fault_cols, bool),
+        "fault_len": jnp.int32(fault_cols.shape[1]),
     }
 
 
@@ -200,8 +219,8 @@ def test_spot_bid_boundary_both_paths():
     above = float(np.nextafter(np.float32(bid), np.float32(np.inf)))
     # synthetic: vol=0 and price already at the mean => new price == mean
     for mean, expect_kill in ((bid, False), (above, True)):
-        st, static = _edge_state(price=(mean, mean), bid=(bid, bid))
-        cfg_c = _edge_cfg(mean=mean, vol=0.0)
+        st, static = _edge_state(price=(mean, mean))
+        cfg_c = _edge_cfg(mean=mean, vol=0.0, bid=(bid, bid))
         out, killed = step_mod.spot_step(st, static, cfg_c,
                                          jax.random.PRNGKey(0))
         assert bool(np.asarray(killed).any()) == expect_kill, mean
@@ -209,8 +228,9 @@ def test_spot_bid_boundary_both_paths():
     for price, expect_kill in ((bid, False), (above, True)):
         tr_price = np.full((2, 4), price, np.float32)
         tr_rev = tr_price > bid                     # the §10 bid rule
-        st, static = _edge_state(bid=(bid, bid))
-        cfg_c = _edge_cfg(price_trace=tr_price, revoke_trace=tr_rev)
+        st, static = _edge_state()
+        cfg_c = _edge_cfg(bid=(bid, bid), price_trace=tr_price,
+                          revoke_trace=tr_rev)
         out, killed = step_mod.spot_step(st, static, cfg_c,
                                          jax.random.PRNGKey(0))
         assert bool(np.asarray(killed).any()) == expect_kill, price
@@ -268,8 +288,8 @@ def test_trace_lookup_wraps_modulo():
     uses the member's OWN period even when the array was widened to a
     fleet-shared width."""
     tr = np.asarray([[1.0, 2.0, 3.0]], np.float32)
-    st, static = _edge_state(S=1, price=(1.0,), bid=(9.0,), tick=5)
-    cfg_c = _edge_cfg(S=1, price_trace=tr)
+    st, static = _edge_state(S=1, price=(1.0,), tick=5)
+    cfg_c = _edge_cfg(S=1, bid=(9.0,), price_trace=tr)
     out, _ = step_mod.spot_step(st, static, cfg_c, jax.random.PRNGKey(0))
     assert float(np.asarray(out["spot_price"])[0]) == 3.0   # 5 % 3 == 2
     # widened to width 5 next to a longer neighbor: trace_len stays 3,
