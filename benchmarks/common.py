@@ -53,7 +53,8 @@ def tick_ms(ticks: float) -> float:
 def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
                  shards=2, group_id=0, market="process",
                  trace=None, arrivals=None, keypop=None,
-                 warning_ticks=0, bid_policy=None, bid_on_trace=False
+                 warning_ticks=0, bid_policy=None, bid_on_trace=False,
+                 n_observers=0, staleness_bound=16, ae_interval=4
                  ) -> List[MemberSpec]:
     """Fleet members for one (bwraft, raft, multiraft-shards) comparison
     point: 2 + `shards` members, batched into whatever FleetSim they join.
@@ -69,13 +70,20 @@ def system_specs(cfg, *, write_rate, read_rate, seed=0, phi=0.0,
     `shard_workload`-divided intensity.  `warning_ticks`/`bid_policy`/
     `bid_on_trace` (DESIGN.md §12) harden the BW-Raft member's spot
     consumption — advance-warned degradation and per-epoch hazard-aware
-    bids; the on-demand baselines have no spot exposure to harden."""
+    bids; the on-demand baselines have no spot exposure to harden.
+    `n_observers`/`staleness_bound`/`ae_interval` attach the digest-tier
+    observer rack (DESIGN.md §13) to the BW-Raft member only — the
+    scale-out claim under comparison is BW-Raft's; the dense baselines
+    stay dense."""
     return ([MemberSpec(cfg=cfg, mode="bwraft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed,
                         market=market, trace=trace,
                         arrivals=arrivals, keypop=keypop,
                         warning_ticks=warning_ticks, bid_policy=bid_policy,
-                        bid_on_trace=bid_on_trace),
+                        bid_on_trace=bid_on_trace,
+                        n_observers=n_observers,
+                        staleness_bound=staleness_bound,
+                        ae_interval=ae_interval),
              MemberSpec(cfg=cfg, mode="raft", write_rate=write_rate,
                         read_rate=read_rate, phi=phi, seed=seed,
                         arrivals=arrivals, keypop=keypop)]
@@ -98,7 +106,8 @@ def collect_systems(fleet, lo, *, group_id):
 
 def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
                 shards=2, market="process", trace=None,
-                warning_ticks=0, bid_policy=None, bid_on_trace=False):
+                warning_ticks=0, bid_policy=None, bid_on_trace=False,
+                n_observers=0, staleness_bound=16, ae_interval=4):
     """(bwraft, raft, multiraft) steady-state reports.
 
     Fleet path: all three systems (2 + `shards` members) advance in one
@@ -113,7 +122,10 @@ def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
                        read_rate=read_rate, phi=phi, seed=seed,
                        market=market, trace=trace,
                        warning_ticks=warning_ticks, bid_policy=bid_policy,
-                       bid_on_trace=bid_on_trace)
+                       bid_on_trace=bid_on_trace,
+                       n_observers=n_observers,
+                       staleness_bound=staleness_bound,
+                       ae_interval=ae_interval)
         og = BWRaftSim(cfg, mode="raft", write_rate=write_rate,
                        read_rate=read_rate, phi=phi, seed=seed)
         mr = multiraft.MultiRaftSim(cfg, shards=shards,
@@ -126,7 +138,10 @@ def run_systems(cfg, *, write_rate, read_rate, epochs, seed=0, phi=0.0,
                          seed=seed, phi=phi, shards=shards, group_id=0,
                          market=market, trace=trace,
                          warning_ticks=warning_ticks, bid_policy=bid_policy,
-                         bid_on_trace=bid_on_trace)
+                         bid_on_trace=bid_on_trace,
+                         n_observers=n_observers,
+                         staleness_bound=staleness_bound,
+                         ae_interval=ae_interval)
     fleet = FleetSim(specs)
     fleet.run(epochs)
     return collect_systems(fleet, 0, group_id=0)

@@ -1,17 +1,32 @@
 """Fig. 7: performance + cost as the workload scales out.
 
 The whole grid — every follower count x {bwraft, original, multiraft
-shards} — runs as ONE FleetSim: the smaller clusters are padded to the
-largest topology's static shape, so the entire figure costs a single jit
-compile (DESIGN.md §7) instead of one per (load, system) point.  Each
-point's Multi-Raft shards form one device-coupled group (distinct
-`group_id` per point, ragged shard counts included — DESIGN.md §9), so
-the baseline's 2PC tail latencies are measured in the same dispatch.
+shards, bwraft + a 50X digest-observer rack} — runs as ONE FleetSim:
+the smaller clusters are padded to the largest topology's static shape,
+so the entire figure costs a single jit compile (DESIGN.md §7) instead
+of one per (load, system) point.  Each point's Multi-Raft shards form
+one device-coupled group (distinct `group_id` per point, ragged shard
+counts included — DESIGN.md §9), so the baseline's 2PC tail latencies
+are measured in the same dispatch.  The `bwraft_obs` member carries
+`n_observers = 50 x voters` digest-tier slots (DESIGN.md §13) — the
+paper's 50X node claim rendered as a figure row, in the same program.
 """
 from benchmarks import common
 from benchmarks.common import (collect_systems, run_systems,
                                scaled_cluster, system_specs)
-from repro.core.fleet import FleetSim
+from repro.core.fleet import FleetSim, MemberSpec
+from repro.core.runtime import BWRaftSim
+
+
+def _voters(cfg) -> int:
+    return sum(1 + s.followers for s in cfg.sites)
+
+
+def _obs_spec(cfg, w: float, seed: int = 0) -> MemberSpec:
+    return MemberSpec(cfg=cfg, mode="bwraft", write_rate=w,
+                      read_rate=w * 3, seed=seed,
+                      n_observers=50 * _voters(cfg),
+                      staleness_bound=12, ae_interval=4)
 
 
 def run(quick: bool = True):
@@ -27,21 +42,40 @@ def run(quick: bool = True):
             spans.append((len(specs), gid))
             specs += system_specs(cfg, write_rate=w, read_rate=w * 3,
                                   shards=shards, group_id=gid)
+        obs_lo = len(specs)
+        specs += [_obs_spec(cfg, w) for f, w, cfg, shards in points]
         fleet = FleetSim(specs)
         fleet.run(epochs)
         results = [collect_systems(fleet, lo, group_id=gid)
                    for lo, gid in spans]
+        obs_results = [fleet.members[obs_lo + i].reports[-1]
+                       for i in range(len(points))]
     else:
         results = [run_systems(cfg, write_rate=w, read_rate=w * 3,
                                epochs=epochs, shards=shards)
                    for f, w, cfg, shards in points]
+        obs_results = []
+        for f, w, cfg, shards in points:
+            spec = _obs_spec(cfg, w)
+            obs_results.append(BWRaftSim(
+                cfg, mode="bwraft", write_rate=w, read_rate=w * 3,
+                n_observers=spec.n_observers,
+                staleness_bound=spec.staleness_bound,
+                ae_interval=spec.ae_interval).run(epochs)[-1])
 
-    for (f_per_site, w, cfg, shards), (bw, og, mr) in zip(points, results):
+    for (f_per_site, w, cfg, shards), (bw, og, mr), ob in zip(
+            points, results, obs_results):
         scale = 4 * f_per_site
         for name, r in [("bwraft", bw), ("original", og),
-                        ("multiraft", mr)]:
+                        ("multiraft", mr), ("bwraft_obs", ob)]:
             rows.append((f"fig7.goodput.F{scale}.{name}", r.goodput,
                          "ops_per_epoch"))
             rows.append((f"fig7.cost.F{scale}.{name}", r.cost * 1e6,
                          "usd_per_epoch_x1e6"))
+        rows.append((f"fig7.obs_reads.F{scale}", ob.obs_reads_served,
+                     "reads_per_epoch"))
+        rows.append((f"fig7.obs_stale_p99.F{scale}", ob.obs_stale_p99,
+                     "ticks"))
+        rows.append((f"fig7.n_obs.F{scale}", 50 * _voters(cfg),
+                     "digest_observers"))
     return rows

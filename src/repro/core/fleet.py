@@ -74,14 +74,17 @@ from repro.core.state import pytree_nbytes
 # program; per-node capacities from state.build_static)
 _SHARED_STATIC_KEYS = ("work_capacity", "msg_budget", "entries_per_msg",
                        "max_ship", "max_apply")
-# per-member static arrays that become jit arguments (batch axis 0)
-_BATCHED_STATIC_KEYS = ("site", "is_voter", "rtt", "majority")
+# per-member static arrays that become jit arguments (batch axis 0);
+# site_rtt/dobs_site are the digest-tier addressing tables (DESIGN.md §13)
+_BATCHED_STATIC_KEYS = ("site", "is_voter", "rtt", "majority",
+                        "site_rtt", "dobs_site")
 
 # spec fields sweepable via FleetSim.from_sweep axes
 _SWEEP_AXES = ("mode", "write_rate", "read_rate", "phi", "seed",
                "manage_resources", "spot_price_vol", "budget_per_period",
                "market", "trace", "arrivals", "keypop",
-               "warning_ticks", "bid_policy", "faults", "bid_on_trace")
+               "warning_ticks", "bid_policy", "faults", "bid_on_trace",
+               "n_observers", "staleness_bound", "ae_interval")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +145,14 @@ class MemberSpec:
     bid_on_trace: bool = False
     bid_policy: Optional[object] = None     # market.calibrate.HazardAwareBid
     faults: Optional[object] = None         # market.chaos.FaultSchedule
+    # digest-tier observer count (DESIGN.md §13): sparse (O,)-shaped
+    # slots that sync via anti-entropy under a staleness bound — a sweep
+    # axis; members pad to the fleet-wide max O, so mixed observer
+    # counts stay one compiled program.  `staleness_bound`/`ae_interval`
+    # are cfg_c data (swaps never recompile).
+    n_observers: int = 0
+    staleness_bound: int = 16
+    ae_interval: int = 4
 
     @property
     def manage(self) -> bool:
@@ -156,6 +167,7 @@ class FleetShapes:
     L: int   # log window, padded
     K: int   # KV key space, padded
     T: int   # period_ticks (must be equal across members)
+    O: int = 0   # digest-tier observer slots, padded (DESIGN.md §13)
 
 
 # (kind, shapes, shared scalars[, E]) -> CountingJit
@@ -309,12 +321,15 @@ class _Member:
             "pad_sites": shapes.S - cfg.num_sites,
             "pad_log": shapes.L - cfg.max_log,
             "pad_keys": shapes.K - cfg.key_space,
+            "pad_observers": shapes.O - spec.n_observers,
         }
         assert all(p >= 0 for p in self.pads.values()), \
             f"member {cfg.name} exceeds fleet shapes {shapes}"
         self.static = state_mod.build_static(
             cfg, pad_nodes=self.pads["pad_nodes"],
-            pad_sites=self.pads["pad_sites"])
+            pad_sites=self.pads["pad_sites"],
+            n_obs_digest=spec.n_observers,
+            pad_obs=self.pads["pad_observers"])
         self.state0 = state_mod.init_state(
             cfg, self.static, pad_log=self.pads["pad_log"],
             pad_keys=self.pads["pad_keys"])
@@ -337,7 +352,11 @@ class _Member:
             keypop=spec.keypop,
             warning_ticks=spec.warning_ticks,
             bid_on_trace=spec.bid_on_trace,
-            faults=spec.faults, fault_ticks=fault_ticks)
+            faults=spec.faults, fault_ticks=fault_ticks,
+            n_observers=spec.n_observers,
+            pad_observers=self.pads["pad_observers"],
+            staleness_bound=spec.staleness_bound,
+            ae_interval=spec.ae_interval)
         self.rng = jax.random.PRNGKey(spec.seed)
         self.controller = ClusterController(cfg, self.static,
                                             seed=spec.seed)
@@ -391,6 +410,7 @@ class FleetSim:
             L=max(s.cfg.max_log for s in specs),
             K=max(s.cfg.key_space for s in specs),
             T=periods.pop(),
+            O=max(s.n_observers for s in specs),
         )
         # fleet-shared market-trace width (DESIGN.md §10): every member's
         # cfg_c trace arrays stack to (B, S, Tt); shorter traces time-wrap

@@ -94,7 +94,9 @@ def two_pc_penalty(cfg: ClusterConfig) -> int:
 def shard_specs(cfg: ClusterConfig, *, shards: int = 2,
                 write_rate: float = 8.0, read_rate: float = 32.0,
                 cross_shard_frac: float = 0.1, seed: int = 0,
-                group_id: int = 0, arrivals=None, keypop=None) -> List:
+                group_id: int = 0, arrivals=None, keypop=None,
+                n_observers: int = 0, staleness_bound: int = 16,
+                ae_interval: int = 4) -> List:
     """The batched entry point: this Multi-Raft instance as `shards`
     fleet members (mode="raft", unmanaged) for a single vmapped program.
 
@@ -109,7 +111,11 @@ def shard_specs(cfg: ClusterConfig, *, shards: int = 2,
     the shards with the same `shard_workload` factors as the scalar
     rates — each shard replays the plan's shape at 1/shards intensity,
     writes inflated by (1 + chi) for the duplicated prepares
-    (DESIGN.md §11); `keypop` passes through to every shard."""
+    (DESIGN.md §11); `keypop` passes through to every shard.
+
+    `n_observers`/`staleness_bound`/`ae_interval` attach a digest-tier
+    observer rack (DESIGN.md §13) to *each* shard member — shards scale
+    their read fan-out independently, so the tier rides per-member."""
     from repro.core.fleet import MemberSpec  # deferred: fleet imports runtime
     w_eff, r_eff = shard_workload(write_rate, read_rate, shards,
                                   cross_shard_frac)
@@ -121,6 +127,9 @@ def shard_specs(cfg: ClusterConfig, *, shards: int = 2,
                        read_rate=r_eff, seed=seed + 17 * i,
                        manage_resources=False,
                        arrivals=shard_plan, keypop=keypop,
+                       n_observers=n_observers,
+                       staleness_bound=staleness_bound,
+                       ae_interval=ae_interval,
                        group_id=group_id,
                        shards_per_group=shards if grouped else 1,
                        cross_shard_frac=cross_shard_frac if grouped
@@ -230,7 +239,9 @@ class MultiRaftSim:
     def __init__(self, cfg: ClusterConfig, *, shards: int = 2,
                  write_rate: float = 8.0, read_rate: float = 32.0,
                  cross_shard_frac: float = 0.1, seed: int = 0,
-                 engine: str = "fleet", backend: str = "xla"):
+                 engine: str = "fleet", backend: str = "xla",
+                 n_observers: int = 0, staleness_bound: int = 16,
+                 ae_interval: int = 4):
         assert engine in ("fleet", "sequential"), engine
         self.cfg = cfg
         self.shards = shards
@@ -244,7 +255,9 @@ class MultiRaftSim:
                 shard_specs(cfg, shards=shards, write_rate=write_rate,
                             read_rate=read_rate,
                             cross_shard_frac=cross_shard_frac, seed=seed,
-                            group_id=0),
+                            group_id=0, n_observers=n_observers,
+                            staleness_bound=staleness_bound,
+                            ae_interval=ae_interval),
                 backend=backend)
             self.sims: List[BWRaftSim] = []
             return
@@ -253,7 +266,10 @@ class MultiRaftSim:
         self.sims = [
             BWRaftSim(cfg, mode="raft", write_rate=w_eff,
                       read_rate=r_eff, seed=seed + 17 * i,
-                      manage_resources=False, backend=backend)
+                      manage_resources=False, backend=backend,
+                      n_observers=n_observers,
+                      staleness_bound=staleness_bound,
+                      ae_interval=ae_interval)
             for i in range(shards)
         ]
         self.np_rng = np.random.default_rng(seed + 999)

@@ -93,7 +93,10 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
                     keypop=None,
                     warning_ticks: int = 0, spot_bid=None,
                     bid_on_trace: bool = False,
-                    faults=None, fault_ticks: Optional[int] = None) -> Dict:
+                    faults=None, fault_ticks: Optional[int] = None,
+                    n_observers: int = 0, pad_observers: int = 0,
+                    staleness_bound: int = 16, ae_interval: int = 4,
+                    ae_phase=None) -> Dict:
     """Per-epoch dynamic knobs — all jit arguments, never baked into the
     compiled program.  `pad_sites` repeats the last site's prices so padded
     clusters share one (S,) shape (DESIGN.md §7).  `cross_shard_frac` /
@@ -135,7 +138,17 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
     `fault_trace` jit-argument array (widened to a fleet-shared
     `fault_ticks` with inert False padding; the in-step lookup wraps at
     the array width, so build schedules covering the full run for
-    one-shot semantics)."""
+    one-shot semantics).
+
+    Digest-tier observer knobs (DESIGN.md §13), all cfg_c data so
+    staleness/cadence sweeps at one O never recompile:
+    `staleness_bound` is the read-freshness contract in ticks (a digest
+    observer serves iff `tick - last_sync <= bound`); `ae_interval` is
+    the anti-entropy round period; `ae_phase` is the per-observer `(O,)`
+    phase schedule (default `arange(O)` — maximally staggered cohorts;
+    `O = n_observers + pad_observers` must match the shapes from
+    `state.build_static`).  The bound must fit the unit-bin staleness
+    histogram (`period_ticks + HIST_TAIL`)."""
     assert 0.0 <= cross_shard_frac <= 1.0, cross_shard_frac
     assert 0 <= two_pc_ticks <= HIST_TAIL, \
         f"two_pc_ticks={two_pc_ticks} exceeds the histogram tail " \
@@ -195,6 +208,16 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         key_cdf = keypop.materialize(cfg.key_space, pad_keys)
     else:
         key_cdf = workload_arrivals.uniform_key_cdf(cfg.key_space, pad_keys)
+    O = n_observers + pad_observers
+    assert 0 <= staleness_bound <= cfg.period_ticks + HIST_TAIL, \
+        f"staleness_bound={staleness_bound} exceeds the unit-bin " \
+        f"staleness histogram ({cfg.period_ticks + HIST_TAIL})"
+    assert ae_interval >= 1, ae_interval
+    if ae_phase is None:
+        phase = np.arange(O, dtype=np.int32)
+    else:
+        phase = np.asarray(ae_phase, np.int32).reshape(-1)
+        assert phase.size == O, (phase.size, O)
     od = [s.on_demand_price for s in cfg.sites]
     sp = [s.spot_price_mean for s in cfg.sites]
     od = od + [od[-1]] * pad_sites
@@ -234,6 +257,10 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         "network_cost_coef": jnp.float32(0.0005),
         "cross_frac": jnp.float32(cross_shard_frac),
         "two_pc_ticks": jnp.int32(two_pc_ticks),
+        # digest-tier observer contract (DESIGN.md §13)
+        "staleness_bound": jnp.int32(staleness_bound),
+        "ae_interval": jnp.int32(ae_interval),
+        "ae_phase": jnp.asarray(phase, jnp.int32),
     }
 
 
@@ -262,6 +289,13 @@ class EpochReport:
     # end-of-epoch warning census: nodes alive with a raised advance-
     # warning bit (DESIGN.md §12) — 0 whenever warning_ticks == 0
     n_warned: int = 0
+    # digest-tier observer census (DESIGN.md §13) — all zero/NaN when
+    # the tier is off (O == 0)
+    obs_reads_served: int = 0
+    obs_rerouted: int = 0
+    obs_stale_p95: float = float("nan")
+    obs_stale_p99: float = float("nan")
+    n_obs_digest: int = 0
     decision: Optional[mgr.PeekDecision] = None
 
     @property
@@ -285,11 +319,17 @@ def build_report(epoch: int, st: Dict, ms: Dict,
     lat = (com_t[done] - sub_t[done]).astype(float)
     reads_served = int(st["reads_served"])
     _, _, read_p95, read_p99 = hist_stats(st["read_lat_hist"])
+    _, _, stale_p95, stale_p99 = hist_stats(st["obs_stale_hist"])
     return EpochReport(
         read_lat_p95=read_p95,
         read_lat_p99=read_p99,
         n_warned=int((np.asarray(st["alive"]) &
                       (np.asarray(st["warn_timer"]) >= 0)).sum()),
+        obs_reads_served=int(st["obs_reads_served"]),
+        obs_rerouted=int(st["obs_rerouted"]),
+        obs_stale_p95=stale_p95,
+        obs_stale_p99=stale_p99,
+        n_obs_digest=int(np.asarray(st["dobs_alive"]).sum()),
         epoch=epoch,
         reads_arrived=int(st["reads_arrived"]),
         writes_arrived=int(st["writes_arrived"]),
@@ -395,6 +435,14 @@ def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int,
         "warned": alive & (state["warn_timer"] >= 0),
         "n_warned": jnp.sum(alive &
                             (state["warn_timer"] >= 0)).astype(jnp.int32),
+        # digest-tier observer census (DESIGN.md §13): the staleness
+        # histogram + three scalars — present (zeros) at O == 0 so the
+        # digest pytree structure is uniform across fleet members.  The
+        # (O,) leaves themselves never cross the boundary.
+        "obs_stale_hist": state["obs_stale_hist"],
+        "obs_reads_served": state["obs_reads_served"],
+        "obs_rerouted": state["obs_rerouted"],
+        "n_obs_digest": jnp.sum(state["dobs_alive"]).astype(jnp.int32),
     }
 
 
@@ -471,10 +519,16 @@ def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
     n_done, lat_mean, lat_p95, lat_p99 = hist_stats(dg["write_lat_hist"])
     reads_served = int(dg["reads_served"])
     _, _, read_p95, read_p99 = hist_stats(dg["read_lat_hist"])
+    _, _, stale_p95, stale_p99 = hist_stats(dg["obs_stale_hist"])
     return EpochReport(
         read_lat_p95=read_p95,
         read_lat_p99=read_p99,
         n_warned=int(dg["n_warned"]),
+        obs_reads_served=int(dg["obs_reads_served"]),
+        obs_rerouted=int(dg["obs_rerouted"]),
+        obs_stale_p95=stale_p95,
+        obs_stale_p99=stale_p99,
+        n_obs_digest=int(dg["n_obs_digest"]),
         epoch=epoch,
         reads_arrived=int(dg["reads_arrived"]),
         writes_arrived=int(dg["writes_arrived"]),
@@ -498,15 +552,33 @@ def compact_state(state: Dict) -> Dict:
     """Epoch-boundary log compaction (state machines keep the data).
 
     Shape-generic — written with zeros_like/full_like only, so it works on
-    a single cluster ((N, L) leaves) and on a batched fleet ((B, N, L))."""
+    a single cluster ((N, L) leaves) and on a batched fleet ((B, N, L)).
+
+    Digest tier (DESIGN.md §13): the log window the digests fingerprint
+    resets here, so `dobs_applied`/`dobs_digest` reset with it; and the
+    epoch boundary is the in-graph re-lease point for the tier — digest
+    observers are stateless and cheap, so every enabled slot comes back
+    alive (`dobs_alive = dobs_enabled`) with its warning cleared, the
+    sparse twin of the host-side `lease_and_wire`.  The last sync tick is
+    kept: a revived slot stays stale (reroutes reads) until its first
+    anti-entropy round lands."""
     return dict(
         state,
+        dobs_applied=jnp.zeros_like(state["dobs_applied"]),
+        dobs_term=jnp.zeros_like(state["dobs_term"]),
+        dobs_digest=jnp.zeros_like(state["dobs_digest"]),
+        dobs_alive=state["dobs_enabled"],
+        dobs_warn=jnp.full_like(state["dobs_warn"], -1),
+        obs_reads_served=jnp.zeros_like(state["obs_reads_served"]),
+        obs_rerouted=jnp.zeros_like(state["obs_rerouted"]),
+        obs_stale_hist=jnp.zeros_like(state["obs_stale_hist"]),
         log_term=jnp.zeros_like(state["log_term"]),
         log_key=jnp.zeros_like(state["log_key"]),
         log_val=jnp.zeros_like(state["log_val"]),
         log_len=jnp.zeros_like(state["log_len"]),
         commit_len=jnp.zeros_like(state["commit_len"]),
         applied_len=jnp.zeros_like(state["applied_len"]),
+        applied_digest=jnp.zeros_like(state["applied_digest"]),
         match_len=jnp.zeros_like(state["match_len"]),
         app_arrive_t=jnp.full_like(state["app_arrive_t"], -1),
         ack_arrive_t=jnp.full_like(state["ack_arrive_t"], -1),
@@ -662,7 +734,7 @@ class ClusterController:
 _EPOCH_CACHE: Dict = {}
 
 
-def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0),
+def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0, 0, 0),
                   backend: str = "xla"):
     """One jitted epoch function per (cluster config, padding, backend) —
     cfg_c values are jit *arguments* (rate sweeps re-use the compiled
@@ -710,14 +782,19 @@ class BWRaftSim:
                  arrivals=None, keypop=None,
                  warning_ticks: int = 0, spot_bid=None,
                  bid_on_trace: bool = False, faults=None,
-                 fault_ticks: Optional[int] = None, bid_policy=None):
+                 fault_ticks: Optional[int] = None, bid_policy=None,
+                 n_observers: int = 0, pad_observers: int = 0,
+                 staleness_bound: int = 16, ae_interval: int = 4,
+                 ae_phase=None):
         assert mode in ("bwraft", "raft")
         assert backend in ("xla", "pallas"), backend
         self.cfg = cfg
         self.mode = mode
         self.backend = backend
         self.static = state_mod.build_static(cfg, pad_nodes=pad_nodes,
-                                             pad_sites=pad_sites)
+                                             pad_sites=pad_sites,
+                                             n_obs_digest=n_observers,
+                                             pad_obs=pad_observers)
         self.state = state_mod.init_state(cfg, self.static, pad_log=pad_log,
                                           pad_keys=pad_keys)
         self.cfg_c = make_cfg_arrays(cfg, write_rate=write_rate,
@@ -732,7 +809,12 @@ class BWRaftSim:
                                      warning_ticks=warning_ticks,
                                      spot_bid=spot_bid,
                                      bid_on_trace=bid_on_trace,
-                                     faults=faults, fault_ticks=fault_ticks)
+                                     faults=faults, fault_ticks=fault_ticks,
+                                     n_observers=n_observers,
+                                     pad_observers=pad_observers,
+                                     staleness_bound=staleness_bound,
+                                     ae_interval=ae_interval,
+                                     ae_phase=ae_phase)
         # hazard-aware bid policy (DESIGN.md §12): an object with
         # `.update(predictor=, trace=, end_tick=, sites=)` returning the
         # next (S,) bids — applied per epoch through `set_bid`, which is
@@ -751,7 +833,8 @@ class BWRaftSim:
         self.last_digest: Optional[Dict] = None
 
         self._epoch_fn = _epoch_fn_for(
-            cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys),
+            cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys,
+                               n_observers, pad_observers),
             backend=backend)
         if prelease is not None:
             # fixed-role mode: wire a static secretary/observer complement

@@ -46,6 +46,46 @@ NONE = jnp.int32(-1)
 # one layout, one recovery routine (`runtime.hist_stats`).
 HIST_TAIL = 64
 
+# position-keyed entry mix constants for the rolling applied-prefix digest
+# (DESIGN.md §13): each applied entry contributes
+# `mix(pos, key, val)` and the node digest is the XOR of the mixes of its
+# applied prefix.  XOR is commutative, so the fold is order-free to
+# *compute*, but because the position is mixed in, two digests are equal
+# iff the underlying (pos, key, val) prefixes are equal (up to the
+# astronomically unlikely XOR collision) — prefix-equality semantics with
+# O(1) per-entry update cost.  Odd multiplicative constants from the
+# splitmix/murmur family; uint32 wraparound is the hash.
+_MIX_POS = 0x9E3779B1
+_MIX_KEY = 0x85EBCA77
+_MIX_VAL = 0xC2B2AE3D
+
+
+def entry_mix(pos, key, val, xp=jnp):
+    """uint32 mix of one log entry at position `pos` (DESIGN.md §13).
+    `xp` selects the array namespace so tests can recompute digests in
+    numpy bit-identically to the in-graph fold."""
+    u = lambda x: xp.asarray(x).astype(xp.uint32)
+    return ((u(pos) + xp.uint32(1)) * xp.uint32(_MIX_POS)
+            ^ (u(key) + xp.uint32(1)) * xp.uint32(_MIX_KEY)
+            ^ (u(val) + xp.uint32(1)) * xp.uint32(_MIX_VAL))
+
+
+def prefix_digest(keys, vals, upto, xp=jnp):
+    """Digest of the applied prefix `[0, upto)` of one log row — the
+    reference (recompute-from-scratch) form of the rolling digest that
+    `step.apply_step` maintains incrementally (DESIGN.md §13).  Works on
+    numpy or jnp rows; `tests/test_observers.py` pins the incremental
+    chain against this."""
+    keys = xp.asarray(keys)
+    pos = xp.arange(keys.shape[0])
+    mixes = entry_mix(pos, keys, vals, xp=xp)
+    take = pos < xp.asarray(upto)
+    zero = xp.zeros((), xp.uint32)
+    return xp.bitwise_xor.reduce(xp.where(take, mixes, zero)) \
+        if xp is np else \
+        jax.lax.reduce(xp.where(take, mixes, zero), zero,
+                       jnp.bitwise_xor, (0,))
+
 
 def hist_bins(cfg: ClusterConfig) -> int:
     """Latency-histogram width for this cluster: unit bins covering
@@ -55,13 +95,22 @@ def hist_bins(cfg: ClusterConfig) -> int:
 
 
 def build_static(cfg: ClusterConfig, *, pad_nodes: int = 0,
-                 pad_sites: int = 0) -> Dict[str, np.ndarray]:
+                 pad_sites: int = 0, n_obs_digest: int = 0,
+                 pad_obs: int = 0) -> Dict[str, np.ndarray]:
     """Static per-node tables (site, voter mask, rtt matrix, capacities).
 
     `pad_nodes` appends that many inert node slots (not voters, not
     leasable, forever DEAD); `pad_sites` widens only the price arrays
     downstream (`S` here) — padded slots still map to *real* sites so the
     RTT matrix stays meaningful.
+
+    `n_obs_digest` provisions that many *digest-tier* observer slots
+    (DESIGN.md §13): unlike the dense node slots above, a digest observer
+    carries no `(L,)` log row — only a handful of `(O,)` scalars — so `O`
+    can run into the thousands without touching the dense shapes.
+    `pad_obs` appends inert digest slots (never enabled) so members with
+    different observer counts can share one fleet shape, exactly like
+    `pad_nodes`.
     """
     V = cfg.num_voters
     MS, MO = cfg.max_secretaries, cfg.max_observers
@@ -92,12 +141,39 @@ def build_static(cfg: ClusterConfig, *, pad_nodes: int = 0,
             else:
                 rtt[a, b] = (cfg.sites[sa].rtt_inter
                              + cfg.sites[sb].rtt_inter) // 2
+
+    # site-pair RTT matrix (S, S): the digest tier is addressed by SITE,
+    # not node id (there is no per-observer row in `rtt` — that matrix is
+    # O(N^2) and the whole point of the tier is that O >> N), so read
+    # latency for digest observers looks up `site_rtt[obs_site, x]`
+    # (DESIGN.md §13).  Padded sites repeat the last real site, matching
+    # `site_price_init`.
+    S = cfg.num_sites + pad_sites
+    site_of = [min(s, cfg.num_sites - 1) for s in range(S)]
+    site_rtt = np.zeros((S, S), np.int32)
+    for a in range(S):
+        for b in range(S):
+            sa, sb = site_of[a], site_of[b]
+            if sa == sb:
+                site_rtt[a, b] = cfg.sites[sa].rtt_intra
+            else:
+                site_rtt[a, b] = (cfg.sites[sa].rtt_inter
+                                  + cfg.sites[sb].rtt_inter) // 2
+
+    # digest-tier observer placement: round-robin over the real sites
+    # (padded digest slots included — they are masked dead, the site id
+    # just keeps the gather in range)
+    O = n_obs_digest + pad_obs
+    dobs_site = (np.arange(O, dtype=np.int32) % cfg.num_sites
+                 if O else np.zeros((0,), np.int32))
     return {
         "site": site, "is_voter": is_voter,
         "is_secretary_slot": is_secretary_slot,
         "is_observer_slot": is_observer_slot,
-        "rtt": rtt, "N": N, "V": V,
-        "S": cfg.num_sites + pad_sites,
+        "rtt": rtt, "site_rtt": site_rtt,
+        "dobs_site": dobs_site, "O": O, "O_live": n_obs_digest,
+        "N": N, "V": V,
+        "S": S,
         "majority": V // 2 + 1,
         "work_capacity": 8,       # reads a node can serve per tick
         "msg_budget": 16,         # fan-out msg-units a node sends per tick
@@ -212,8 +288,65 @@ def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
         "read_lat_max": jnp.zeros((), jnp.float32),
         "read_lat_hist": z(hist_bins(cfg)),
         "cost_accrued": jnp.zeros((), jnp.float32),
+        # rolling applied-prefix digest per dense node (DESIGN.md §13):
+        # XOR of `entry_mix` over the applied prefix, updated
+        # incrementally by `step.apply_step`.  Maintained unconditionally
+        # (it is RNG-free and O-independent) so the digest tier can
+        # adopt it without the voters knowing observers exist.
+        "applied_digest": jnp.zeros((N,), jnp.uint32),
     }
+    st.update(_digest_tier_init(cfg, static))
     return st
+
+
+def _digest_tier_init(cfg: ClusterConfig, static) -> Dict[str, jnp.ndarray]:
+    """Digest-tier observer leaves, leading axis O (DESIGN.md §13).  A
+    digest observer holds no log row — just an applied index, a term, the
+    applied-prefix digest, its last sync tick, a warning timer, and a read
+    queue — so O scales into the thousands at ~28 bytes per slot.  All
+    leaves exist (length 0) even when the tier is off, keeping the pytree
+    structure uniform across members of one fleet."""
+    O = int(static.get("O", 0))
+    O_live = int(static.get("O_live", 0))
+    V = static["V"]
+    dobs_site = np.asarray(static.get("dobs_site", np.zeros((0,), np.int32)))
+    site = np.asarray(static["site"])
+    # wiring: each enabled digest observer follows a voter at its own
+    # site, round-robin within the site (fallback: round-robin over all
+    # voters if a site hosts none).  Recorded as a state leaf like
+    # `obs_of`, so an epoch-boundary re-wire stays possible in-graph.
+    dobs_fol = np.full((O,), -1, np.int32)
+    taken: Dict[int, int] = {}
+    for o in range(O_live):
+        d = int(dobs_site[o])
+        voters = [v for v in range(V) if site[v] == d]
+        if voters:
+            k = taken.get(d, 0)
+            dobs_fol[o] = voters[k % len(voters)]
+            taken[d] = k + 1
+        else:
+            dobs_fol[o] = o % V
+    enabled = np.arange(O) < O_live
+    z = lambda *sh: jnp.zeros(sh, jnp.int32)
+    return {
+        "dobs_enabled": jnp.asarray(enabled),
+        "dobs_alive": jnp.asarray(enabled),
+        "dobs_fol": jnp.asarray(dobs_fol),
+        "dobs_applied": z(O),
+        "dobs_term": z(O),
+        "dobs_digest": jnp.zeros((O,), jnp.uint32),
+        "dobs_synced_t": z(O),
+        # advance-warning countdown, digest-tier twin of `warn_timer`
+        # (DESIGN.md §12/§13): -1 = no warning
+        "dobs_warn": jnp.full((O,), -1, jnp.int32),
+        "dobs_read_queue": z(O),
+        # per-epoch digest-tier serving census (reset by compaction)
+        "obs_reads_served": jnp.zeros((), jnp.int32),
+        "obs_rerouted": jnp.zeros((), jnp.int32),
+        # unit-bin staleness histogram over served digest-tier reads:
+        # same width/recovery as the latency histograms (DESIGN.md §7.1)
+        "obs_stale_hist": z(hist_bins(cfg)),
+    }
 
 
 def leader_id(state, static):

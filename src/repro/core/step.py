@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.state import (CANDIDATE, DEAD, FOLLOWER, LEADER, OBSERVER,
-                              SECRETARY, leader_id)
+                              SECRETARY, entry_mix, leader_id)
 from repro.kernels.raft_tick import ops as rt_ops
 from repro.market import synthetic as market_synth
 
@@ -142,8 +142,37 @@ def spot_step(state, static, cfg_c, rng):
 
     alive = state["alive"] & ~killed
     role = jnp.where(killed, DEAD, state["role"])
-    return dict(state, spot_price=price, alive=alive, role=role,
-                warn_timer=timer), killed
+    state = dict(state, spot_price=price, alive=alive, role=role,
+                 warn_timer=timer)
+
+    # digest-tier observers (DESIGN.md §13) are spot instances too: the
+    # site revocation signal, the §12 warning window, and the phi knob
+    # all apply, addressed by `static["dobs_site"]`.  Per-node trace
+    # columns and chaos fault schedules stay dense-only (they are
+    # node-indexed).  The phi draw uses a FRESH fold of r_fail so the
+    # dense streams above are untouched; the whole block vanishes at
+    # O == 0 (python guard — epoch programs compile per static shape),
+    # which is what keeps digest-off trajectories bit-identical to the
+    # pre-§13 golden fixtures.  Minimal unit-test states omit the
+    # digest leaves entirely — treat absence as O == 0.
+    O = state["dobs_alive"].shape[0] if "dobs_alive" in state else 0
+    if O:
+        dsite = jnp.asarray(static["dobs_site"])
+        sig_d = state["dobs_alive"] & revoked_site[dsite]
+        timer_d = state["dobs_warn"]
+        newly_d = sig_d & (timer_d < 0)
+        timer_d = jnp.where(sig_d,
+                            jnp.where(newly_d, cfg_c["warn_ticks"],
+                                      jnp.maximum(timer_d - 1, 0)),
+                            -1)
+        due_d = sig_d & (timer_d <= 0)
+        iid_d = jax.random.uniform(jax.random.fold_in(r_fail, 1),
+                                   (O,)) < cfg_c["phi"]
+        killed_d = state["dobs_alive"] & (due_d | iid_d)
+        timer_d = jnp.where(killed_d, -1, timer_d)
+        state = dict(state, dobs_alive=state["dobs_alive"] & ~killed_d,
+                     dobs_warn=timer_d)
+    return state, killed
 
 
 def spot_step_reference(state, static, cfg_c, rng):
@@ -218,17 +247,41 @@ def workload_step(state, static, cfg_c, rng):
     n_obs = jnp.maximum(jnp.sum(is_obs), 0)
     n_fol = jnp.maximum(jnp.sum(is_fol), 1)
     cap = jnp.int32(static["work_capacity"])
+    # digest-tier observers (DESIGN.md §13) join the observer pool:
+    # routing treats a digest slot exactly like a dense observer slot
+    # (same 90% offload ceiling, same per-slot split), and the same §12
+    # drain rule skips warned slots.  At O == 0 `pool` is literally
+    # `n_obs` (python guard), so pre-§13 routing is bit-identical.
+    O = state["dobs_alive"].shape[0] if "dobs_alive" in state else 0
+    if O:
+        is_dobs = state["dobs_alive"] & (state["dobs_warn"] < 0)
+        pool = n_obs + jnp.sum(is_dobs)
+    else:
+        pool = n_obs
     # offload up to 90% of reads, but never beyond observer service capacity
     # (headroom x2 absorbs bursts; the rest goes to followers)
-    obs_share = jnp.where(n_obs > 0,
-                          jnp.minimum((n_reads * 9) // 10, n_obs * cap),
+    obs_share = jnp.where(pool > 0,
+                          jnp.minimum((n_reads * 9) // 10, pool * cap),
                           0)
     fol_share = n_reads - obs_share
-    per_obs = jnp.where(is_obs, obs_share // jnp.maximum(n_obs, 1), 0)
+    extra = {}
+    per_obs = jnp.where(is_obs, obs_share // jnp.maximum(pool, 1), 0)
+    if O:
+        # dense observers keep the exact O == 0 floor rule above (so a
+        # member padded with never-enabled digest slots routes
+        # bit-identically to its unpadded twin — the fleet/sequential
+        # A/B invariant); the floored remainder, which the O == 0 rule
+        # drops, is spread by rank over the digest slots instead — the
+        # tier absorbs it
+        base = obs_share // jnp.maximum(pool, 1)
+        rem = obs_share - base * jnp.maximum(pool, 1)
+        r_dobs = jnp.cumsum(is_dobs.astype(jnp.int32)) - 1
+        extra["dobs_read_queue"] = state["dobs_read_queue"] + \
+            jnp.where(is_dobs, base + (r_dobs < rem), 0)
     per_fol = jnp.where(is_fol, fol_share // n_fol, 0)
     read_queue = state["read_queue"] + per_obs + per_fol
 
-    return dict(state,
+    return dict(state, **extra,
                 read_queue=read_queue,
                 write_pending=state["write_pending"] + n_writes,
                 reads_arrived=state["reads_arrived"] + n_reads,
@@ -621,7 +674,19 @@ def apply_step(state, static, cfg_c, *, reference=False, backend="xla"):
         kv = state["kv"].at[jnp.where(keep, rows, N),
                             jnp.where(keep, keys, K)].set(vals, mode="drop")
     applied = base + jnp.maximum(todo, 0)
-    return dict(state, kv=kv, applied_len=applied)
+    # rolling applied-prefix digest (DESIGN.md §13): XOR in the mix of
+    # every entry applied this tick.  Shared by all three formulations
+    # (it is model semantics, not a formulation), RNG-free, and
+    # independent of the digest-tier width O.
+    out = dict(state, kv=kv, applied_len=applied)
+    if "applied_digest" in state:      # minimal unit-test states omit it
+        contrib = jnp.where(valid, entry_mix(idx_c, keys, vals),
+                            jnp.uint32(0))                    # (N, A)
+        digest = state["applied_digest"]
+        for a in range(A):
+            digest = digest ^ contrib[:, a]
+        out["applied_digest"] = digest
+    return out
 
 
 def observer_sync_step(state, static, cfg_c):
@@ -642,8 +707,66 @@ def observer_sync_step(state, static, cfg_c):
     lt = jnp.where(sync[:, None], state["log_term"][fol], state["log_term"])
     lk = jnp.where(sync[:, None], state["log_key"][fol], state["log_key"])
     lv = jnp.where(sync[:, None], state["log_val"][fol], state["log_val"])
+    # the applied-prefix digest travels with the applied state it
+    # fingerprints (DESIGN.md §13), so the prefix-mirror claim above is
+    # checkable: observer digest == follower digest at the same applied
+    dg = jnp.where(sync, state["applied_digest"][fol],
+                   state["applied_digest"])
     return dict(state, applied_len=applied, commit_len=commit,
-                log_len=log_len, kv=kv, log_term=lt, log_key=lk, log_val=lv)
+                log_len=log_len, kv=kv, log_term=lt, log_key=lk, log_val=lv,
+                applied_digest=dg)
+
+
+def anti_entropy_step(state, static, cfg_c):
+    """Batched anti-entropy rounds for the digest-tier observers
+    (DESIGN.md §13; the sparse scale-out twin of `observer_sync_step`).
+
+    A digest observer `o` syncs on ticks where
+    `(tick + ae_phase[o]) % ae_interval == 0` — `ae_interval` and the
+    `(O,)` phase schedule ride in cfg_c as jit-argument data, so gossip
+    cadences sweep without recompiling (the §10 trace rule).  On a due
+    round the observer adopts its source's `(applied_len, term,
+    applied_digest)` triple — a few scalars per observer, never a log
+    row, which is what lets O run 50X past the dense node count.  The
+    adopt is monotone (an observer never regresses its applied index,
+    e.g. when failing over to a less-caught-up voter), but the sync
+    *timestamp* still advances on any completed round: freshness bounds
+    time-since-contact, and the observer's own state is at least as new
+    as the source's.  Source = the wired follower (`dobs_fol`), falling
+    back in-graph to the first alive voter when the follower is down.
+    No RNG is drawn; at O == 0 this is a python no-op."""
+    O = state["dobs_alive"].shape[0] if "dobs_alive" in state else 0
+    if O == 0:
+        return state
+    N = state["role"].shape[0]
+    tick = state["tick"]
+    is_voter = jnp.asarray(static["is_voter"])
+    fol = state["dobs_fol"]
+    fol_c = jnp.clip(fol, 0, N - 1)
+    fol_ok = (fol >= 0) & state["alive"][fol_c] & is_voter[fol_c]
+    alive_voter = is_voter & state["alive"]
+    any_voter = jnp.any(alive_voter)
+    fallback = jnp.argmax(alive_voter)
+    eff = jnp.where(fol_ok, fol_c, fallback)
+    interval = jnp.maximum(cfg_c["ae_interval"], 1)
+    due = state["dobs_alive"] & (fol_ok | any_voter) & \
+        (jnp.mod(tick + cfg_c["ae_phase"], interval) == 0)
+    src_applied = state["applied_len"][eff]
+    adopt = due & (src_applied >= state["dobs_applied"])
+    applied = jnp.where(adopt, src_applied, state["dobs_applied"])
+    term = jnp.where(adopt, state["term"][eff], state["dobs_term"])
+    digest = jnp.where(adopt, state["applied_digest"][eff],
+                       state["dobs_digest"])
+    # the adopted state ages by the transfer hop (site-pair RTT): a sync
+    # from the observer's own site costs rtt_intra, a cross-site
+    # fallback costs the inter-site trip — so a remote fallback is
+    # honestly staler and reroutes sooner under a tight bound
+    hop = jnp.asarray(static["site_rtt"])[
+        jnp.asarray(static["dobs_site"]),
+        jnp.asarray(static["site"])[eff]]
+    synced = jnp.where(due, tick - hop, state["dobs_synced_t"])
+    return dict(state, dobs_applied=applied, dobs_term=term,
+                dobs_digest=digest, dobs_synced_t=synced)
 
 
 def read_step(state, static, cfg_c):
@@ -658,10 +781,23 @@ def read_step(state, static, cfg_c):
     unit-bin `read_lat_hist` — the read-side twin of the write
     histogram, same `period_ticks + 1 + HIST_TAIL` layout (DESIGN.md
     §7.1/§11), so `runtime.hist_stats` recovers read p95/p99 exactly.
-    Returns `(state, (served, lat))` — the per-node raw sample this tick,
-    consumed by the tick metrics for the numpy-recomputation pin test
-    (`tests/test_serving.py`)."""
+    Digest-tier observers (DESIGN.md §13) serve under a *bounded
+    staleness* contract instead: a digest slot serves its queue iff
+    `tick - dobs_synced_t <= cfg_c["staleness_bound"]` — the anti-entropy
+    round amortizes the readindex fence across the whole cohort, so a
+    served digest read pays queue wait + unit service only, no per-read
+    fence trip.  Each served request's staleness lands in the unit-bin
+    `obs_stale_hist` (so staleness p99 is exact, and <= the bound by
+    construction); a slot that is behind the bound (or dead/warned with
+    a residual queue) reroutes to its follower's queue, counted in
+    `obs_rerouted`.
+
+    Returns `(state, (served, lat, obs_served, obs_stale))` — per-node
+    and per-digest-slot raw samples this tick, consumed by the tick
+    metrics for the numpy-recomputation pin tests
+    (`tests/test_serving.py`, `tests/test_observers.py`)."""
     N = state["role"].shape[0]
+    tick = state["tick"]
     lid = leader_id(state, static)
     lid_c = jnp.maximum(lid, 0)
     rtt = jnp.asarray(static["rtt"])
@@ -698,12 +834,58 @@ def read_step(state, static, cfg_c):
     bins = jnp.clip(lat, 0, H - 1)
     read_hist = state["read_lat_hist"].at[
         jnp.where(served > 0, bins, H)].add(served, mode="drop")
-    state = dict(state, read_queue=read_queue,
-                 reads_served=state["reads_served"] + jnp.sum(served),
+
+    # --- digest-tier serving (DESIGN.md §13; python no-op at O == 0) ----
+    O = state["dobs_alive"].shape[0] if "dobs_alive" in state else 0
+    extra = {}
+    obs_served = jnp.zeros((O,), jnp.int32)
+    obs_stale = jnp.zeros((O,), jnp.int32)
+    if O:
+        q = state["dobs_read_queue"]
+        stale = tick - state["dobs_synced_t"]
+        can_d = state["dobs_alive"] & \
+            (stale <= cfg_c["staleness_bound"])
+        obs_served = jnp.where(can_d, jnp.minimum(q, cap), 0)
+        reroute_d = jnp.where(~can_d, q, 0)
+        # failover target = same source rule as `anti_entropy_step`
+        is_voter = jnp.asarray(static["is_voter"])
+        fold = state["dobs_fol"]
+        fold_c = jnp.clip(fold, 0, N - 1)
+        fol_ok = (fold >= 0) & state["alive"][fold_c] & is_voter[fold_c]
+        eff = jnp.where(fol_ok, fold_c,
+                        jnp.argmax(is_voter & state["alive"]))
+        read_queue = read_queue.at[
+            jnp.where(reroute_d > 0, eff, N)].add(reroute_d, mode="drop")
+        # latency: queue wait + unit service, served at the observer's
+        # own site — the fence is amortized by the anti-entropy round
+        wait_d = q // jnp.maximum(cap, 1)
+        lat_d = wait_d + 1
+        lat_sum = lat_sum + jnp.sum(jnp.where(
+            obs_served > 0, lat_d.astype(jnp.float32) * obs_served, 0.0))
+        lat_max = jnp.maximum(lat_max, jnp.max(jnp.where(
+            obs_served > 0, lat_d.astype(jnp.float32), 0.0)))
+        read_hist = read_hist.at[
+            jnp.where(obs_served > 0, jnp.clip(lat_d, 0, H - 1), H)
+        ].add(obs_served, mode="drop")
+        obs_stale = jnp.where(obs_served > 0, stale, 0)
+        extra = dict(
+            dobs_read_queue=q - obs_served - reroute_d,
+            obs_stale_hist=state["obs_stale_hist"].at[
+                jnp.where(obs_served > 0, jnp.clip(stale, 0, H - 1), H)
+            ].add(obs_served, mode="drop"),
+            obs_reads_served=state["obs_reads_served"] +
+            jnp.sum(obs_served),
+            obs_rerouted=state["obs_rerouted"] + jnp.sum(reroute_d))
+
+    total_served = jnp.sum(served)
+    if O:
+        total_served = total_served + jnp.sum(obs_served)
+    state = dict(state, **extra, read_queue=read_queue,
+                 reads_served=state["reads_served"] + total_served,
                  read_lat_sum=state["read_lat_sum"] + lat_sum,
                  read_lat_max=jnp.maximum(state["read_lat_max"], lat_max),
                  read_lat_hist=read_hist)
-    return state, (served, lat)
+    return state, (served, lat, obs_served, obs_stale)
 
 
 def election_step(state, static, cfg_c, rng):
@@ -811,17 +993,27 @@ def election_step(state, static, cfg_c, rng):
 
 
 def cost_step(state, static, cfg_c):
-    """Accrue $ cost: on-demand voters + alive spot nodes (eq. 1)."""
+    """Accrue $ cost: on-demand voters + alive spot nodes (eq. 1).
+    Digest-tier observers (DESIGN.md §13) bill as spot instances at their
+    site's spot price and count toward the linear network term — they
+    are cheap because they are spot and stateless, not free."""
     site = jnp.asarray(static["site"])
     is_voter = jnp.asarray(static["is_voter"])
     od_price = cfg_c["on_demand_price"][site]
     sp_price = state["spot_price"][site]
+    spot_sum = jnp.sum(jnp.where(~is_voter & state["alive"], sp_price, 0.0))
+    n_alive = jnp.sum(state["alive"])
+    O = state["dobs_alive"].shape[0] if "dobs_alive" in state else 0
+    if O:
+        d_price = state["spot_price"][jnp.asarray(static["dobs_site"])]
+        spot_sum = spot_sum + jnp.sum(jnp.where(state["dobs_alive"],
+                                                d_price, 0.0))
+        n_alive = n_alive + jnp.sum(state["dobs_alive"])
     per_tick = jnp.sum(jnp.where(is_voter & state["alive"], od_price, 0.0)) \
-        + jnp.sum(jnp.where(~is_voter & state["alive"], sp_price, 0.0))
+        + spot_sum
     per_tick = per_tick / cfg_c["ticks_per_hour"]
     # + C: linear network cost in total instances
-    per_tick = per_tick * (1.0 + cfg_c["network_cost_coef"] *
-                           jnp.sum(state["alive"]))
+    per_tick = per_tick * (1.0 + cfg_c["network_cost_coef"] * n_alive)
     return dict(state, cost_accrued=state["cost_accrued"] + per_tick)
 
 
@@ -852,7 +1044,9 @@ def tick(state, static, cfg_c, rng, *, reference=False,
     state = apply_step(state, static, cfg_c, reference=reference,
                        backend=backend)
     state = observer_sync_step(state, static, cfg_c)
-    state, (read_served, read_lat) = read_step(state, static, cfg_c)
+    state = anti_entropy_step(state, static, cfg_c)
+    state, (read_served, read_lat, obs_served, obs_stale) = \
+        read_step(state, static, cfg_c)
     state = cost_step(state, static, cfg_c)
     state = dict(state, tick=state["tick"] + 1)
 
@@ -875,5 +1069,11 @@ def tick(state, static, cfg_c, rng, *, reference=False,
         # ignored by the in-scan digest reduction
         "read_served_tick": read_served,
         "read_lat_tick": read_lat,
+        # digest-tier twins (DESIGN.md §13): per-slot serves and the
+        # staleness of each served batch, for the numpy pin of
+        # `obs_stale_hist` in `tests/test_observers.py`
+        "obs_served_tick": obs_served,
+        "obs_stale_tick": obs_stale,
+        "n_obs_digest": jnp.sum(state["dobs_alive"]),
     }
     return state, metrics

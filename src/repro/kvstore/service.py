@@ -197,3 +197,46 @@ class BWKVService:
         self.session_floor = max(self.session_floor, readindex)
         self._record_read(int(self.sim.state["tick"]) - t0)
         return value, readindex
+
+    def get_stale(self, key: str) -> Tuple[int, int]:
+        """Bounded-staleness read through the digest tier (DESIGN.md §13).
+
+        No read-index fence: pick a live digest observer that is (a)
+        within the configured staleness bound (``tick - dobs_synced_t <=
+        staleness_bound``) and (b) not behind this session's floor
+        (``dobs_applied >= session_floor``, the session-monotonicity
+        contract — a session never reads a prefix shorter than one it
+        already observed or wrote).  The observer holds no dense log, so
+        the value is reconstructed host-side by last-wins replay of its
+        follower's applied prefix ``log[:dobs_applied]`` — exactly the
+        state the digest certifies (Property 3.2 prefix mirror).  Returns
+        ``(value, revision)`` with ``revision = dobs_applied`` and raises
+        the session floor to it.  When no digest observer qualifies
+        (tier off, all stale, or all behind the floor) the read reroutes
+        to the fenced `get` path, mirroring `read_step`'s in-graph
+        reroute rule."""
+        st = self.sim.state
+        O = int(self.sim.static.get("O", 0))
+        if O == 0:
+            return self.get(key)
+        kid = self._key_id(key)
+        t0 = int(st["tick"])
+        alive = np.asarray(st["dobs_alive"])
+        applied = np.asarray(st["dobs_applied"])
+        synced = np.asarray(st["dobs_synced_t"])
+        bound = int(self.sim.cfg_c["staleness_bound"])
+        ok = alive & (t0 - synced <= bound) & (applied >= self.session_floor)
+        cand = np.where(ok)[0]
+        if not cand.size:
+            return self.get(key)                  # reroute: behind/stale
+        # freshest qualifying observer serves
+        o = int(cand[np.argmax(applied[cand])])
+        revision = int(applied[o])
+        fol = int(st["dobs_fol"][o])
+        keys = np.asarray(st["log_key"][fol][:revision])
+        vals = np.asarray(st["log_val"][fol][:revision])
+        hits = np.where(keys == kid)[0]
+        value = int(vals[hits[-1]]) if hits.size else -1
+        self.session_floor = max(self.session_floor, revision)
+        self._record_read(int(self.sim.state["tick"]) - t0)
+        return value, revision

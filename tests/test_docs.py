@@ -67,6 +67,19 @@ def test_fault_contract_is_cross_referenced():
     assert any("repro/market/" in f for f in cited_from), cited_from
 
 
+def test_observer_tier_contract_is_cross_referenced():
+    """Same rule for the §13 digest-tier observer contract: cited from
+    the tick that runs the anti-entropy rounds and bounded-staleness
+    serving (`core/step.py`), from the state module that owns the
+    digest shapes (`core/state.py`), and from the service whose
+    `get_stale` is the host-facing twin (`kvstore/service.py`)."""
+    refs = _references()
+    cited_from = set(refs.get("13", []))
+    assert any("core/step.py" in f for f in cited_from), cited_from
+    assert any("core/state.py" in f for f in cited_from), cited_from
+    assert any("kvstore/service.py" in f for f in cited_from), cited_from
+
+
 def test_serving_contract_is_cross_referenced():
     """Same rule for the §11 serving surface: cited from the tick that
     consumes arrival curves and serves the read-index round
