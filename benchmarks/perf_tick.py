@@ -1,24 +1,32 @@
 #!/usr/bin/env python
 """Consensus-tick kernel benchmark: pallas vs xla vs reference.
 
-Times the three raft_tick hot ops (DESIGN.md §8) and the end-to-end
-protocol tick on every formulation the repo carries:
+Times the FOUR Pallas kernel families (DESIGN.md §8) and the
+end-to-end protocol tick on every formulation the repo carries:
 
-  per kernel    the Pallas op (`kernels/raft_tick/ops.py`) against its
-                PR-1 `ref.py` twin, at the paper cluster's shapes.
+  per kernel    each Pallas op against its frozen `ref.py` twin, at
+                the paper cluster's shapes:
+                  raft_tick       log_match_append / commit_majority /
+                                  apply_last_wins
+                  leader_fanout   fused budgeted AppendEntries fan-out
+                  group_digest    blockwise masked group reduction
+                  ae_sync         fused anti-entropy round
   end to end    a jitted T-tick scan of `step.tick` on
                 backend="pallas", backend="xla" (the PR-2 fast path),
                 and reference=True (the PR-1 baseline).
 
-Before timing, the three end-to-end trajectories are checked
-**bit-identical** from the same seed — the run FAILS (exit 1) if any
-state leaf diverges, so CI catches kernel-contract regressions even on
-machines where the timings themselves are noise.
+Before timing, every kernel family is checked **bit-identical**
+against its ref twin on random operands, and the three end-to-end
+trajectories are checked bit-identical from the same seed — the run
+FAILS (exit 1) if any output or state leaf diverges, so CI catches
+kernel-contract regressions even on machines where the timings
+themselves are noise.
 
 Emits ``BENCH_tick.json``.  Interpret-mode caveat: off-TPU the pallas
 numbers measure the Pallas *interpreter* traced into XLA, not kernel
-speed (DESIGN.md §8); the JSON records which mode ran (`"interpret"`),
-and no perf ceiling is enforced on interpret timings.
+speed (DESIGN.md §8).  Every timing block therefore carries an
+explicit ``"interpreted": true/false`` field — when it is true the
+pallas ratios are NOT kernel speedups and no perf ceiling is enforced.
 
   PYTHONPATH=src python benchmarks/perf_tick.py [--smoke] [--out PATH]
 
@@ -40,6 +48,12 @@ from repro.core import state as state_mod
 from repro.core import step as step_mod
 from repro.core.cluster_config import ClusterConfig, SiteConfig
 from repro.core.runtime import make_cfg_arrays
+from repro.kernels.ae_sync import ops as ae_ops
+from repro.kernels.ae_sync import ref as ae_ref
+from repro.kernels.group_digest import ops as gd_ops
+from repro.kernels.group_digest import ref as gd_ref
+from repro.kernels.leader_fanout import ops as lf_ops
+from repro.kernels.leader_fanout import ref as lf_ref
 from repro.kernels.raft_tick import ops as rt_ops
 from repro.kernels.raft_tick import ref as rt_ref
 
@@ -93,9 +107,59 @@ def _kernel_inputs(cfg: ClusterConfig, static, seed: int = 0):
     }
 
 
-def bench_kernels(cfg: ClusterConfig, static, iters: int) -> dict:
+def _wide_inputs(cfg: ClusterConfig, static, seed: int = 1):
+    """Random operands for the PR-9 families, at the cluster's real
+    shapes (property sweeps live in tests/test_wide_kernels.py)."""
+    rng = np.random.default_rng(seed)
+    N, L = static["N"], cfg.max_log
+    # the tick static carries no digest-tier slots; provision some so
+    # the ae_sync family benches at a real observer width
+    static_o = state_mod.build_static(
+        cfg, n_obs_digest=max(cfg.max_observers, 2))
+    O = len(static_o["dobs_site"])
+    i32 = lambda a: jnp.asarray(a, jnp.int32)
+    mk = lambda lo, hi, sh: i32(rng.integers(lo, hi, sh))
+    fanout = dict(
+        role=mk(0, 6, (N,)), alive=jnp.asarray(rng.random(N) < 0.8),
+        warn_timer=mk(-1, 5, (N,)), sec_of=mk(-1, N, (N,)),
+        match_len=mk(0, L + 1, (N,)), app_arrive_t=mk(-1, 40, (N,)),
+        app_from_len=mk(0, L + 1, (N,)), app_upto=mk(0, L + 1, (N,)),
+        app_term=mk(0, 4, (N,)), app_commit=mk(0, L + 1, (N,)),
+        rtt=jnp.asarray(static["rtt"], jnp.int32),
+        lid_c=jnp.int32(0), has_leader=jnp.asarray(True),
+        tick=jnp.int32(7), ldr_len=jnp.int32(L), ldr_term=jnp.int32(2),
+        ldr_commit=jnp.int32(L // 2))
+    B, G, H = 32, 5, 64
+    group = dict(
+        gids=mk(0, G + 1, (B,)),            # == G rows drop (ragged)
+        int_mat=mk(0, 2**20, (B, 2 * H + 9)),
+        flt_mat=jnp.asarray(
+            rng.standard_normal((B, 3)) * 100.0, jnp.float32))
+    ae = dict(
+        dobs_alive=mk(0, 2, (O,)), dobs_fol=mk(-1, N, (O,)),
+        dobs_applied=mk(0, L, (O,)), dobs_term=mk(0, 4, (O,)),
+        dobs_digest=jnp.asarray(
+            rng.integers(0, 2**32, O, dtype=np.uint32)),
+        dobs_synced_t=mk(-1, 40, (O,)), ae_phase=mk(0, 4, (O,)),
+        dobs_site=i32(static_o["dobs_site"]),
+        alive=jnp.asarray(rng.random(N) < 0.8),
+        is_voter=jnp.asarray(static["is_voter"]),
+        applied_len=mk(0, L + 1, (N,)), term=mk(0, 4, (N,)),
+        applied_digest=jnp.asarray(
+            rng.integers(0, 2**32, N, dtype=np.uint32)),
+        site=i32(static["site"]),
+        site_rtt=jnp.asarray(static_o["site_rtt"], jnp.int32),
+        tick=jnp.int32(12), ae_interval=jnp.int32(4))
+    return {"leader_fanout": fanout, "group_digest": group,
+            "ae_sync": ae}
+
+
+def bench_kernels(cfg: ClusterConfig, static, iters: int):
+    """raft_tick ops vs ref twins; returns timing blocks (the raft_tick
+    family's bit-identity gate is the trajectory check in bench_tick)."""
     inp = _kernel_inputs(cfg, static)
     W = inp["W"]
+    interpret = rt_ops.use_interpret()
     # positional arg tuples (dict pytrees re-order under jit)
     pairs = {
         "log_match_append": (
@@ -116,15 +180,67 @@ def bench_kernels(cfg: ClusterConfig, static, iters: int) -> dict:
         p_ms = _timeit(pallas_fn, *args_t, iters=iters) * 1e3
         r_ms = _timeit(ref_fn, *args_t, iters=iters) * 1e3
         out[name] = {"pallas_ms": p_ms, "ref_ms": r_ms,
-                     "pallas_vs_ref": r_ms / max(p_ms, 1e-12)}
+                     "pallas_vs_ref": r_ms / max(p_ms, 1e-12),
+                     "interpreted": interpret}
     return out
 
 
+def bench_wide_kernels(cfg: ClusterConfig, static, iters: int):
+    """PR-9 families (fan-out / digest reduction / anti-entropy) vs ref
+    twins; returns (timing blocks, equal: bool) — the bit-identity gate
+    compares every output array exactly."""
+    inp = _wide_inputs(cfg, static)
+    interpret = rt_ops.use_interpret()
+    knobs = dict(msg_budget=static["msg_budget"],
+                 max_ship=static["max_ship"],
+                 entries_per_msg=static["entries_per_msg"])
+    G = 5
+    u2i = lambda v: jax.lax.bitcast_convert_type(v, jnp.int32)
+
+    def ae_ref_fn(*a):
+        # ref twin works on int32 digest views (ops.py owns the bitcast)
+        (da, df, dap, dt, dg, ds, ph, dsi, al, iv, apl, tm, adg, st,
+         srtt, tick, itv) = a
+        out = ae_ref.ae_sync_ref(da, df, dap, dt, u2i(dg), ds, ph, dsi,
+                                 al, iv, apl, tm, u2i(adg), st, srtt,
+                                 tick, itv)
+        return (out[0], out[1],
+                jax.lax.bitcast_convert_type(out[2], jnp.uint32), out[3])
+
+    pairs = {
+        "leader_fanout": (
+            lambda *a: lf_ops.leader_fanout(*a, **knobs),
+            jax.jit(lambda *a: lf_ref.leader_fanout_ref(*a, **knobs)),
+            tuple(inp["leader_fanout"].values())),
+        "group_digest": (
+            lambda *a: gd_ops.group_reduce(*a, n_groups=G),
+            jax.jit(lambda *a: gd_ref.group_reduce_ref(*a, n_groups=G)),
+            tuple(inp["group_digest"].values())),
+        "ae_sync": (
+            ae_ops.ae_sync,
+            jax.jit(ae_ref_fn),
+            tuple(inp["ae_sync"].values())),
+    }
+    out, equal = {}, True
+    for name, (pallas_fn, ref_fn, args_t) in pairs.items():
+        got = jax.tree.map(np.asarray, pallas_fn(*args_t))
+        want = jax.tree.map(np.asarray, ref_fn(*args_t))
+        fam_eq = all(np.array_equal(g, w) for g, w in zip(got, want))
+        equal &= fam_eq
+        p_ms = _timeit(pallas_fn, *args_t, iters=iters) * 1e3
+        r_ms = _timeit(ref_fn, *args_t, iters=iters) * 1e3
+        out[name] = {"pallas_ms": p_ms, "ref_ms": r_ms,
+                     "pallas_vs_ref": r_ms / max(p_ms, 1e-12),
+                     "bit_identical": fam_eq, "interpreted": interpret}
+    return out, equal
+
+
 def bench_tick(cfg: ClusterConfig, static, T: int, iters: int):
-    """End-to-end T-tick scans; returns (timings, equal: bool)."""
+    """End-to-end T-tick scans; returns (timing blocks, equal: bool)."""
     cfg_c = make_cfg_arrays(cfg, write_rate=8.0, read_rate=16.0, phi=0.02)
     state0 = state_mod.init_state(cfg, static)
     rngs = jax.random.split(jax.random.PRNGKey(0), T)
+    interpret = rt_ops.use_interpret()
 
     def scan_fn(reference, backend):
         def body(c, r):
@@ -133,21 +249,22 @@ def bench_tick(cfg: ClusterConfig, static, T: int, iters: int):
             return s, None
         return jax.jit(lambda s: jax.lax.scan(body, s, rngs)[0])
 
-    variants = {"xla": scan_fn(False, "xla"),
-                "pallas": scan_fn(False, "pallas"),
-                "reference": scan_fn(True, "xla")}
+    variants = {"xla": (scan_fn(False, "xla"), False),
+                "pallas": (scan_fn(False, "pallas"), interpret),
+                "reference": (scan_fn(True, "xla"), False)}
     finals, timings = {}, {}
-    for name, fn in variants.items():
+    for name, (fn, interp) in variants.items():
         finals[name] = jax.tree.map(np.asarray, fn(state0))
-        timings[f"{name}_ms_per_tick"] = \
-            _timeit(fn, state0, iters=iters) * 1e3 / T
+        timings[name] = {
+            "ms_per_tick": _timeit(fn, state0, iters=iters) * 1e3 / T,
+            "interpreted": interp}
     equal = all(
         np.array_equal(finals["xla"][k], finals[v][k])
         for v in ("pallas", "reference") for k in finals["xla"])
     timings["speedup_xla_vs_reference"] = \
-        timings["reference_ms_per_tick"] / timings["xla_ms_per_tick"]
+        timings["reference"]["ms_per_tick"] / timings["xla"]["ms_per_tick"]
     timings["pallas_vs_xla"] = \
-        timings["xla_ms_per_tick"] / timings["pallas_ms_per_tick"]
+        timings["xla"]["ms_per_tick"] / timings["pallas"]["ms_per_tick"]
     return timings, equal
 
 
@@ -155,7 +272,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small cluster + few iters for CI (equivalence "
-                         "gate only, timings informational)")
+                         "gates only, timings informational)")
     ap.add_argument("--out", default="BENCH_tick.json")
     args = ap.parse_args(argv)
 
@@ -164,20 +281,25 @@ def main(argv=None) -> int:
     T = cfg.period_ticks
     k_iters, t_iters = (3, 2) if args.smoke else (10, 3)
     interpret = rt_ops.use_interpret()
-    print(f"=== raft_tick kernels: {cfg.name} N={static['N']} "
+    print(f"=== pallas kernel layer: {cfg.name} N={static['N']} "
           f"L={cfg.max_log} K={cfg.key_space} T={T} "
           f"(pallas {'interpret' if interpret else 'compiled'}) ===")
 
     kernels = bench_kernels(cfg, static, k_iters)
+    wide, wide_equal = bench_wide_kernels(cfg, static, k_iters)
+    kernels.update(wide)
     for name, r in kernels.items():
+        gate = "" if r.get("bit_identical", True) else "  DIVERGED"
         print(f"{name:>18}: pallas {r['pallas_ms']:8.2f} ms   "
-              f"ref {r['ref_ms']:8.2f} ms")
+              f"ref {r['ref_ms']:8.2f} ms{gate}")
 
     tick, equal = bench_tick(cfg, static, T, t_iters)
-    print(f"{'tick (end-to-end)':>18}: xla {tick['xla_ms_per_tick']:.3f} "
-          f"ms/tick   pallas {tick['pallas_ms_per_tick']:.3f}   "
-          f"reference {tick['reference_ms_per_tick']:.3f}")
-    print(f"trajectories bit-identical: {equal}")
+    print(f"{'tick (end-to-end)':>18}: "
+          f"xla {tick['xla']['ms_per_tick']:.3f} ms/tick   "
+          f"pallas {tick['pallas']['ms_per_tick']:.3f}   "
+          f"reference {tick['reference']['ms_per_tick']:.3f}")
+    print(f"trajectories bit-identical: {equal}   "
+          f"wide kernels bit-identical: {wide_equal}")
 
     result = {
         "config": {"cluster": cfg.name, "N": int(static["N"]),
@@ -189,15 +311,17 @@ def main(argv=None) -> int:
                    "interpret": interpret},
         "kernels": kernels,
         "tick": tick,
-        "equivalence": {"pallas_equals_xla_equals_reference": equal},
+        "equivalence": {
+            "pallas_equals_xla_equals_reference": equal,
+            "wide_kernels_equal_ref": wide_equal},
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")
     print(f"-> {args.out}")
 
-    if not equal:
-        print("FAIL: pallas/xla/reference trajectories diverged",
+    if not equal or not wide_equal:
+        print("FAIL: a kernel formulation diverged from its twin",
               file=sys.stderr)
         return 1
     return 0

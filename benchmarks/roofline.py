@@ -19,8 +19,15 @@ Terms (per device, seconds):
     collective = wire_bytes / 50e9         (per-link ICI)
 MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N_active·B (decode).
 
+``--raft`` instead rooflines the consensus hot paths of the widened
+Pallas kernel layer (DESIGN.md §8): the leader fan-out and the grouped
+digest reduction, lowered from their XLA formulations at the paper
+cluster / fleet shapes — bytes, FLOPs, arithmetic intensity, and where
+each lands against the TPU v5e ridge point.
+
 Usage: python -m benchmarks.roofline [--arch A --shape S] [--all]
-       [--json out.json] [--profile train_sp] [--microbatches N] ...
+       [--json out.json] [--profile train_sp] [--microbatches N]
+       [--raft] ...
 """
 import argparse
 import dataclasses
@@ -214,6 +221,75 @@ def _cell_cost(cfg, shape, runcfg, mesh):
                        (shardings(ps), shardings(ds), tok_sh), (1,), mesh)
 
 
+def _raft_cost(fn, *args):
+    """flops / bytes-accessed for one jitted consensus op."""
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def analyse_raft_kernels(verbose=True):
+    """Roofline terms for the §8 fan-out and digest-reduction paths.
+
+    Lowers the XLA formulations (the kernels' bit-identical twins, so
+    the operand traffic is the same) at the paper cluster's node count
+    and the B=32 fleet's digest shapes, and reports bytes, FLOPs,
+    arithmetic intensity, and the v5e ridge-point verdict — integer
+    select/reduce work this sparse is memory-bound, which is the
+    argument for fusing it (one pass, no gather/scatter HLO)."""
+    import jax.numpy as jnp
+    from repro.configs.bwraft_kv import CONFIG as RAFT_CONFIG
+    from repro.core import state as raft_state
+    from repro.kernels.group_digest import ref as gd_ref
+    from repro.kernels.leader_fanout import ref as lf_ref
+
+    rng = np.random.default_rng(0)
+    static = raft_state.build_static(RAFT_CONFIG)
+    N, L = static["N"], RAFT_CONFIG.max_log
+    mk = lambda lo, hi, sh: jnp.asarray(rng.integers(lo, hi, sh),
+                                        jnp.int32)
+    fan_args = (mk(0, 6, (N,)), jnp.asarray(rng.random(N) < 0.9),
+                mk(-1, 5, (N,)), mk(-1, N, (N,)), mk(0, L + 1, (N,)),
+                mk(-1, 40, (N,)), mk(0, L + 1, (N,)), mk(0, L + 1, (N,)),
+                mk(0, 4, (N,)), mk(0, L + 1, (N,)),
+                jnp.asarray(static["rtt"], jnp.int32), jnp.int32(0),
+                jnp.asarray(True), jnp.int32(7), jnp.int32(L),
+                jnp.int32(2), jnp.int32(L // 2))
+    knobs = dict(msg_budget=static["msg_budget"],
+                 max_ship=static["max_ship"],
+                 entries_per_msg=static["entries_per_msg"])
+    B, G, H = 32, 8, 64
+    grp_args = (mk(0, G + 1, (B,)), mk(0, 2**20, (B, 2 * H + 9)),
+                jnp.asarray(rng.standard_normal((B, 3)), jnp.float32))
+
+    ridge = HW["peak_flops_bf16"] / HW["hbm_gbps"]   # FLOPs per byte
+    records = []
+    for name, cost, shape in (
+            ("leader_fanout",
+             _raft_cost(lambda *a: lf_ref.leader_fanout_ref(*a, **knobs),
+                        *fan_args),
+             f"N={N} rtt={N}x{N}"),
+            ("group_digest",
+             _raft_cost(lambda *a: gd_ref.group_reduce_ref(*a, n_groups=G),
+                        *grp_args),
+             f"B={B} G={G} F={2 * H + 9}+3")):
+        ai = cost["flops"] / max(cost["bytes"], 1e-9)
+        rec = {"kernel": name, "status": "OK", "shape": shape,
+               "flops": cost["flops"], "bytes": cost["bytes"],
+               "arith_intensity": ai, "ridge_flops_per_byte": ridge,
+               "bound": "memory" if ai < ridge else "compute",
+               "memory_s": cost["bytes"] / HW["hbm_gbps"],
+               "compute_s": cost["flops"] / HW["peak_flops_bf16"]}
+        records.append(rec)
+        if verbose:
+            print(f"[raft {name:>14}] {shape:<22} "
+                  f"flops={cost['flops']:12.0f} bytes={cost['bytes']:10.0f} "
+                  f"AI={ai:7.3f} ridge={ridge:.0f} -> {rec['bound']}-bound")
+    return records
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
@@ -224,7 +300,18 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--remat-policy", default=None)
     ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--raft", action="store_true",
+                    help="roofline the consensus fan-out and digest-"
+                         "reduction paths instead of the model cells")
     args = ap.parse_args(argv)
+
+    if args.raft:
+        records = analyse_raft_kernels()
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(records, f, indent=1, default=str)
+        print(f"{len(records)} raft kernels analysed")
+        return 0
 
     overrides = {}
     if args.profile:

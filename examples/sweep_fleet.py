@@ -16,10 +16,13 @@ cluster is fetched (printed below; compare with the device state size).
 `benchmarks/perf_fleet.py` quantifies the speedup vs the PR-1
 host-marshalling path and records it in BENCH_fleet.json.
 
-`--backend pallas` runs the same sweep through the raft_tick kernel
-layer (DESIGN.md §8; interpret mode off-TPU) — trajectories are
+`--backend pallas` runs the same sweep through the Pallas kernel layer
+(raft_tick + leader fan-out + grouped digest reduction + anti-entropy
+sync; DESIGN.md §8; interpret mode off-TPU) — trajectories are
 bit-identical, only execution differs; `benchmarks/perf_tick.py` is the
-measured comparison.
+measured comparison.  `--backend auto` (the library default) resolves
+per platform: pallas on TPU, xla everywhere else — the resolved choice
+is printed and asserted below.
 """
 import argparse
 import itertools
@@ -29,6 +32,7 @@ from repro.configs.bwraft_kv import CONFIG
 from repro.core.fleet import FleetSim
 from repro.core.runtime import BWRaftSim
 from repro.core.state import pytree_nbytes
+from repro.kernels import BACKENDS, resolve_backend
 
 PHIS = [0.0, 0.01, 0.02, 0.05, 0.08, 0.1, 0.15, 0.2]
 WRITE_RATES = [4.0, 8.0, 16.0, 32.0]
@@ -37,15 +41,18 @@ EPOCHS = 3
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
-                    help="tick hot-op implementation (DESIGN.md §8)")
+    ap.add_argument("--backend", choices=BACKENDS, default="auto",
+                    help="tick hot-op implementation (DESIGN.md §8); "
+                         "'auto' resolves to pallas on TPU, xla elsewhere")
     args = ap.parse_args()
+    resolved = resolve_backend(args.backend)
     print(f"=== BW-Raft fleet sweep: 8 phis x 4 write rates = 32 clusters "
-          f"(backend={args.backend}) ===")
+          f"(backend={args.backend} -> {resolved}) ===")
     fleet = FleetSim.from_sweep(
         CONFIG, {"phi": PHIS, "write_rate": WRITE_RATES},
         read_rate=32.0, seed=0, backend=args.backend)
     assert fleet.shapes.B == 32, fleet.shapes
+    assert fleet.backend == resolved, (fleet.backend, resolved)
 
     t0 = time.perf_counter()
     reports = fleet.run(EPOCHS)

@@ -69,6 +69,8 @@ from repro.core.runtime import (ClusterController, CountingJit, EpochReport,
                                 build_report, compact_state, device_epoch,
                                 make_cfg_arrays, report_from_digest)
 from repro.core.state import pytree_nbytes
+from repro.kernels import resolve_backend
+from repro.kernels.group_digest import ops as gd_ops
 
 # static scalars every member must agree on (baked into the compiled
 # program; per-node capacities from state.build_static)
@@ -191,11 +193,47 @@ _GROUP_SUM_KEYS = ("write_lat_hist", "read_lat_hist", "reads_arrived",
                    "two_pc_aborts")
 
 
-def _group_digest(digest: Dict, gids, n_groups: int) -> Dict:
+# float digest leaves: summed (order-sensitive — the kernel accumulates
+# in ascending member order, which is scatter-add order) + the one max
+_GROUP_FLOAT_KEYS = ("read_lat_sum", "cost_delta")
+_GROUP_INT_KEYS = tuple(k for k in _GROUP_SUM_KEYS
+                        if k not in _GROUP_FLOAT_KEYS)
+
+
+def _group_digest(digest: Dict, gids, n_groups: int,
+                  backend: str = "xla") -> Dict:
     """Reduce per-member digest leaves (B, ...) to per-group leaves
     (G, ...).  Ungrouped members carry segment id G and are dropped by
     the segment ops — the masking rule that makes ragged group sizes and
-    mixed grouped/ungrouped fleets shape-free (DESIGN.md §9)."""
+    mixed grouped/ungrouped fleets shape-free (DESIGN.md §9).
+
+    `backend="pallas"` packs the leaves into one (B, F) int32 matrix
+    plus a (B, 3) float32 matrix and runs the single blockwise masked
+    reduction of `kernels/group_digest` instead of the per-leaf
+    `segment_sum`/`segment_max` pair — bit-identical, floats included
+    (test invariant, DESIGN.md §8)."""
+    if backend == "pallas":
+        parts, widths = [], []
+        for k in _GROUP_INT_KEYS:
+            v = jnp.asarray(digest[k], jnp.int32)
+            v = v[:, None] if v.ndim == 1 else v
+            parts.append(v)
+            widths.append(v.shape[1])
+        int_mat = jnp.concatenate(parts, axis=1)
+        flt_mat = jnp.stack([digest[k] for k in _GROUP_FLOAT_KEYS] +
+                            [digest["read_lat_max"]], axis=1)
+        g_int, g_sum, g_max = gd_ops.group_reduce(gids, int_mat, flt_mat,
+                                                  n_groups=n_groups)
+        out, off = {}, 0
+        for k, w in zip(_GROUP_INT_KEYS, widths):
+            leaf = g_int[:, off:off + w]
+            out[k] = leaf[:, 0] if jnp.asarray(digest[k]).ndim == 1 \
+                else leaf
+            off += w
+        for i, k in enumerate(_GROUP_FLOAT_KEYS):
+            out[k] = g_sum[:, i]
+        out["read_lat_max"] = g_max[:, len(_GROUP_FLOAT_KEYS)]
+        return out
     out = {k: jax.ops.segment_sum(digest[k], gids, num_segments=n_groups)
            for k in _GROUP_SUM_KEYS}
     out["read_lat_max"] = jax.ops.segment_max(
@@ -213,6 +251,8 @@ def _vmapped_epoch(shapes: FleetShapes, shared: Dict, backend: str = "xla",
     argument and the digest gains a `"group"` subtree — the in-graph
     grouped reduction (DESIGN.md §9), fused into the same program so a
     sharded sweep stays one dispatch per epoch."""
+    backend = resolve_backend(backend)
+
     def epoch(state, rngs, bstatic, cfg_c):
         def one_epoch(st, rng, bstat, cc):
             static = {**shared, **bstat}
@@ -225,7 +265,8 @@ def _vmapped_epoch(shapes: FleetShapes, shared: Dict, backend: str = "xla",
     def grouped_epoch(state, rngs, bstatic, cfg_c, gids):
         state, digest = epoch(state, rngs, bstatic, cfg_c)
         return state, dict(digest,
-                           group=_group_digest(digest, gids, n_groups))
+                           group=_group_digest(digest, gids, n_groups,
+                                               backend=backend))
     return grouped_epoch
 
 
@@ -241,7 +282,10 @@ def _fleet_epoch_fn(shapes: FleetShapes, shared: Dict,
     (the fleet's trace/arrival/fault-schedule tick widths, §10–§12) are
     jit-static shapes of the cfg_c arguments, so they belong in the
     cache key — two same-shape fleets at different widths are different
-    programs and must not share one compile counter."""
+    programs and must not share one compile counter.  `backend` is
+    resolved first (DESIGN.md §8), so `"auto"` and its per-platform
+    resolution share one compiled program."""
+    backend = resolve_backend(backend)
     key = ("device", shapes, tuple(sorted(shared.items())), backend,
            n_groups, widths)
     if key not in _FLEET_EPOCH_CACHE:
@@ -258,6 +302,7 @@ def _fleet_multi_epoch_fn(shapes: FleetShapes, shared: Dict, epochs: int,
     epochs (compaction in-graph between them) for fleets with no managing
     member.  Digest leaves come back stacked (E, B, ...) — group leaves,
     when present, (E, G, ...)."""
+    backend = resolve_backend(backend)
     key = ("multi", shapes, tuple(sorted(shared.items())), epochs, backend,
            n_groups, widths)
     if key not in _FLEET_EPOCH_CACHE:
@@ -384,15 +429,17 @@ class FleetSim:
     `"device"` (default) is the digest path — donated state, in-graph
     compaction, O(digest) device→host traffic — `"host"` the PR-1
     full-marshalling reference (DESIGN.md §7.1).  `backend` selects the
-    tick hot-op implementation on the device pipeline: `"xla"` (default)
-    or `"pallas"` (`kernels/raft_tick`, DESIGN.md §8) — trajectories are
+    tick hot-op implementation on the device pipeline: `"xla"`
+    (default), `"pallas"` (the fused kernel families, DESIGN.md §8), or
+    `"auto"` (pallas on TPU, xla elsewhere — resolved at construction,
+    `self.backend` holds the resolution) — trajectories are
     bit-identical either way (test invariant).
     """
 
     def __init__(self, specs: Sequence[MemberSpec], *,
                  pipeline: str = "device", backend: str = "xla"):
         assert pipeline in ("device", "host"), pipeline
-        assert backend in ("xla", "pallas"), backend
+        backend = resolve_backend(backend)
         assert backend == "xla" or pipeline == "device", \
             "the pallas backend applies to the device pipeline only " \
             "(the host pipeline is the frozen PR-1 reference)"
@@ -519,7 +566,9 @@ class FleetSim:
         mapping a MemberSpec field name (write_rate / read_rate / phi /
         seed / mode / spot_price_vol / budget_per_period / ...) to the
         values to sweep; the member list is configs x product(axes).
-        `defaults` fill the remaining MemberSpec fields.
+        `defaults` fill the remaining MemberSpec fields.  `backend`
+        accepts `"auto"` (pallas on TPU, xla elsewhere — DESIGN.md §8);
+        the constructed fleet's `.backend` is the resolution.
         """
         if isinstance(configs, ClusterConfig):
             configs = [configs]

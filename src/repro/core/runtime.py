@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import manager as mgr
+from repro.kernels import resolve_backend
 from repro.core import mcsa
 from repro.core import step as step_mod
 from repro.core import state as state_mod
@@ -452,7 +453,8 @@ def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int, *,
     reduction, digest extraction, then in-graph log compaction.  Returns
     `(compacted_state, digest)`; meant to be jitted with the state buffers
     donated (DESIGN.md §7.1).  `backend` picks the tick hot-op
-    implementation — `"xla"` or `"pallas"` (DESIGN.md §8).  The spot
+    implementation — `"xla"`, `"pallas"`, or `"auto"` (pallas on TPU,
+    xla elsewhere — DESIGN.md §8).  The spot
     market (synthetic process or trace replay) is selected by `cfg_c` —
     the trace arrays are jit arguments, so a trace sweep reuses this
     compiled program (DESIGN.md §10)."""
@@ -739,7 +741,10 @@ def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0, 0, 0),
     """One jitted epoch function per (cluster config, padding, backend) —
     cfg_c values are jit *arguments* (rate sweeps re-use the compiled
     program).  The returned function is the device-resident digest path:
-    it compacts in-graph and donates the state buffers (DESIGN.md §7.1)."""
+    it compacts in-graph and donates the state buffers (DESIGN.md §7.1).
+    `backend` is resolved first (DESIGN.md §8), so `"auto"` and its
+    per-platform resolution share one compiled program."""
+    backend = resolve_backend(backend)
     key = (cfg, pads, backend)
     if key not in _EPOCH_CACHE:
         def epoch_fn(state, rng, cfg_c):
@@ -755,9 +760,11 @@ class BWRaftSim:
     `pad_*` widen the state shapes with inert slots/sites/log tail so a
     solo run can reproduce exactly the shapes a `FleetSim` member gets when
     batched next to bigger clusters (DESIGN.md §7).  `backend` selects the
-    tick hot-op implementation — `"xla"` (default) or `"pallas"` (the
-    fused `kernels/raft_tick` kernels, DESIGN.md §8); trajectories are
-    bit-identical either way (test invariant).
+    tick hot-op implementation — `"xla"` (default), `"pallas"` (the
+    fused kernel families, DESIGN.md §8), or `"auto"` (pallas on TPU,
+    xla elsewhere — resolved at construction, `self.backend` holds the
+    resolution); trajectories are bit-identical either way (test
+    invariant).
 
     `market="trace"` replays a `market.MarketTrace` instead of the
     synthetic walk (DESIGN.md §10) — the trace rides in `cfg_c` as jit
@@ -787,7 +794,7 @@ class BWRaftSim:
                  staleness_bound: int = 16, ae_interval: int = 4,
                  ae_phase=None):
         assert mode in ("bwraft", "raft")
-        assert backend in ("xla", "pallas"), backend
+        backend = resolve_backend(backend)
         self.cfg = cfg
         self.mode = mode
         self.backend = backend

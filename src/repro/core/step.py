@@ -35,6 +35,9 @@ import jax.numpy as jnp
 
 from repro.core.state import (CANDIDATE, DEAD, FOLLOWER, LEADER, OBSERVER,
                               SECRETARY, entry_mix, leader_id)
+from repro.kernels import resolve_backend
+from repro.kernels.ae_sync import ops as ae_ops
+from repro.kernels.leader_fanout import ops as lf_ops
 from repro.kernels.raft_tick import ops as rt_ops
 from repro.market import synthetic as market_synth
 
@@ -290,8 +293,14 @@ def workload_step(state, static, cfg_c, rng):
         (n_writes, n_reads, r_key)
 
 
-def leader_step(state, static, cfg_c, rng_key):
-    """Leader accepts queued writes into its log and ships append batches."""
+def leader_step(state, static, cfg_c, rng_key, *, backend="xla"):
+    """Leader accepts queued writes into its log and ships append batches.
+
+    `backend="pallas"` fuses the budgeted ship — the relay/direct
+    split, the secretary/warned handoff mask, the rank-based message
+    budget, and the five app_* writes — into one in-register pass
+    (`kernels/leader_fanout`, DESIGN.md §8); bit-identical to the XLA
+    cumsum/gather formulation below (test invariant)."""
     N = state["role"].shape[0]
     L = state["log_term"].shape[1]
     lid = leader_id(state, static)
@@ -346,6 +355,25 @@ def leader_step(state, static, cfg_c, rng_key):
 
     # --- ship AppendEntries (budgeted fan-out: THE leader bottleneck) ----
     rtt = jnp.asarray(static["rtt"])
+
+    if backend == "pallas":
+        # fused kernel: handoff mask, relay/direct split, budget rank,
+        # and the app_* writes in one pass (`kernels/leader_fanout`)
+        (app_arrive_t, app_from_len, app_upto, app_term, app_commit,
+         work) = lf_ops.leader_fanout(
+            state["role"], state["alive"], state["warn_timer"],
+            state["sec_of"], state["match_len"], state["app_arrive_t"],
+            state["app_from_len"], state["app_upto"], state["app_term"],
+            state["app_commit"], rtt, lid_c, has_leader, tick,
+            state["log_len"][lid_c], state["term"][lid_c],
+            state["commit_len"][lid_c],
+            msg_budget=static["msg_budget"], max_ship=static["max_ship"],
+            entries_per_msg=static["entries_per_msg"])
+        leader_work = state["leader_work"].at[lid_c].add(work)
+        return dict(state, app_arrive_t=app_arrive_t,
+                    app_from_len=app_from_len, app_upto=app_upto,
+                    app_term=app_term, app_commit=app_commit,
+                    leader_work=leader_work)
 
     # secretary relay wiring: follower f's batch goes via sec_of[f] if that
     # secretary is alive, else directly from the leader.
@@ -717,7 +745,7 @@ def observer_sync_step(state, static, cfg_c):
                 applied_digest=dg)
 
 
-def anti_entropy_step(state, static, cfg_c):
+def anti_entropy_step(state, static, cfg_c, *, backend="xla"):
     """Batched anti-entropy rounds for the digest-tier observers
     (DESIGN.md §13; the sparse scale-out twin of `observer_sync_step`).
 
@@ -734,10 +762,28 @@ def anti_entropy_step(state, static, cfg_c):
     time-since-contact, and the observer's own state is at least as new
     as the source's.  Source = the wired follower (`dobs_fol`), falling
     back in-graph to the first alive voter when the follower is down.
-    No RNG is drawn; at O == 0 this is a python no-op."""
+    No RNG is drawn; at O == 0 this is a python no-op.
+
+    `backend="pallas"` fuses the due rule, the any-live-voter fallback,
+    the monotone adoption, and the sync-hop RTT aging into one pass
+    over the observer lanes (`kernels/ae_sync`, DESIGN.md §8) —
+    bit-identical to the XLA gather formulation below (test
+    invariant)."""
     O = state["dobs_alive"].shape[0] if "dobs_alive" in state else 0
     if O == 0:
         return state
+    if backend == "pallas":
+        applied, term, digest, synced = ae_ops.ae_sync(
+            state["dobs_alive"], state["dobs_fol"], state["dobs_applied"],
+            state["dobs_term"], state["dobs_digest"],
+            state["dobs_synced_t"], cfg_c["ae_phase"],
+            jnp.asarray(static["dobs_site"]), state["alive"],
+            jnp.asarray(static["is_voter"]), state["applied_len"],
+            state["term"], state["applied_digest"],
+            jnp.asarray(static["site"]), jnp.asarray(static["site_rtt"]),
+            state["tick"], cfg_c["ae_interval"])
+        return dict(state, dobs_applied=applied, dobs_term=term,
+                    dobs_digest=digest, dobs_synced_t=synced)
     N = state["role"].shape[0]
     tick = state["tick"]
     is_voter = jnp.asarray(static["is_voter"])
@@ -1026,17 +1072,22 @@ def tick(state, static, cfg_c, rng, *, reference=False,
     results, kept as the epoch-loop perf baseline (DESIGN.md §7.1,
     `benchmarks/perf_fleet.py`); the equivalence is a test invariant
     (`tests/test_fleet.py`).  `backend` selects the implementation of
-    those same three hot ops on the non-reference path: `"xla"` (the
-    PR-2 fast formulations, default) or `"pallas"` (the fused
-    `kernels/raft_tick` kernels, interpret-mode on CPU — DESIGN.md §8);
-    results are bit-identical across all three
-    (`tests/test_raft_tick_kernels.py`, `benchmarks/perf_tick.py`)."""
-    assert backend in ("xla", "pallas"), backend
+    the tick hot ops on the non-reference path: `"xla"` (the PR-2 fast
+    formulations, default), `"pallas"` (the fused kernel families —
+    `raft_tick`, `leader_fanout`, `ae_sync` — interpret-mode on CPU,
+    DESIGN.md §8), or `"auto"` (pallas on TPU, xla elsewhere — the
+    per-platform resolution rule); results are bit-identical across
+    all of them (`tests/test_raft_tick_kernels.py`,
+    `tests/test_wide_kernels.py`, `benchmarks/perf_tick.py`)."""
+    backend = resolve_backend(backend)
+    # reference runs pin the PR-1 ops AND the XLA forms of the paths
+    # that predate the reference split (fan-out, anti-entropy)
+    hot = "xla" if reference else backend
     r_spot, r_work, r_lead, r_elec = jax.random.split(rng, 4)
     state, killed = spot_step(state, static, cfg_c, r_spot)
     state, (n_w, n_r, r_key) = workload_step(state, static, cfg_c, r_work)
     state = election_step(state, static, cfg_c, r_elec)
-    state = leader_step(state, static, cfg_c, r_lead)
+    state = leader_step(state, static, cfg_c, r_lead, backend=hot)
     state = follower_step(state, static, cfg_c, reference=reference,
                           backend=backend)
     state = commit_step(state, static, cfg_c, reference=reference,
@@ -1044,7 +1095,7 @@ def tick(state, static, cfg_c, rng, *, reference=False,
     state = apply_step(state, static, cfg_c, reference=reference,
                        backend=backend)
     state = observer_sync_step(state, static, cfg_c)
-    state = anti_entropy_step(state, static, cfg_c)
+    state = anti_entropy_step(state, static, cfg_c, backend=hot)
     state, (read_served, read_lat, obs_served, obs_stale) = \
         read_step(state, static, cfg_c)
     state = cost_step(state, static, cfg_c)

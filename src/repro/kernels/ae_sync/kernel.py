@@ -1,0 +1,136 @@
+"""Pallas kernel for the digest-tier anti-entropy round
+(core/step.py `anti_entropy_step`, DESIGN.md §13; kernel layer §8).
+
+One fused pass over the (1, Op) lane-tiled observer rows computes, all
+in-register:
+
+  * the due rule `(tick + ae_phase[o]) % max(ae_interval, 1) == 0`
+    gated on slot liveness and source availability,
+  * the any-live-voter fallback: the wired follower (`dobs_fol`) when
+    it is an alive voter, else the FIRST alive voter (a min-index
+    reduction over the node lanes — bit-identical to `jnp.argmax` on a
+    boolean mask),
+  * the monotone adoption of the source's (applied_len, term,
+    applied_digest) triple — an observer never regresses,
+  * the sync-hop RTT aging: `synced = tick - site_rtt[dobs_site,
+    site[src]]`, the site-pair matrix gathered through its flattened
+    (1, S*S) row by a fused one-hot over `dobs_site * S + site[src]`.
+
+Gathers from node rows by per-observer indices are one-hot masked sums
+over (Np, Op) — exactly one node row matches per observer lane, so the
+sum reproduces the XLA gather bit-for-bit (including the uint32 digest,
+which travels bitcast to int32).  Column vectors come from lane rows by
+a diagonal pick (the TPU-safe vector transpose).  Padded observer lanes
+arrive with `dobs_alive == 0` (never due — passthrough), padded node
+lanes with `alive == 0` (never a voter, never a source: `dobs_fol`
+clips to the REAL N, passed statically) — the masking contract; ops.py
+pads, callers never see padded lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _iota2(shape, dim):
+    # TPU needs >=2D iota (pallas guide: 1D iota fails to compile)
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+def _ae_sync_kernel(tick_ref, interval_ref,
+                    dalive_ref, fol_ref, dapplied_ref, dterm_ref,
+                    ddigest_ref, dsynced_ref, phase_ref, dsite_ref,
+                    alive_ref, voter_ref, applied_ref, term_ref,
+                    digest_ref, site_ref, srtt_ref,
+                    out_applied_ref, out_term_ref, out_digest_ref,
+                    out_synced_ref,
+                    *, true_n: int, true_s: int):
+    np_ = alive_ref.shape[1]
+    fp = srtt_ref.shape[1]
+    op = fol_ref.shape[1]
+    tick = tick_ref[0, 0]
+    interval = jnp.maximum(interval_ref[0, 0], 1)
+
+    ids_n = _iota2((1, np_), 1)
+    diag_n = _iota2((np_, np_), 0) == _iota2((np_, np_), 1)
+    # node lane row (1, Np) -> column (Np, 1): diagonal pick
+    col_n = lambda v: jnp.sum(jnp.where(diag_n, v, 0), axis=1,
+                              keepdims=True)
+    rows_n = _iota2((np_, op), 0)
+
+    av = (alive_ref[...] != 0) & (voter_ref[...] != 0)      # (1, Np)
+    any_voter = jnp.sum(av.astype(jnp.int32)) > 0
+    # first alive voter == argmax over the boolean mask (0 when none —
+    # masked out by `due` just like the XLA form)
+    first = jnp.min(jnp.where(av, ids_n, np_))
+    fallback = jnp.where(any_voter, first, 0)
+
+    fol = fol_ref[...]                                      # (1, Op)
+    fol_c = jnp.clip(fol, 0, true_n - 1)
+    av_col = col_n(av.astype(jnp.int32))
+    av_at_fol = jnp.sum(jnp.where(rows_n == fol_c, av_col, 0), axis=0,
+                        keepdims=True)
+    fol_ok = (fol >= 0) & (av_at_fol != 0)
+    eff = jnp.where(fol_ok, fol_c, fallback)                # (1, Op)
+
+    hit = rows_n == eff                                     # k == eff_o
+    gather = lambda ref: jnp.sum(jnp.where(hit, col_n(ref[...]), 0),
+                                 axis=0, keepdims=True)
+
+    due = (dalive_ref[...] != 0) & (fol_ok | any_voter) & \
+        (jnp.mod(tick + phase_ref[...], interval) == 0)
+    src_applied = gather(applied_ref)
+    dapplied = dapplied_ref[...]
+    # monotone adoption: never regress the applied index (DESIGN.md §13)
+    adopt = due & (src_applied >= dapplied)
+    out_applied_ref[...] = jnp.where(adopt, src_applied, dapplied)
+    out_term_ref[...] = jnp.where(adopt, gather(term_ref), dterm_ref[...])
+    out_digest_ref[...] = jnp.where(adopt, gather(digest_ref),
+                                    ddigest_ref[...])
+
+    # sync-hop aging through the flattened site-pair matrix:
+    # hop = site_rtt[dobs_site, site[eff]] == srtt_flat[dsite*S + seff]
+    seff = gather(site_ref)
+    idx = dsite_ref[...] * true_s + seff                    # (1, Op)
+    diag_f = _iota2((fp, fp), 0) == _iota2((fp, fp), 1)
+    srtt_col = jnp.sum(jnp.where(diag_f, srtt_ref[...], 0), axis=1,
+                       keepdims=True)
+    hop = jnp.sum(jnp.where(_iota2((fp, op), 0) == idx, srtt_col, 0),
+                  axis=0, keepdims=True)
+    out_synced_ref[...] = jnp.where(due, tick - hop, dsynced_ref[...])
+
+
+def ae_sync_kernel(tick, interval, dobs_alive, dobs_fol, dobs_applied,
+                   dobs_term, dobs_digest, dobs_synced, ae_phase,
+                   dobs_site, alive, is_voter, applied_len, term,
+                   applied_digest, site, srtt_flat, *,
+                   true_n: int, true_s: int, interpret: bool = True):
+    """Fused anti-entropy round over padded operands.
+
+    Observer rows (1, Op) int32; node rows (1, Np) int32; srtt_flat
+    (1, Fp) — the row-major flattened site-pair RTT matrix (stride =
+    the REAL S, passed statically); scalars (1, 1).  Np / Op / Fp are
+    lane multiples (ops.py pads; padded observer lanes have
+    dobs_alive == 0, padded node lanes alive == 0).  Returns
+    (dobs_applied, dobs_term, dobs_digest, dobs_synced_t) rows."""
+    op = dobs_fol.shape[1]
+    kernel = functools.partial(_ae_sync_kernel, true_n=true_n,
+                               true_s=true_s)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM)
+    orow = pl.BlockSpec(dobs_fol.shape, lambda i: (0, 0))
+    nrow = pl.BlockSpec(alive.shape, lambda i: (0, 0))
+    frow = pl.BlockSpec(srtt_flat.shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[scalar, scalar] + [orow] * 8 + [nrow] * 6 + [frow],
+        out_specs=[orow] * 4,
+        out_shape=[jax.ShapeDtypeStruct((1, op), jnp.int32)] * 4,
+        interpret=interpret,
+    )(tick, interval, dobs_alive, dobs_fol, dobs_applied, dobs_term,
+      dobs_digest, dobs_synced, ae_phase, dobs_site,
+      alive, is_voter, applied_len, term, applied_digest, site, srtt_flat)

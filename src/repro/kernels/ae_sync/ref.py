@@ -1,0 +1,40 @@
+"""Reference twin of the anti-entropy sync kernel — the gather/argmax
+formulation lifted verbatim from `core/step.py:anti_entropy_step`
+(DESIGN.md §13), at the *unpadded* op signature (ops.py owns padding
+and the uint32<->int32 digest bitcast).  Kernel == ref
+**bit-identically** is the layer's test invariant (DESIGN.md §8,
+`tests/test_wide_kernels.py`) — int32 in, int32 out, no tolerance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ae_sync_ref(dobs_alive, dobs_fol, dobs_applied, dobs_term,
+                dobs_digest, dobs_synced_t, ae_phase, dobs_site,
+                alive, is_voter, applied_len, term, applied_digest,
+                site, site_rtt, tick, ae_interval):
+    """Batched anti-entropy round (XLA gather form).
+
+    Observer vectors (O,); node vectors (N,); site_rtt (S, S);
+    scalars tick / ae_interval.  `dobs_digest`/`applied_digest` are
+    int32 views of the uint32 digests (the bitcast happens in ops.py).
+    Returns (dobs_applied, dobs_term, dobs_digest, dobs_synced_t)."""
+    N = alive.shape[0]
+    fol_c = jnp.clip(dobs_fol, 0, N - 1)
+    fol_ok = (dobs_fol >= 0) & alive[fol_c] & is_voter[fol_c]
+    alive_voter = is_voter & alive
+    any_voter = jnp.any(alive_voter)
+    fallback = jnp.argmax(alive_voter)
+    eff = jnp.where(fol_ok, fol_c, fallback)
+    interval = jnp.maximum(ae_interval, 1)
+    due = (dobs_alive != 0) & (fol_ok | any_voter) & \
+        (jnp.mod(tick + ae_phase, interval) == 0)
+    src_applied = applied_len[eff]
+    adopt = due & (src_applied >= dobs_applied)
+    applied = jnp.where(adopt, src_applied, dobs_applied)
+    out_term = jnp.where(adopt, term[eff], dobs_term)
+    out_digest = jnp.where(adopt, applied_digest[eff], dobs_digest)
+    hop = site_rtt[dobs_site, site[eff]]
+    synced = jnp.where(due, tick - hop, dobs_synced_t)
+    return applied, out_term, out_digest, synced

@@ -1,0 +1,88 @@
+"""Pallas kernel for the Multi-Raft grouped digest reduction
+(core/fleet.py `_group_digest`, DESIGN.md §9; kernel layer §8).
+
+One blockwise masked reduction over the (B, F) packed digest matrices
+replaces the per-leaf `segment_sum`/`segment_max` pair: the grid runs
+sequentially over (block_b, F) member blocks, and each block's rows
+accumulate into the resident (Gp, F) output by a one-hot group-row
+select — ascending member order, so the float sums apply in exactly the
+order XLA's scatter-add does (bit-identity invariant, no tolerance).
+
+Masking contract: ragged groups need no shape work (any mix of group
+sizes is just the one-hot pattern); dropped members — the ungrouped,
+and the rows ops.py pads B up with — carry segment id `n_groups`, which
+matches no output row in [0, G) and so contributes nothing (the
+segment-ops drop rule).  Empty groups come back as 0 for sums and
+`-inf` for the float max — exactly `jax.ops.segment_max`'s identity.
+
+Int leaves (counters + unit-bin histograms) and float leaves
+(read_lat_sum / cost_delta sums, read_lat_max max) travel as separate
+matrices so integer exactness never rides through float lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _iota2(shape, dim):
+    # TPU needs >=2D iota (pallas guide: 1D iota fails to compile)
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+def _group_reduce_kernel(gid_ref, int_ref, flt_ref,
+                         out_int_ref, out_sum_ref, out_max_ref,
+                         *, block_b: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        out_int_ref[...] = jnp.zeros_like(out_int_ref)
+        out_sum_ref[...] = jnp.zeros_like(out_sum_ref)
+        out_max_ref[...] = jnp.full_like(out_max_ref, -jnp.inf)
+
+    gid = gid_ref[:, 0]                                    # (block_b,)
+    rows_g = _iota2((out_int_ref.shape[0], 1), 0)          # (Gp, 1)
+    # ascending member order: grid blocks ascend and the in-block loop
+    # unrolls ascending, so float accumulation order == scatter-add order
+    for r in range(block_b):
+        hit = rows_g == gid[r]                             # (Gp, 1)
+        out_int_ref[...] += jnp.where(hit, int_ref[r, :][None, :], 0)
+        frow = flt_ref[r, :][None, :]
+        out_sum_ref[...] += jnp.where(hit, frow, 0.0)
+        out_max_ref[...] = jnp.where(
+            hit, jnp.maximum(out_max_ref[...], frow), out_max_ref[...])
+
+
+def group_reduce_kernel(gids, int_mat, flt_mat, n_groups_pad: int, *,
+                        block_b: int = 8, interpret: bool = True):
+    """Blockwise masked group reduction over padded operands.
+
+    gids (Bp, 1) int32 (dropped rows carry an id >= the real G);
+    int_mat (Bp, Fi) int32; flt_mat (Bp, Ff) float32; Bp % block_b == 0,
+    lane dims are lane multiples, n_groups_pad a sublane multiple
+    (ops.py pads).  Returns (g_int (Gp, Fi), g_sum (Gp, Ff),
+    g_max (Gp, Ff)) — sums for every lane, max separately, callers
+    slice the leaves they packed."""
+    Bp, Fi = int_mat.shape
+    Ff = flt_mat.shape[1]
+    nB = Bp // block_b
+    kernel = functools.partial(_group_reduce_kernel, block_b=block_b)
+    blk = lambda w: pl.BlockSpec((block_b, w), lambda b: (b, 0))
+    out = lambda w, d: pl.BlockSpec((n_groups_pad, w), lambda b: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nB,),
+        in_specs=[pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+                  blk(Fi), blk(Ff)],
+        out_specs=[out(Fi, jnp.int32), out(Ff, jnp.float32),
+                   out(Ff, jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((n_groups_pad, Fi), jnp.int32),
+                   jax.ShapeDtypeStruct((n_groups_pad, Ff), jnp.float32),
+                   jax.ShapeDtypeStruct((n_groups_pad, Ff), jnp.float32)],
+        interpret=interpret,
+    )(gids, int_mat, flt_mat)

@@ -1,0 +1,25 @@
+"""Reference twin of the grouped digest-reduction kernel — the
+`segment_sum`/`segment_max` formulation lifted verbatim from
+`core/fleet.py:_group_digest` (DESIGN.md §9), at the packed-matrix op
+signature (ops.py owns packing and padding).  Kernel == ref
+**bit-identically** is the layer's test invariant (DESIGN.md §8,
+`tests/test_wide_kernels.py`) — including the float leaves: the kernel
+accumulates in ascending member order, which is scatter-add order, so
+even non-associative float32 sums match exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def group_reduce_ref(gids, int_mat, flt_mat, *, n_groups: int):
+    """Segment-op group reduction at the unpadded signature.
+
+    gids (B,) int32 — ungrouped members carry `n_groups` and are
+    dropped; int_mat (B, Fi) int32; flt_mat (B, Ff) float32.  Returns
+    (g_int (G, Fi) sums, g_sum (G, Ff) sums, g_max (G, Ff) maxes)."""
+    g_int = jax.ops.segment_sum(int_mat, gids, num_segments=n_groups)
+    g_sum = jax.ops.segment_sum(flt_mat, gids, num_segments=n_groups)
+    g_max = jax.ops.segment_max(flt_mat, gids, num_segments=n_groups)
+    return g_int.astype(jnp.int32), g_sum, g_max

@@ -1,0 +1,155 @@
+"""Pallas kernel for the budgeted AppendEntries fan-out — THE leader
+bottleneck (core/step.py `leader_step`, paper §3/Fig 4; DESIGN.md §8).
+
+One fused pass over the (1, Np) lane-tiled node rows computes, entirely
+in-register:
+
+  * the secretary/warned handoff mask (`sec_alive`: the batch of
+    follower i relays via `sec_of[i]` iff that node is an alive,
+    unwarned secretary — DESIGN.md §12),
+  * the relay/direct split and the per-target delivery latency
+    (leader->relay + relay->target, gathered from the resident (Np, Np)
+    RTT matrix by one-hot reductions — no scatter/gather HLO),
+  * the payload-scaled batch cost, the rank prefix-sum over direct
+    targets (a triangular masked reduction — bit-identical to
+    `jnp.cumsum`), and the budget cut `rank <= msg_budget - n_sec_msgs`,
+  * the five app_* select-writes and the leader-work delta.
+
+All gathers are one-hot masked sums over the node axis: exactly one row
+matches per lane, so the sum reproduces the XLA gather bit-for-bit.
+Column vectors come from lane rows by a diagonal pick over (Np, Np) —
+the TPU-safe vector transpose.  Padded lanes arrive with `alive == 0`,
+which zeroes `want`/`direct`/`relayed`/`dcost`, so they cannot ship,
+count toward the budget, or perturb the rank prefix (masking contract;
+ops.py pads, callers never see padded lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# role constants mirrored from core/state.py (kernels must not import
+# core at trace time; ops.py asserts the pin against the real constants)
+FOLLOWER, CANDIDATE, SECRETARY = 0, 1, 3
+
+
+def _iota2(shape, dim):
+    # TPU needs >=2D iota (pallas guide: 1D iota fails to compile)
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+def _leader_fanout_kernel(lid_ref, has_ref, tick_ref, llen_ref, lterm_ref,
+                          lcommit_ref,
+                          role_ref, alive_ref, warn_ref, sec_ref, match_ref,
+                          arrive_ref, from_ref, upto_ref, term_ref,
+                          commit_ref, rtt_ref,
+                          out_arrive_ref, out_from_ref, out_upto_ref,
+                          out_term_ref, out_commit_ref, work_ref,
+                          *, msg_budget: int, max_ship: int,
+                          entries_per_msg: int):
+    np_ = role_ref.shape[1]
+    lid = lid_ref[0, 0]
+    has = has_ref[0, 0] != 0
+    tick = tick_ref[0, 0]
+
+    ids = _iota2((1, np_), 1)                              # lane = node id
+    rows = _iota2((np_, np_), 0)
+    diag = rows == _iota2((np_, np_), 1)
+    # lane row (1, Np) -> column (Np, 1): diagonal pick (vector transpose)
+    col = lambda v: jnp.sum(jnp.where(diag, v, 0), axis=1, keepdims=True)
+
+    role = role_ref[...]
+    alive = alive_ref[...] != 0
+    warn = warn_ref[...]
+    sec = sec_ref[...]
+    match = match_ref[...]
+    arrive0 = arrive_ref[...]
+
+    # secretary/warned handoff mask in-register (DESIGN.md §12): node k
+    # qualifies as a relay iff alive, SECRETARY-role, and unwarned
+    q = alive & (role == SECRETARY) & (warn < 0)           # (1, Np)
+    secc = jnp.maximum(sec, 0)
+    hit_sec = rows == secc                                 # k == sec_of[i]
+    q_at_sec = jnp.sum(jnp.where(hit_sec, col(q.astype(jnp.int32)), 0),
+                       axis=0, keepdims=True)
+    sec_alive = (sec >= 0) & (q_at_sec != 0)
+    to_sec = sec_alive & (secc != lid)                     # relay != leader
+    relay = jnp.where(sec_alive, secc, lid)
+
+    is_target = ((role == FOLLOWER) | (role == CANDIDATE)) & alive & \
+        (ids != lid)
+    want = has & is_target & (arrive0 < 0)
+    direct = want & ~to_sec
+    relayed = want & to_sec
+
+    any_rel = jnp.sum(relayed.astype(jnp.int32)) > 0
+    n_sec = jnp.where(any_rel, jnp.sum(q.astype(jnp.int32)), 0)
+    budget = jnp.maximum(jnp.int32(msg_budget) - n_sec, 0)
+
+    # payload-scaled batch cost and the rank prefix over direct targets:
+    # rank_i = sum_{k <= i} dcost_k, a triangular masked reduction —
+    # the in-register form of the XLA cumsum (integer math, exact)
+    pending = jnp.maximum(llen_ref[0, 0] - match, 0)
+    cost = 1 + jnp.minimum(pending, max_ship) // entries_per_msg
+    dcost = jnp.where(direct, cost, 0)
+    tri = rows <= _iota2((np_, np_), 1)                    # k <= i
+    rank = jnp.sum(jnp.where(tri, col(dcost), 0), axis=0, keepdims=True)
+    ship = relayed | (direct & (rank <= budget))
+
+    # delivery latency: rtt[lid, relay_i] * (relay_i != lid) +
+    # rtt[relay_i, i], both gathered by one-hot row reductions
+    rtt = rtt_ref[...]
+    hit_rel = rows == relay                                # k == relay_i
+    r1 = jnp.sum(jnp.where(hit_rel, rtt, 0), axis=0, keepdims=True)
+    row_lid = jnp.sum(jnp.where(rows == lid, rtt, 0), axis=0, keepdims=True)
+    r0 = jnp.sum(jnp.where(hit_rel, col(row_lid), 0), axis=0, keepdims=True)
+    lat = r0 * to_sec.astype(jnp.int32) + r1
+
+    ship_i = ship
+    out_arrive_ref[...] = jnp.where(ship_i, tick + lat, arrive0)
+    out_from_ref[...] = jnp.where(ship_i, match, from_ref[...])
+    out_upto_ref[...] = jnp.where(
+        ship_i, jnp.minimum(llen_ref[0, 0], match + max_ship), upto_ref[...])
+    out_term_ref[...] = jnp.where(ship_i, lterm_ref[0, 0], term_ref[...])
+    out_commit_ref[...] = jnp.where(ship_i, lcommit_ref[0, 0],
+                                    commit_ref[...])
+    # leader work: direct ships + one aggregated message per secretary
+    work_ref[0, 0] = jnp.sum((ship & direct).astype(jnp.int32)) + n_sec
+
+
+def leader_fanout_kernel(lid, has_leader, tick, ldr_len, ldr_term,
+                         ldr_commit, role, alive, warn_timer, sec_of,
+                         match_len, app_arrive_t, app_from_len, app_upto,
+                         app_term, app_commit, rtt, *,
+                         msg_budget: int, max_ship: int,
+                         entries_per_msg: int, interpret: bool = True):
+    """Fused budgeted fan-out over padded operands.
+
+    Per-node vectors (1, Np) int32 with Np a lane multiple (ops.py
+    pads; padded lanes have alive == 0); rtt (Np, Np); scalars (1, 1).
+    Returns (app_arrive_t, app_from_len, app_upto, app_term, app_commit,
+    work) — the five shipped-batch rows plus the (1, 1) leader-work
+    delta."""
+    np_ = role.shape[1]
+    kernel = functools.partial(_leader_fanout_kernel, msg_budget=msg_budget,
+                               max_ship=max_ship,
+                               entries_per_msg=entries_per_msg)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM)
+    row = pl.BlockSpec((1, np_), lambda i: (0, 0))
+    mat = pl.BlockSpec((np_, np_), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[scalar] * 6 + [row] * 10 + [mat],
+        out_specs=[row] * 5 + [
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM)],
+        out_shape=[jax.ShapeDtypeStruct((1, np_), jnp.int32)] * 5 +
+                  [jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(lid, has_leader, tick, ldr_len, ldr_term, ldr_commit,
+      role, alive, warn_timer, sec_of, match_len,
+      app_arrive_t, app_from_len, app_upto, app_term, app_commit, rtt)

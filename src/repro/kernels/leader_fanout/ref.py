@@ -1,0 +1,55 @@
+"""Reference twin of the leader fan-out kernel — the gather/scatter HLO
+formulation lifted verbatim from `core/step.py:leader_step`'s ship
+section ("THE leader bottleneck").  Matches the kernel contract at the
+*unpadded* op signature (ops.py owns padding).  Kernel == ref
+**bit-identically** is the layer's test invariant (DESIGN.md §8,
+`tests/test_wide_kernels.py`) — int32 in, int32 out, no tolerance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.state import CANDIDATE, FOLLOWER, SECRETARY
+
+
+def leader_fanout_ref(role, alive, warn_timer, sec_of, match_len,
+                      app_arrive_t, app_from_len, app_upto, app_term,
+                      app_commit, rtt, lid_c, has_leader, tick,
+                      ldr_len, ldr_term, ldr_commit, *,
+                      msg_budget: int, max_ship: int, entries_per_msg: int):
+    """Budgeted AppendEntries fan-out (XLA cumsum/gather form).
+
+    Per-node vectors (N,); rtt (N, N); scalars lid_c (clamped leader
+    id), has_leader (bool), tick, and the leader's log length / term /
+    commit length.  Returns (app_arrive_t, app_from_len, app_upto,
+    app_term, app_commit, work) with `work` the scalar leader-work
+    delta — the tuple `step.leader_step` consumes."""
+    N = role.shape[0]
+    sec = sec_of
+    sec_alive = (sec >= 0) & alive[jnp.maximum(sec, 0)] & \
+        (role[jnp.maximum(sec, 0)] == SECRETARY) & \
+        (warn_timer[jnp.maximum(sec, 0)] < 0)
+    relay = jnp.where(sec_alive, sec, lid_c)
+    is_target = ((role == FOLLOWER) | (role == CANDIDATE)) & alive & \
+        (jnp.arange(N) != lid_c)
+    lat = rtt[lid_c, relay] * (relay != lid_c) + rtt[relay, jnp.arange(N)]
+    arrive = tick + lat
+    want = has_leader & is_target & (app_arrive_t < 0)
+    direct = want & (relay == lid_c)
+    relayed = want & (relay != lid_c)
+    n_sec_msgs = jnp.sum(jnp.any(relayed) &
+                         ((role == SECRETARY) & alive & (warn_timer < 0)))
+    budget = jnp.maximum(jnp.int32(msg_budget) - n_sec_msgs, 0)
+    pending = jnp.maximum(ldr_len - match_len, 0)
+    batch_cost = 1 + jnp.minimum(pending, max_ship) // entries_per_msg
+    rank = jnp.cumsum(jnp.where(direct, batch_cost, 0))
+    ship = relayed | (direct & (rank <= budget))
+    out_arrive = jnp.where(ship, arrive, app_arrive_t)
+    out_from = jnp.where(ship, match_len, app_from_len)
+    out_upto = jnp.where(ship, jnp.minimum(ldr_len, match_len + max_ship),
+                         app_upto)
+    out_term = jnp.where(ship, ldr_term, app_term)
+    out_commit = jnp.where(ship, ldr_commit, app_commit)
+    work = jnp.sum(ship & direct) + n_sec_msgs
+    return (out_arrive, out_from, out_upto, out_term, out_commit,
+            work.astype(jnp.int32))

@@ -39,12 +39,16 @@ def test_design_section_references_resolve():
 
 def test_kernel_layer_is_cross_referenced():
     """The §8 kernel-layer contract must be cited from both sides of the
-    boundary it documents: the tick that dispatches on `backend` and the
-    kernel package that implements it."""
+    boundary it documents: the tick/fleet code that dispatches on
+    `backend` and every kernel family that implements it (the PR-9
+    widening makes this four packages, not one)."""
     refs = _references()
     cited_from = set(refs.get("8", []))
     assert any("core/step.py" in f for f in cited_from), cited_from
-    assert any("kernels/raft_tick" in f for f in cited_from), cited_from
+    assert any("core/fleet.py" in f for f in cited_from), cited_from
+    for family in ("kernels/raft_tick", "kernels/leader_fanout",
+                   "kernels/group_digest", "kernels/ae_sync"):
+        assert any(family in f for f in cited_from), (family, cited_from)
 
 
 def test_market_contract_is_cross_referenced():

@@ -1,0 +1,449 @@
+"""The widened kernel layer (DESIGN.md §8): the PR-9 Pallas families —
+leader fan-out, grouped digest reduction, anti-entropy sync — are each
+**bit-identical** to their frozen `ref.py` twins (the XLA formulations
+lifted from `core/step.py` / `core/fleet.py`) under interpret mode,
+across dead-slot masks, degenerate windows, ragged/empty groups, and
+the warned-secretary handoff; `backend="auto"` resolves per platform
+and threads through `tick` / `BWRaftSim` / `FleetSim.from_sweep`
+without costing the one-compile / digest-only-D2H contract (§7/§7.1).
+
+The randomized sweeps run through hypothesis when it is installed
+(requirements-dev.txt) and fall back to fixed-seed sweeps otherwise, so
+the bit-identity invariant is enforced either way."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fleet as fleet_mod
+from repro.core import state as SM
+from repro.core import step as step_mod
+from repro.core.cluster_config import ClusterConfig, SiteConfig
+from repro.core.fleet import FleetSim
+from repro.core.runtime import BWRaftSim, make_cfg_arrays
+from repro.core.state import pytree_nbytes
+from repro.kernels import BACKENDS, resolve_backend
+from repro.kernels.ae_sync import ops as ae_ops
+from repro.kernels.ae_sync import ref as ae_ref
+from repro.kernels.group_digest import ops as gd_ops
+from repro.kernels.group_digest import ref as gd_ref
+from repro.kernels.leader_fanout import ops as lf_ops
+from repro.kernels.leader_fanout import ref as lf_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+u2i = lambda v: jax.lax.bitcast_convert_type(
+    jnp.asarray(v, jnp.uint32), jnp.int32)
+
+
+# --------------------------------------------------------------------- #
+# case builders / checkers
+# --------------------------------------------------------------------- #
+def _fanout_case(N, L, seed, *, has_leader=True, alive_frac=0.8,
+                 pending_frac=0.6, warn_frac=0.3):
+    rng = np.random.default_rng(seed)
+    mk = lambda lo, hi, sh: jnp.asarray(rng.integers(lo, hi, sh),
+                                        jnp.int32)
+    lid = int(rng.integers(0, N))
+    warn = np.where(rng.random(N) < warn_frac, rng.integers(0, 5, N), -1)
+    arrive = np.where(rng.random(N) < pending_frac, -1,
+                      rng.integers(0, 40, N))
+    return dict(
+        role=mk(0, 6, (N,)),
+        alive=jnp.asarray(rng.random(N) < alive_frac),
+        warn_timer=jnp.asarray(warn, jnp.int32),
+        sec_of=mk(-1, N, (N,)), match_len=mk(0, L + 1, (N,)),
+        app_arrive_t=jnp.asarray(arrive, jnp.int32),
+        app_from_len=mk(0, L + 1, (N,)), app_upto=mk(0, L + 1, (N,)),
+        app_term=mk(0, 4, (N,)), app_commit=mk(0, L + 1, (N,)),
+        rtt=mk(1, 20, (N, N)), lid_c=jnp.int32(lid),
+        has_leader=jnp.asarray(has_leader),
+        tick=jnp.int32(int(rng.integers(0, 100))),
+        ldr_len=jnp.int32(int(rng.integers(0, L + 1))),
+        ldr_term=mk(0, 4, ()), ldr_commit=mk(0, L + 1, ()))
+
+
+_FANOUT_OUT = ("app_arrive_t", "app_from_len", "app_upto", "app_term",
+               "app_commit", "work")
+
+
+def _check_fanout(case, msg_budget, max_ship, entries_per_msg):
+    kw = dict(msg_budget=msg_budget, max_ship=max_ship,
+              entries_per_msg=entries_per_msg)
+    got = lf_ops.leader_fanout(*case.values(), **kw)
+    want = lf_ref.leader_fanout_ref(*case.values(), **kw)
+    for name, g, w in zip(_FANOUT_OUT, got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), \
+            (name, msg_budget, max_ship, entries_per_msg)
+
+
+def _group_case(B, G, Fi, Ff, seed, *, dropped_frac=0.2):
+    rng = np.random.default_rng(seed)
+    gids = np.where(rng.random(B) < dropped_frac, G,
+                    rng.integers(0, max(G, 1), B))
+    return (jnp.asarray(gids, jnp.int32),
+            jnp.asarray(rng.integers(-50, 2**20, (B, Fi)), jnp.int32),
+            jnp.asarray(rng.standard_normal((B, Ff)) * 100.0,
+                        jnp.float32))
+
+
+def _check_group(gids, int_mat, flt_mat, G):
+    got = gd_ops.group_reduce(gids, int_mat, flt_mat, n_groups=G)
+    want = gd_ref.group_reduce_ref(gids, int_mat, flt_mat, n_groups=G)
+    for name, g, w in zip(("int_sum", "flt_sum", "flt_max"), got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (name, G)
+
+
+def _ae_case(O, N, S, seed, *, voter_frac=0.6, alive_frac=0.8,
+             interval=4):
+    rng = np.random.default_rng(seed)
+    mk = lambda lo, hi, sh: jnp.asarray(rng.integers(lo, hi, sh),
+                                        jnp.int32)
+    u32 = lambda sh: jnp.asarray(
+        rng.integers(0, 2**32, sh, dtype=np.uint32))
+    return dict(
+        dobs_alive=mk(0, 2, (O,)), dobs_fol=mk(-1, N, (O,)),
+        dobs_applied=mk(0, 64, (O,)), dobs_term=mk(0, 4, (O,)),
+        dobs_digest=u32((O,)), dobs_synced_t=mk(-1, 40, (O,)),
+        ae_phase=mk(0, max(interval, 1) + 1, (O,)),
+        dobs_site=mk(0, S, (O,)),
+        alive=jnp.asarray(rng.random(N) < alive_frac),
+        is_voter=jnp.asarray(rng.random(N) < voter_frac),
+        applied_len=mk(0, 65, (N,)), term=mk(0, 4, (N,)),
+        applied_digest=u32((N,)), site=mk(0, S, (N,)),
+        site_rtt=mk(1, 20, (S, S)),
+        tick=jnp.int32(int(rng.integers(0, 100))),
+        ae_interval=jnp.int32(interval))
+
+
+_AE_OUT = ("dobs_applied", "dobs_term", "dobs_digest", "dobs_synced_t")
+
+
+def _check_ae(case):
+    got = ae_ops.ae_sync(*case.values())
+    c = dict(case, dobs_digest=u2i(case["dobs_digest"]),
+             applied_digest=u2i(case["applied_digest"]))
+    want = ae_ref.ae_sync_ref(*c.values())
+    want = (want[0], want[1],
+            jax.lax.bitcast_convert_type(want[2], jnp.uint32), want[3])
+    for name, g, w in zip(_AE_OUT, got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), name
+
+
+# --------------------------------------------------------------------- #
+# property tests: hypothesis when available, fixed-seed sweep otherwise
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(N=st.integers(1, 24), L=st.integers(1, 128),
+           msg_budget=st.integers(0, 20), max_ship=st.integers(1, 64),
+           entries_per_msg=st.integers(1, 64), seed=st.integers(0, 2**31),
+           has_leader=st.booleans(), alive_frac=st.floats(0.0, 1.0))
+    def test_leader_fanout_matches_ref(N, L, msg_budget, max_ship,
+                                       entries_per_msg, seed, has_leader,
+                                       alive_frac):
+        """Fused fan-out == cumsum/gather twin under arbitrary roles,
+        secretary wiring, warn timers, and dead-slot masks."""
+        case = _fanout_case(N, L, seed, has_leader=has_leader,
+                            alive_frac=alive_frac)
+        _check_fanout(case, msg_budget, max_ship, entries_per_msg)
+
+    @settings(max_examples=25, deadline=None)
+    @given(B=st.integers(1, 48), G=st.integers(1, 10),
+           Fi=st.integers(1, 150), Ff=st.integers(1, 4),
+           seed=st.integers(0, 2**31), dropped=st.floats(0.0, 1.0))
+    def test_group_reduce_matches_ref(B, G, Fi, Ff, seed, dropped):
+        """Blockwise masked reduction == segment_sum/segment_max twins —
+        bit-exact float sums (ascending member order) and the -inf
+        empty-group max identity, any ragged/dropped mix."""
+        _check_group(*_group_case(B, G, Fi, Ff, seed,
+                                  dropped_frac=dropped), G)
+
+    @settings(max_examples=25, deadline=None)
+    @given(O=st.integers(1, 12), N=st.integers(1, 24),
+           S=st.integers(1, 4), seed=st.integers(0, 2**31),
+           voter_frac=st.floats(0.0, 1.0), interval=st.integers(0, 8))
+    def test_ae_sync_matches_ref(O, N, S, seed, voter_frac, interval):
+        """Fused anti-entropy round == argmax/gather twin under
+        arbitrary wiring, dead sources, and traced cadence (including
+        interval=0, which clamps to 1 on both sides)."""
+        _check_ae(_ae_case(O, N, S, seed, voter_frac=voter_frac,
+                           interval=interval))
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_leader_fanout_matches_ref(seed):
+        rng = np.random.default_rng(400 + seed)
+        case = _fanout_case(int(rng.integers(1, 24)),
+                            int(rng.integers(1, 128)), seed,
+                            has_leader=bool(rng.integers(0, 2)),
+                            alive_frac=float(rng.random()))
+        _check_fanout(case, int(rng.integers(0, 20)),
+                      int(rng.integers(1, 64)), int(rng.integers(1, 64)))
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_group_reduce_matches_ref(seed):
+        rng = np.random.default_rng(500 + seed)
+        G = int(rng.integers(1, 10))
+        _check_group(*_group_case(int(rng.integers(1, 48)), G,
+                                  int(rng.integers(1, 150)),
+                                  int(rng.integers(1, 4)), seed,
+                                  dropped_frac=float(rng.random())), G)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_ae_sync_matches_ref(seed):
+        rng = np.random.default_rng(600 + seed)
+        _check_ae(_ae_case(int(rng.integers(1, 12)),
+                           int(rng.integers(1, 24)),
+                           int(rng.integers(1, 4)), seed,
+                           voter_frac=float(rng.random()),
+                           interval=int(rng.integers(0, 8))))
+
+
+# --------------------------------------------------------------------- #
+# directed degenerate cases
+# --------------------------------------------------------------------- #
+def test_leader_fanout_warned_secretary_hands_off():
+    """A warned secretary stops relaying NOW (DESIGN.md §12): followers
+    wired to it fall back to direct leader fan-out, unwarned relays keep
+    relaying — and the kernel agrees with the ref on both."""
+    N = 6
+    z = lambda v: jnp.asarray(v, jnp.int32)
+    case = dict(
+        role=z([2, 3, 3, 0, 0, 0]),            # leader, 2 secs, 3 fols
+        alive=jnp.asarray([True] * 6),
+        warn_timer=z([-1, 3, -1, -1, -1, -1]),  # sec 1 warned, sec 2 not
+        sec_of=z([-1, -1, -1, 1, 2, -1]),
+        match_len=z([0, 0, 0, 4, 8, 2]),
+        app_arrive_t=z([-1] * 6), app_from_len=z([0] * 6),
+        app_upto=z([0] * 6), app_term=z([0] * 6), app_commit=z([0] * 6),
+        rtt=jnp.full((N, N), 3, jnp.int32), lid_c=jnp.int32(0),
+        has_leader=jnp.asarray(True), tick=jnp.int32(10),
+        ldr_len=jnp.int32(32), ldr_term=jnp.int32(2),
+        ldr_commit=jnp.int32(16))
+    kw = dict(msg_budget=16, max_ship=16, entries_per_msg=8)
+    got = lf_ops.leader_fanout(*case.values(), **kw)
+    _check_fanout(case, **kw)
+    arrive = np.asarray(got[0])
+    assert arrive[3] >= 0 and arrive[4] >= 0 and arrive[5] >= 0
+    # follower 4 relays (two rtt hops), followers 3/5 go direct (one)
+    assert arrive[4] == 10 + 6 and arrive[3] == arrive[5] == 10 + 3
+
+
+def test_leader_fanout_no_leader_and_budget_zero():
+    """has_leader=False passes every app_* row through untouched;
+    budget 0 still ships relayed batches (secretaries carry them) but
+    cuts every direct target."""
+    case = _fanout_case(8, 32, 11, has_leader=False)
+    got = lf_ops.leader_fanout(*case.values(), msg_budget=4, max_ship=8,
+                               entries_per_msg=4)
+    for name, g in zip(_FANOUT_OUT, got):
+        if name != "work":
+            assert np.array_equal(np.asarray(g),
+                                  np.asarray(case[name])), name
+    assert int(got[5]) == 0
+    for seed in range(4):
+        case = _fanout_case(10, 32, 20 + seed, warn_frac=0.0)
+        _check_fanout(case, 0, 8, 4)
+
+
+def test_group_reduce_empty_and_all_dropped():
+    """All members dropped -> every group is empty: 0 sums, -inf max —
+    the segment-op identities; a lone member lands alone."""
+    gids, int_mat, flt_mat = _group_case(6, 3, 5, 2, 0)
+    gids = jnp.full_like(gids, 3)                 # everyone dropped
+    _check_group(gids, int_mat, flt_mat, 3)
+    g_int, g_sum, g_max = gd_ops.group_reduce(gids, int_mat, flt_mat,
+                                              n_groups=3)
+    assert not np.asarray(g_int).any() and not np.asarray(g_sum).any()
+    assert (np.asarray(g_max) == -np.inf).all()
+    _check_group(jnp.asarray([0], jnp.int32),
+                 jnp.ones((1, 1), jnp.int32),
+                 jnp.full((1, 1), 2.5, jnp.float32), 1)
+
+
+def test_group_reduce_float_order_is_scatter_add_order():
+    """One big group: the kernel's ascending accumulation reproduces
+    segment_sum's float result bit-for-bit (not just approximately)."""
+    rng = np.random.default_rng(42)
+    B = 37
+    flt = jnp.asarray(rng.standard_normal((B, 3)) * 1e3, jnp.float32)
+    gids = jnp.zeros((B,), jnp.int32)
+    got = gd_ops.group_reduce(gids, jnp.zeros((B, 1), jnp.int32), flt,
+                              n_groups=1)[1]
+    want = jax.ops.segment_sum(flt, gids, num_segments=1)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ae_sync_no_voter_and_dead_observers():
+    """Zero live voters -> nothing is due, every dobs_* row passes
+    through; dead observer slots never adopt even when due."""
+    case = _ae_case(6, 8, 2, 5)
+    case["is_voter"] = jnp.asarray([False] * 8)
+    got = ae_ops.ae_sync(*case.values())
+    _check_ae(case)
+    for name, g in zip(_AE_OUT, got):
+        assert np.array_equal(np.asarray(g), np.asarray(case[name])), name
+    case = _ae_case(6, 8, 2, 6, interval=1)       # everyone due...
+    case["dobs_alive"] = jnp.zeros((6,), jnp.int32)   # ...but dead slots
+    got = ae_ops.ae_sync(*case.values())
+    _check_ae(case)
+    for name, g in zip(_AE_OUT, got):
+        assert np.array_equal(np.asarray(g), np.asarray(case[name])), name
+
+
+def test_ae_sync_monotone_adoption():
+    """An observer ahead of its source keeps its applied index (and the
+    digest/term that go with it) — adoption never regresses."""
+    case = _ae_case(4, 6, 2, 7, interval=1)
+    case["dobs_alive"] = jnp.ones((4,), jnp.int32)
+    case["dobs_applied"] = jnp.full((4,), 1000, jnp.int32)
+    case["applied_len"] = jnp.zeros((6,), jnp.int32)
+    got = ae_ops.ae_sync(*case.values())
+    _check_ae(case)
+    assert np.array_equal(np.asarray(got[0]),
+                          np.asarray(case["dobs_applied"]))
+    assert np.array_equal(np.asarray(got[2]),
+                          np.asarray(case["dobs_digest"]))
+
+
+def test_wide_ops_batch_under_vmap():
+    """vmapped wide ops over a fleet axis == per-member ref calls — the
+    form the `FleetSim(backend="pallas")` epoch body exercises."""
+    cases = [_fanout_case(9, 48, s) for s in range(3)]
+    batched = {k: jnp.stack([c[k] for c in cases]) for k in cases[0]}
+    kw = dict(msg_budget=6, max_ship=16, entries_per_msg=8)
+    got = jax.vmap(lambda c: lf_ops.leader_fanout(
+        c["role"], c["alive"], c["warn_timer"], c["sec_of"],
+        c["match_len"], c["app_arrive_t"], c["app_from_len"],
+        c["app_upto"], c["app_term"], c["app_commit"], c["rtt"],
+        c["lid_c"], c["has_leader"], c["tick"], c["ldr_len"],
+        c["ldr_term"], c["ldr_commit"], **kw))(batched)
+    for b, case in enumerate(cases):
+        want = lf_ref.leader_fanout_ref(*case.values(), **kw)
+        for name, g, w in zip(_FANOUT_OUT, got, want):
+            assert np.array_equal(np.asarray(g[b]), np.asarray(w)), \
+                (b, name)
+
+    groups = [_group_case(16, 4, 7, 3, s) for s in range(3)]
+    bg = tuple(jnp.stack([c[i] for c in groups]) for i in range(3))
+    got = jax.vmap(
+        lambda g, i, f: gd_ops.group_reduce(g, i, f, n_groups=4))(*bg)
+    for b, (gids, int_mat, flt_mat) in enumerate(groups):
+        want = gd_ref.group_reduce_ref(gids, int_mat, flt_mat, n_groups=4)
+        for g, w in zip(got, want):
+            assert np.array_equal(np.asarray(g[b]), np.asarray(w)), b
+
+
+def test_fleet_group_digest_pallas_equals_xla():
+    """`fleet._group_digest` on the kernel == the segment-op path, on a
+    synthetic digest with ragged groups, dropped members, and an empty
+    group — every leaf, exact (the §9 Multi-Raft rollup)."""
+    rng = np.random.default_rng(9)
+    B, G, H = 11, 4, 32
+    digest = {}
+    for k in fleet_mod._GROUP_SUM_KEYS:
+        if k.endswith("_hist"):
+            digest[k] = jnp.asarray(rng.integers(0, 50, (B, H)), jnp.int32)
+        elif k in fleet_mod._GROUP_FLOAT_KEYS:
+            digest[k] = jnp.asarray(rng.standard_normal(B) * 40.0,
+                                    jnp.float32)
+        else:
+            digest[k] = jnp.asarray(rng.integers(0, 100, B), jnp.int32)
+    digest["read_lat_max"] = jnp.asarray(rng.standard_normal(B) * 9.0,
+                                         jnp.float32)
+    gids = jnp.asarray([0, 0, 1, 4, 1, 2, 2, 2, 4, 0, 1], jnp.int32)
+    # group 3 is empty; id 4 == G marks the two dropped members
+    x = fleet_mod._group_digest(digest, gids, G, backend="xla")
+    p = fleet_mod._group_digest(digest, gids, G, backend="pallas")
+    assert set(x) == set(p)
+    for k in x:
+        assert np.array_equal(np.asarray(x[k]), np.asarray(p[k])), k
+
+
+# --------------------------------------------------------------------- #
+# end-to-end: observers in the loop + backend="auto" plumbing
+# --------------------------------------------------------------------- #
+def _small_cluster(name="wtiny", followers=(2, 1), max_log=256):
+    sites = tuple(
+        SiteConfig(f"{name}-s{i}", followers=f, rtt_intra=1,
+                   rtt_inter=6 + 2 * i, on_demand_price=0.0416,
+                   spot_price_mean=0.0125)
+        for i, f in enumerate(followers))
+    return ClusterConfig(name=name, sites=sites, max_log=max_log,
+                         key_space=64, max_secretaries=2,
+                         max_observers=4, period_ticks=40)
+
+
+def test_observer_trajectory_pallas_equals_xla():
+    """With digest-tier observers provisioned, a 60-tick pallas scan ==
+    the xla scan on EVERY state leaf — the anti-entropy kernel rides
+    the real tick, not just its ref twin."""
+    cfg = _small_cluster()
+    static = SM.build_static(cfg, n_obs_digest=3)
+    cfg_c = make_cfg_arrays(cfg, write_rate=6.0, read_rate=12.0, phi=0.05,
+                            n_observers=3, ae_interval=3)
+    state0 = SM.init_state(cfg, static)
+    rngs = jax.random.split(jax.random.PRNGKey(5), 60)
+
+    def run(backend):
+        def body(c, r):
+            s, _ = step_mod.tick(c, static, cfg_c, r, backend=backend)
+            return s, None
+        out, _ = jax.jit(lambda s: jax.lax.scan(body, s, rngs))(state0)
+        return jax.tree.map(np.asarray, out)
+
+    x, p = run("xla"), run("pallas")
+    assert any(k.startswith("dobs_") for k in x)   # observers really ran
+    for k in x:
+        assert np.array_equal(x[k], p[k]), f"state[{k}] diverged"
+
+
+def test_backend_auto_resolution():
+    """'auto' resolves per platform (pallas iff TPU), explicit choices
+    pass through, junk is rejected — and the resolution lands on the
+    sim/fleet objects."""
+    expect = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert resolve_backend("auto") == expect
+    assert resolve_backend("xla") == "xla"
+    assert resolve_backend("pallas") == "pallas"
+    assert set(BACKENDS) == {"auto", "xla", "pallas"}
+    with pytest.raises(AssertionError):
+        resolve_backend("cuda")
+    cfg = _small_cluster("wauto", followers=(1, 1))
+    sim = BWRaftSim(cfg, write_rate=4.0, read_rate=8.0, seed=0,
+                    manage_resources=False, backend="auto")
+    assert sim.backend == expect
+    fleet = FleetSim.from_sweep(cfg, {"phi": [0.0, 0.05]},
+                                write_rate=4.0, read_rate=8.0, seed=0,
+                                backend="auto")
+    assert fleet.backend == expect
+
+
+def test_auto_backend_sweep_b32_single_compile_digest_d2h():
+    """The ISSUE-9 acceptance sweep: 32 clusters on backend="auto" cost
+    ONE epoch compilation and one dispatch per epoch, and per-epoch D2H
+    stays digest-sized (§7.1) — auto resolution shares the cache with
+    its explicit resolution."""
+    cfg = _small_cluster("wb32", followers=(1, 1))
+    fleet = FleetSim.from_sweep(
+        cfg, {"phi": [0.0, 0.01, 0.02, 0.05, 0.08, 0.1, 0.15, 0.2],
+              "write_rate": [4.0, 8.0, 16.0, 32.0]},
+        read_rate=16.0, seed=0, backend="auto")
+    assert fleet.shapes.B == 32
+    fleet.run(1)
+    assert fleet.compile_count == 1, fleet.compile_count
+    # digest-only D2H ceiling: a few KB per cluster per epoch, well
+    # under the device-resident state (which never crosses)
+    assert fleet.d2h_bytes < fleet.shapes.B * 4096, fleet.d2h_bytes
+    assert fleet.d2h_bytes < pytree_nbytes(fleet.state) / 10, \
+        (fleet.d2h_bytes, pytree_nbytes(fleet.state))
+    # auto and its resolution hit the same compiled program
+    resolved = FleetSim.from_sweep(
+        cfg, {"phi": [0.0, 0.01, 0.02, 0.05, 0.08, 0.1, 0.15, 0.2],
+              "write_rate": [4.0, 8.0, 16.0, 32.0]},
+        read_rate=16.0, seed=0, backend=resolve_backend("auto"))
+    assert resolved._epoch_fn is fleet._epoch_fn
