@@ -15,6 +15,8 @@ emits `BENCH_fleet.json`.
 """
 from __future__ import annotations
 
+import json
+import math
 import time
 from typing import Callable, List, Tuple
 
@@ -43,6 +45,67 @@ def timed(fn: Callable, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def validate_bench_schema(doc, *, name: str = "BENCH") -> List[str]:
+    """Shared schema check for every committed ``BENCH_*.json``
+    (DESIGN.md §14): returns a list of problems, empty when valid.
+
+    The contract all seven benchmark emitters share:
+      - top level is a dict with a dict-valued ``config`` block (the
+        reproduction recipe — cluster name, epochs, smoke flag, ...);
+      - when a ``ceilings`` block is present it is a non-empty dict of
+        numeric gates (the values the emitter exits 1 against);
+      - every ``interpreted`` flag (the Pallas-interpret escape hatch,
+        DESIGN.md §8) is a bool — a truthy string would silently pass
+        CI on an interpreter fallback;
+      - no float anywhere in the tree is infinite.  NaN is allowed: it
+        is the repo-wide in-band "no samples" value (the NaN policy of
+        `core/multiraft.py` — an empty latency histogram reports NaN,
+        not 0), but an infinity is always an emitter bug (an unguarded
+        division), never a domain value.
+    """
+    problems: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"{name}: top level must be a dict, got {type(doc).__name__}"]
+    if not isinstance(doc.get("config"), dict):
+        problems.append(f"{name}: missing dict-valued 'config' block")
+    if "ceilings" in doc:
+        ceil = doc["ceilings"]
+        if not isinstance(ceil, dict) or not ceil:
+            problems.append(f"{name}: 'ceilings' must be a non-empty dict")
+        else:
+            for k, v in ceil.items():
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    problems.append(
+                        f"{name}: ceiling {k!r} must be numeric, got {v!r}")
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "interpreted" and not isinstance(v, bool):
+                    problems.append(
+                        f"{name}: {path}.{k} must be a bool, got {v!r}")
+                walk(v, f"{path}.{k}")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}[{i}]")
+        elif isinstance(node, float) and math.isinf(node):
+            problems.append(f"{name}: infinite float at {path}")
+
+    walk(doc, name)
+    return problems
+
+
+def validate_bench_file(path) -> List[str]:
+    """`validate_bench_schema` over a committed BENCH file; unparseable
+    JSON is itself a schema problem."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"{path}: unreadable BENCH json ({exc})"]
+    return validate_bench_schema(doc, name=str(path))
 
 
 def tick_ms(ticks: float) -> float:

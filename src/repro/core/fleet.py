@@ -71,6 +71,8 @@ from repro.core.runtime import (ClusterController, CountingJit, EpochReport,
 from repro.core.state import pytree_nbytes
 from repro.kernels import resolve_backend
 from repro.kernels.group_digest import ops as gd_ops
+from repro.trace import export as trace_export
+from repro.trace import ring as trace_ring
 
 # static scalars every member must agree on (baked into the compiled
 # program; per-node capacities from state.build_static)
@@ -86,7 +88,8 @@ _SWEEP_AXES = ("mode", "write_rate", "read_rate", "phi", "seed",
                "manage_resources", "spot_price_vol", "budget_per_period",
                "market", "trace", "arrivals", "keypop",
                "warning_ticks", "bid_policy", "faults", "bid_on_trace",
-               "n_observers", "staleness_bound", "ae_interval")
+               "n_observers", "staleness_bound", "ae_interval",
+               "trace_on")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +158,15 @@ class MemberSpec:
     n_observers: int = 0
     staleness_bound: int = 16
     ae_interval: int = 4
+    # flight recorder (DESIGN.md §14): `trace_on`/`trace_mask` are cfg_c
+    # data (flips never recompile; a traced/untraced mix is one batched
+    # program); `trace_capacity` is the per-member ring depth — members
+    # pad to the fleet-wide max, the one compile-key trace knob.  The
+    # mask is a length-NCLASS bool tuple (tuple, not array, so the
+    # frozen spec stays hashable); None = all classes.
+    trace_on: bool = False
+    trace_mask: Optional[Tuple[bool, ...]] = None
+    trace_capacity: int = trace_ring.DEFAULT_CAPACITY
 
     @property
     def manage(self) -> bool:
@@ -170,6 +182,7 @@ class FleetShapes:
     K: int   # KV key space, padded
     T: int   # period_ticks (must be equal across members)
     O: int = 0   # digest-tier observer slots, padded (DESIGN.md §13)
+    C: int = trace_ring.DEFAULT_CAPACITY  # trace ring depth (§14), padded
 
 
 # (kind, shapes, shared scalars[, E]) -> CountingJit
@@ -190,7 +203,7 @@ _GROUP_SUM_KEYS = ("write_lat_hist", "read_lat_hist", "reads_arrived",
                    "writes_arrived", "reads_served", "read_lat_sum",
                    "cost_delta", "killed", "no_leader_ticks",
                    "leader_changes", "cross_arrived", "two_pc_prepares",
-                   "two_pc_aborts")
+                   "two_pc_aborts", "trace_metrics")
 
 
 # float digest leaves: summed (order-sensitive — the kernel accumulates
@@ -374,7 +387,8 @@ class _Member:
             cfg, pad_nodes=self.pads["pad_nodes"],
             pad_sites=self.pads["pad_sites"],
             n_obs_digest=spec.n_observers,
-            pad_obs=self.pads["pad_observers"])
+            pad_obs=self.pads["pad_observers"],
+            trace_capacity=shapes.C)
         self.state0 = state_mod.init_state(
             cfg, self.static, pad_log=self.pads["pad_log"],
             pad_keys=self.pads["pad_keys"])
@@ -401,7 +415,8 @@ class _Member:
             n_observers=spec.n_observers,
             pad_observers=self.pads["pad_observers"],
             staleness_bound=spec.staleness_bound,
-            ae_interval=spec.ae_interval)
+            ae_interval=spec.ae_interval,
+            trace_on=spec.trace_on, trace_mask=spec.trace_mask)
         self.rng = jax.random.PRNGKey(spec.seed)
         self.controller = ClusterController(cfg, self.static,
                                             seed=spec.seed)
@@ -458,6 +473,7 @@ class FleetSim:
             K=max(s.cfg.key_space for s in specs),
             T=periods.pop(),
             O=max(s.n_observers for s in specs),
+            C=max(s.trace_capacity for s in specs),
         )
         # fleet-shared market-trace width (DESIGN.md §10): every member's
         # cfg_c trace arrays stack to (B, S, Tt); shorter traces time-wrap
@@ -554,6 +570,12 @@ class FleetSim:
         # pipeline only; stays None on the host path.
         self.last_digest: Optional[Dict] = None
         self.last_group_digest: Optional[Dict] = None
+        # flight recorder (DESIGN.md §14): one incremental ring reader
+        # per member; `run_epoch` auto-drains whenever any member's
+        # trace_on is set, appending typed events to `trace_events`
+        self._trace_cursors = [trace_export.DrainCursor(member=i)
+                               for i in range(len(self.members))]
+        self.trace_events: List[trace_export.TraceEvent] = []
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -649,6 +671,8 @@ class FleetSim:
             self.last_group_digest = dg.pop("group")
             self._append_group_reports(self.last_group_digest)
         self.last_digest = dg
+        if bool(np.asarray(self._cfg_c["trace_on"]).any()):
+            self.drain_trace()
 
         managed_rows: List[int] = []
         managed_vals: List[Tuple] = []
@@ -700,6 +724,20 @@ class FleetSim:
         timelines, and compaction is a separate post-hoc dispatch."""
         rngs = self._split_epoch_rngs()
         cost_before = np.asarray(self._state["cost_accrued"])
+        # pre-epoch leader terms, so build_report's np.diff counts a
+        # leader change on the FIRST tick of the epoch too — the host
+        # twin of the digest accumulator's seeded prev_leader_term
+        # (DESIGN.md §14, first-tick blindness fix)
+        role0 = np.asarray(self._state["role"])
+        alive0 = np.asarray(self._state["alive"])
+        term0 = np.asarray(self._state["term"])
+        self.d2h_bytes += role0.nbytes + alive0.nbytes + term0.nbytes
+        ids = np.arange(role0.shape[1])
+        lid0 = np.where((role0 == state_mod.LEADER) & alive0,
+                        ids[None, :], -1).max(axis=1)
+        lt0 = np.where(lid0 >= 0,
+                       term0[np.arange(role0.shape[0]),
+                             np.maximum(lid0, 0)], -1)
 
         self._state, ms = self._epoch_fn(self._state, rngs, self._bstatic,
                                          self._cfg_c)
@@ -717,7 +755,8 @@ class FleetSim:
         for i, m in enumerate(self.members):
             sti = {k: v[i] for k, v in st_np.items()}
             msi = {k: v[i] for k, v in ms_np.items()}
-            rep = build_report(m.epoch, sti, msi, float(cost_before[i]))
+            rep = build_report(m.epoch, sti, msi, float(cost_before[i]),
+                               leader_term0=int(lt0[i]))
             if m.manage:
                 dec = m.controller.decide(
                     rep,
@@ -743,7 +782,49 @@ class FleetSim:
             self._state,
             role=jnp.asarray(role), alive=jnp.asarray(alive),
             sec_of=jnp.asarray(sec_of), obs_of=jnp.asarray(obs_of)))
+        if bool(np.asarray(self._cfg_c["trace_on"]).any()):
+            self.drain_trace()
         return out
+
+    # ------------------------------------------------------------------ #
+    def set_trace(self, on: Optional[bool] = None,
+                  mask: Optional[Sequence[bool]] = None,
+                  members: Optional[Sequence[int]] = None) -> None:
+        """Flip the flight recorder for `members` (default: all) — a
+        cfg_c row write at a fixed shape, so toggling mid-run NEVER
+        recompiles the batched program (DESIGN.md §14)."""
+        idx = jnp.asarray(
+            list(range(len(self.members))) if members is None
+            else list(members), jnp.int32)
+        if on is not None:
+            self._cfg_c["trace_on"] = \
+                self._cfg_c["trace_on"].at[idx].set(bool(on))
+        if mask is not None:
+            m = jnp.asarray(mask, bool)
+            assert m.shape == (trace_ring.NCLASS,), \
+                f"trace mask must be ({trace_ring.NCLASS},), got {m.shape}"
+            self._cfg_c["trace_mask"] = \
+                self._cfg_c["trace_mask"].at[idx].set(m)
+
+    def drain_trace(self) -> List[trace_export.TraceEvent]:
+        """One D2H fetch of every member's ring + cursors; returns (and
+        appends to `trace_events`) the events since the last drain, in
+        per-member emission order (DESIGN.md §14)."""
+        ev = np.asarray(self._state["trace_ev"])
+        pos = np.asarray(self._state["trace_pos"])
+        emit = np.asarray(self._state["trace_emit"])
+        self.d2h_bytes += ev.nbytes + pos.nbytes + emit.nbytes
+        new: List[trace_export.TraceEvent] = []
+        for i, cur in enumerate(self._trace_cursors):
+            new.extend(cur.drain({"trace_ev": ev[i], "trace_pos": pos[i],
+                                  "trace_emit": emit[i]}))
+        self.trace_events.extend(new)
+        return new
+
+    @property
+    def events_dropped(self) -> List[Dict[str, int]]:
+        """Exact per-member, per-class ring-overwrite counts."""
+        return [c.dropped_by_class() for c in self._trace_cursors]
 
     def _apply_bid_policies(self) -> None:
         """Per-epoch hazard-aware bid updates (DESIGN.md §12): recompute
@@ -827,6 +908,8 @@ class FleetSim:
                 m.controller.end_epoch(rep)
                 m.epoch += 1
                 m.reports.append(rep)
+        if bool(np.asarray(self._cfg_c["trace_on"]).any()):
+            self.drain_trace()
 
     def run(self, epochs: int, *,
             single_dispatch: Optional[bool] = None

@@ -37,12 +37,13 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.cluster_config import ClusterConfig
 from repro.core.runtime import BWRaftSim, EpochReport, hist_stats
+from repro.trace import metrics as trace_metrics
 
 
 @dataclasses.dataclass
@@ -68,6 +69,10 @@ class MultiRaftReport:
     cross_arrived: int = 0
     two_pc_prepares: int = 0
     two_pc_aborts: int = 0
+    # group-pooled flight-recorder counters (DESIGN.md §14): the shards'
+    # `trace.metrics` registries summed in the same in-graph group
+    # reduction as the digest leaves; None on the sequential reference
+    metrics: Optional[Dict[str, int]] = None
 
     @property
     def goodput(self) -> float:
@@ -222,6 +227,8 @@ def report_from_group_digest(epoch: int, gdg: Dict,
         cross_arrived=int(gdg["cross_arrived"]),
         two_pc_prepares=int(gdg["two_pc_prepares"]),
         two_pc_aborts=int(gdg["two_pc_aborts"]),
+        metrics=(trace_metrics.as_dict(gdg["trace_metrics"])
+                 if "trace_metrics" in gdg else None),
     )
 
 

@@ -43,6 +43,9 @@ from repro.core import state as state_mod
 from repro.core.cluster_config import ClusterConfig
 from repro.core.state import (DEAD, FOLLOWER, LEADER, OBSERVER, SECRETARY,
                               HIST_TAIL)
+from repro.trace import export as trace_export
+from repro.trace import metrics as trace_metrics
+from repro.trace import ring as trace_ring
 from repro.workload import arrivals as workload_arrivals
 
 
@@ -97,7 +100,8 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
                     faults=None, fault_ticks: Optional[int] = None,
                     n_observers: int = 0, pad_observers: int = 0,
                     staleness_bound: int = 16, ae_interval: int = 4,
-                    ae_phase=None) -> Dict:
+                    ae_phase=None, trace_on: bool = False,
+                    trace_mask=None) -> Dict:
     """Per-epoch dynamic knobs — all jit arguments, never baked into the
     compiled program.  `pad_sites` repeats the last site's prices so padded
     clusters share one (S,) shape (DESIGN.md §7).  `cross_shard_frac` /
@@ -149,7 +153,13 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
     phase schedule (default `arange(O)` — maximally staggered cohorts;
     `O = n_observers + pad_observers` must match the shapes from
     `state.build_static`).  The bound must fit the unit-bin staleness
-    histogram (`period_ticks + HIST_TAIL`)."""
+    histogram (`period_ticks + HIST_TAIL`).
+
+    Flight-recorder knobs (DESIGN.md §14), both cfg_c data so toggling
+    capture or remasking event classes never recompiles: `trace_on`
+    gates ring capture (the metrics registry stays on either way);
+    `trace_mask` is the per-event-class capture mask (default: all
+    `trace.NCLASS` classes on — see `trace.ring.default_mask`)."""
     assert 0.0 <= cross_shard_frac <= 1.0, cross_shard_frac
     assert 0 <= two_pc_ticks <= HIST_TAIL, \
         f"two_pc_ticks={two_pc_ticks} exceeds the histogram tail " \
@@ -219,6 +229,12 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
     else:
         phase = np.asarray(ae_phase, np.int32).reshape(-1)
         assert phase.size == O, (phase.size, O)
+    if trace_mask is None:
+        mask = np.ones((trace_ring.NCLASS,), bool)
+    else:
+        mask = np.asarray(trace_mask, bool).reshape(-1)
+        assert mask.size == trace_ring.NCLASS, \
+            (mask.size, trace_ring.NCLASS)
     od = [s.on_demand_price for s in cfg.sites]
     sp = [s.spot_price_mean for s in cfg.sites]
     od = od + [od[-1]] * pad_sites
@@ -262,6 +278,9 @@ def make_cfg_arrays(cfg: ClusterConfig, *, write_rate: float,
         "staleness_bound": jnp.int32(staleness_bound),
         "ae_interval": jnp.int32(ae_interval),
         "ae_phase": jnp.asarray(phase, jnp.int32),
+        # flight-recorder gate + per-class capture mask (DESIGN.md §14)
+        "trace_on": jnp.asarray(bool(trace_on)),
+        "trace_mask": jnp.asarray(mask),
     }
 
 
@@ -297,6 +316,11 @@ class EpochReport:
     obs_stale_p95: float = float("nan")
     obs_stale_p99: float = float("nan")
     n_obs_digest: int = 0
+    # unified control-plane metrics registry (DESIGN.md §14): the named
+    # counters of `trace.metrics`, reduced in-digest — new per-epoch
+    # counters land here instead of growing this dataclass field by
+    # field.  None only on reports predating the registry.
+    metrics: Optional[Dict[str, int]] = None
     decision: Optional[mgr.PeekDecision] = None
 
     @property
@@ -305,7 +329,8 @@ class EpochReport:
 
 
 def build_report(epoch: int, st: Dict, ms: Dict,
-                 cost_before: float) -> EpochReport:
+                 cost_before: float,
+                 leader_term0: Optional[int] = None) -> EpochReport:
     """Distill one cluster's post-epoch state + per-tick metrics (numpy,
     leaves shaped (T,)) into an EpochReport.
 
@@ -313,7 +338,17 @@ def build_report(epoch: int, st: Dict, ms: Dict,
     pytree (O(N·(L+K)) device→host bytes per cluster).  The hot path is
     `report_from_digest`, which consumes only the few-KB on-device digest
     (DESIGN.md §7.1); this function is kept for the `pipeline="host"`
-    A/B fallback and the digest-equivalence tests."""
+    A/B fallback and the digest-equivalence tests.
+
+    `leader_term0` is the PRE-epoch leader term (-1 = no leader): the
+    `np.diff(leader_term)` change count is taken over the prepended
+    series so a change landing on the epoch's first tick is counted,
+    matching the fixed in-scan accumulator (`_digest_acc_init`).  None
+    preserves the legacy within-epoch-only diff."""
+    lt = np.asarray(ms["leader_term"])
+    if leader_term0 is not None:
+        lt = np.concatenate([[np.int64(leader_term0)],
+                             lt.astype(np.int64)])
     sub_t = np.asarray(st["entry_submit_t"])
     com_t = np.asarray(st["entry_commit_t"])
     done = (sub_t >= 0) & (com_t >= 0)
@@ -346,28 +381,36 @@ def build_report(epoch: int, st: Dict, ms: Dict,
         cost=float(st["cost_accrued"]) - cost_before,
         n_secretaries=int(ms["n_secretaries"][-1]),
         n_observers=int(ms["n_observers"][-1]),
-        leader_changes=int((np.diff(ms["leader_term"]) > 0).sum()),
+        leader_changes=int((np.diff(lt) > 0).sum()),
         no_leader_ticks=int((ms["has_leader"] == 0).sum()),
         killed=int(ms["killed"].sum()),
+        metrics=(trace_metrics.as_dict(st["metrics_ctr"])
+                 if "metrics_ctr" in st else None),
     )
 
 
-def _digest_acc_init() -> Dict:
-    """Zeroed in-scan accumulators for the per-tick metric reductions."""
+def _digest_acc_init(leader_term0) -> Dict:
+    """In-scan accumulators for the per-tick metric reductions, seeded
+    with the PRE-epoch leader term (same `-1 = no leader` sentinel as
+    the tick metric).  Seeding — instead of skipping the first tick —
+    is the fix for the boundary blindness pinned by
+    `tests/test_trace.py::test_leader_changes_first_tick_regression`: a
+    leader change landing on the first tick after compaction used to be
+    invisible to both this counter and the host `np.diff` form."""
     return {
         "killed": jnp.int32(0),
         "no_leader_ticks": jnp.int32(0),
         "leader_changes": jnp.int32(0),
-        "prev_leader_term": jnp.int32(0),
-        "seen_tick": jnp.asarray(False),
+        "prev_leader_term": jnp.asarray(leader_term0, jnp.int32),
     }
 
 
 def _digest_acc_update(acc: Dict, m: Dict) -> Dict:
     """Fold one tick's metrics into the accumulators (replaces the
     T-stacked metric arrays of the host path: `leader_changes` is the
-    in-scan equivalent of `(np.diff(leader_term) > 0).sum()`)."""
-    changed = acc["seen_tick"] & (m["leader_term"] > acc["prev_leader_term"])
+    in-scan equivalent of `(np.diff(leader_term) > 0).sum()` over the
+    epoch-start-prepended term series)."""
+    changed = m["leader_term"] > acc["prev_leader_term"]
     return {
         "killed": acc["killed"] + m["killed"].astype(jnp.int32),
         "no_leader_ticks": acc["no_leader_ticks"] +
@@ -375,7 +418,6 @@ def _digest_acc_update(acc: Dict, m: Dict) -> Dict:
         "leader_changes": acc["leader_changes"] +
         changed.astype(jnp.int32),
         "prev_leader_term": m["leader_term"],
-        "seen_tick": jnp.asarray(True),     # flips once, then stays
     }
 
 
@@ -444,6 +486,13 @@ def _finalize_digest(state: Dict, acc: Dict, cost_before, T: int,
         "obs_reads_served": state["obs_reads_served"],
         "obs_rerouted": state["obs_rerouted"],
         "n_obs_digest": jnp.sum(state["dobs_alive"]).astype(jnp.int32),
+        # flight-recorder registry + ring cursors (DESIGN.md §14): the
+        # named counters become `EpochReport.metrics`; pos/emit ride
+        # along so scan-mode runs keep per-epoch drop accounting even
+        # though the ring itself is only fetched at drain time
+        "trace_metrics": state["metrics_ctr"],
+        "trace_pos": state["trace_pos"],
+        "trace_emit": state["trace_emit"],
     }
 
 
@@ -459,6 +508,11 @@ def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int, *,
     the trace arrays are jit arguments, so a trace sweep reuses this
     compiled program (DESIGN.md §10)."""
     cost_before = state["cost_accrued"]
+    # pre-epoch leader term, mirroring the tick metric's sentinel — the
+    # seed that makes a first-tick leader change countable (see
+    # `_digest_acc_init`)
+    lid0 = state_mod.leader_id(state, static)
+    lt0 = jnp.where(lid0 >= 0, state["term"][jnp.maximum(lid0, 0)], -1)
 
     def body(carry, r):
         st, acc = carry
@@ -466,7 +520,8 @@ def device_epoch(state: Dict, static, cfg_c: Dict, rng, T: int, *,
         return (st, _digest_acc_update(acc, m)), None
 
     rngs = jax.random.split(rng, T)
-    (state, acc), _ = jax.lax.scan(body, (state, _digest_acc_init()), rngs)
+    (state, acc), _ = jax.lax.scan(body, (state, _digest_acc_init(lt0)),
+                                   rngs)
     digest = _finalize_digest(state, acc, cost_before, T, cfg_c)
     return compact_state(state), digest
 
@@ -547,6 +602,8 @@ def report_from_digest(epoch: int, dg: Dict) -> EpochReport:
         leader_changes=int(dg["leader_changes"]),
         no_leader_ticks=int(dg["no_leader_ticks"]),
         killed=int(dg["killed"]),
+        metrics=(trace_metrics.as_dict(dg["trace_metrics"])
+                 if "trace_metrics" in dg else None),
     )
 
 
@@ -594,6 +651,10 @@ def compact_state(state: Dict) -> Dict:
         read_lat_sum=jnp.zeros_like(state["read_lat_sum"]),
         read_lat_max=jnp.zeros_like(state["read_lat_max"]),
         read_lat_hist=jnp.zeros_like(state["read_lat_hist"]),
+        # the metrics registry is per-epoch (its digest row was just
+        # taken); the trace ring + cursor are NOT reset — the cursor is
+        # monotone so host drains stay exact (DESIGN.md §14)
+        metrics_ctr=jnp.zeros_like(state["metrics_ctr"]),
     )
 
 
@@ -736,7 +797,8 @@ class ClusterController:
 _EPOCH_CACHE: Dict = {}
 
 
-def _epoch_fn_for(cfg: ClusterConfig, static, pads=(0, 0, 0, 0, 0, 0),
+def _epoch_fn_for(cfg: ClusterConfig, static,
+                  pads=(0, 0, 0, 0, 0, 0, trace_ring.DEFAULT_CAPACITY),
                   backend: str = "xla"):
     """One jitted epoch function per (cluster config, padding, backend) —
     cfg_c values are jit *arguments* (rate sweeps re-use the compiled
@@ -792,7 +854,8 @@ class BWRaftSim:
                  fault_ticks: Optional[int] = None, bid_policy=None,
                  n_observers: int = 0, pad_observers: int = 0,
                  staleness_bound: int = 16, ae_interval: int = 4,
-                 ae_phase=None):
+                 ae_phase=None, trace_on: bool = False, trace_mask=None,
+                 trace_capacity: int = trace_ring.DEFAULT_CAPACITY):
         assert mode in ("bwraft", "raft")
         backend = resolve_backend(backend)
         self.cfg = cfg
@@ -801,7 +864,8 @@ class BWRaftSim:
         self.static = state_mod.build_static(cfg, pad_nodes=pad_nodes,
                                              pad_sites=pad_sites,
                                              n_obs_digest=n_observers,
-                                             pad_obs=pad_observers)
+                                             pad_obs=pad_observers,
+                                             trace_capacity=trace_capacity)
         self.state = state_mod.init_state(cfg, self.static, pad_log=pad_log,
                                           pad_keys=pad_keys)
         self.cfg_c = make_cfg_arrays(cfg, write_rate=write_rate,
@@ -821,7 +885,9 @@ class BWRaftSim:
                                      pad_observers=pad_observers,
                                      staleness_bound=staleness_bound,
                                      ae_interval=ae_interval,
-                                     ae_phase=ae_phase)
+                                     ae_phase=ae_phase,
+                                     trace_on=trace_on,
+                                     trace_mask=trace_mask)
         # hazard-aware bid policy (DESIGN.md §12): an object with
         # `.update(predictor=, trace=, end_tick=, sites=)` returning the
         # next (S,) bids — applied per epoch through `set_bid`, which is
@@ -839,9 +905,14 @@ class BWRaftSim:
         # (goodput-under-deadline, DESIGN.md §11) without re-marshalling
         self.last_digest: Optional[Dict] = None
 
+        # flight-recorder drain state (DESIGN.md §14): events appended
+        # here once per traced epoch by `run_epoch`'s single D2H fetch
+        self._trace_cursor = trace_export.DrainCursor()
+        self.trace_events: List[trace_export.TraceEvent] = []
+
         self._epoch_fn = _epoch_fn_for(
             cfg, self.static, (pad_nodes, pad_sites, pad_log, pad_keys,
-                               n_observers, pad_observers),
+                               n_observers, pad_observers, trace_capacity),
             backend=backend)
         if prelease is not None:
             # fixed-role mode: wire a static secretary/observer complement
@@ -884,6 +955,32 @@ class BWRaftSim:
                 [b, np.full((S - b.size,), b[-1], np.float32)])
         self.cfg_c["spot_bid"] = jnp.asarray(b[:S], jnp.float32)
 
+    def set_trace(self, on=None, mask=None) -> None:
+        """Toggle flight-recorder capture / remask event classes in
+        place — cfg_c data at fixed shapes, so flips never recompile
+        (DESIGN.md §14); the observability twin of `set_rates` /
+        `set_bid`.  `mask` accepts anything `trace.ring.default_mask`
+        produces (an (NCLASS,) bool sequence)."""
+        if on is not None:
+            self.cfg_c["trace_on"] = jnp.asarray(bool(on))
+        if mask is not None:
+            m = np.asarray(mask, bool).reshape(-1)
+            assert m.size == trace_ring.NCLASS, m.size
+            self.cfg_c["trace_mask"] = jnp.asarray(m)
+
+    def drain_trace(self) -> List[trace_export.TraceEvent]:
+        """Decode the ring slots appended since the last drain (one D2H
+        fetch of the three trace leaves); `run_epoch` calls this
+        automatically while `trace_on` is set.  Exact per-class
+        overwrite counts accumulate on `self.events_dropped`."""
+        events = self._trace_cursor.drain(self.state)
+        self.trace_events.extend(events)
+        return events
+
+    @property
+    def events_dropped(self) -> Dict[str, int]:
+        return self._trace_cursor.dropped_by_class()
+
     def _lease(self, want_sec: int, want_obs: int, warned=None) -> None:
         """Peak: score a spot-offer pool (eq. 2), MCSA-select, wire roles."""
         role, alive, sec_of, obs_of = self.controller.lease(
@@ -911,6 +1008,11 @@ class BWRaftSim:
         self.state, digest = self._epoch_fn(self.state, sub, self.cfg_c)
         dg = jax.tree.map(np.asarray, digest)
         self.last_digest = dg
+        if bool(np.asarray(self.cfg_c["trace_on"])):
+            # drain the ring from the RETURNED state (the donated input
+            # buffers are gone) before the next epoch overwrites it —
+            # the one extra D2H fetch tracing costs (DESIGN.md §14)
+            self.drain_trace()
 
         rep = report_from_digest(self.epoch, dg)
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cluster_config import ClusterConfig
+from repro.trace import ring as trace_ring
 
 # roles
 FOLLOWER, CANDIDATE, LEADER, SECRETARY, OBSERVER, DEAD = range(6)
@@ -96,13 +97,19 @@ def hist_bins(cfg: ClusterConfig) -> int:
 
 def build_static(cfg: ClusterConfig, *, pad_nodes: int = 0,
                  pad_sites: int = 0, n_obs_digest: int = 0,
-                 pad_obs: int = 0) -> Dict[str, np.ndarray]:
+                 pad_obs: int = 0,
+                 trace_capacity: int = trace_ring.DEFAULT_CAPACITY
+                 ) -> Dict[str, np.ndarray]:
     """Static per-node tables (site, voter mask, rtt matrix, capacities).
 
     `pad_nodes` appends that many inert node slots (not voters, not
     leasable, forever DEAD); `pad_sites` widens only the price arrays
     downstream (`S` here) — padded slots still map to *real* sites so the
     RTT matrix stays meaningful.
+
+    `trace_capacity` sizes the flight-recorder ring (DESIGN.md §14) —
+    the ONLY trace knob that is compile-key material (a static shape);
+    the on/off flag and per-class mask are cfg_c data.
 
     `n_obs_digest` provisions that many *digest-tier* observer slots
     (DESIGN.md §13): unlike the dense node slots above, a digest observer
@@ -172,6 +179,7 @@ def build_static(cfg: ClusterConfig, *, pad_nodes: int = 0,
         "is_observer_slot": is_observer_slot,
         "rtt": rtt, "site_rtt": site_rtt,
         "dobs_site": dobs_site, "O": O, "O_live": n_obs_digest,
+        "trace_cap": int(trace_capacity),
         "N": N, "V": V,
         "S": S,
         "majority": V // 2 + 1,
@@ -296,6 +304,11 @@ def init_state(cfg: ClusterConfig, static, *, pad_log: int = 0,
         "applied_digest": jnp.zeros((N,), jnp.uint32),
     }
     st.update(_digest_tier_init(cfg, static))
+    # flight-recorder ring + metrics registry (DESIGN.md §14): NOT reset
+    # by `compact_state` — the cursor stays monotone across epochs so
+    # the host drain windows (and events_dropped) stay exact
+    st.update(trace_ring.trace_leaves(
+        static.get("trace_cap", trace_ring.DEFAULT_CAPACITY)))
     return st
 
 

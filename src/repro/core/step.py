@@ -40,6 +40,8 @@ from repro.kernels.ae_sync import ops as ae_ops
 from repro.kernels.leader_fanout import ops as lf_ops
 from repro.kernels.raft_tick import ops as rt_ops
 from repro.market import synthetic as market_synth
+from repro.trace import metrics as trace_metrics
+from repro.trace import ring as trace_ring
 
 
 def _rand(rng, n):
@@ -143,10 +145,44 @@ def spot_step(state, static, cfg_c, rng):
     killed = state["alive"] & (due | (is_spot & iid_fail))
     timer = jnp.where(killed, -1, timer)
 
+    # flight-recorder inputs (DESIGN.md §14), captured before the state
+    # rewrite: a reprieve is a held warning whose signal dropped this
+    # tick; the warned-secretary/observer handoff edges mirror the
+    # `warn_timer >= 0` rules in `leader_step`/`commit_step`/`read_step`
+    prev_role = state["role"]
+    reprieve = (state["warn_timer"] >= 0) & ~sig & state["alive"]
+    warn_live = cfg_c["warn_ticks"] > 0
+
     alive = state["alive"] & ~killed
     role = jnp.where(killed, DEAD, state["role"])
     state = dict(state, spot_price=price, alive=alive, role=role,
                  warn_timer=timer)
+
+    # §12 revocation seam -> ring + registry (all RNG-free, gated
+    # capture — trace_on=0 stays bit-identical, DESIGN.md §14)
+    nid = jnp.arange(killed.shape[0])
+    # minimal unit-test states omit consensus leaves (tests/test_market
+    # drives spot_step alone); record no-ops without the ring leaves,
+    # so the term lane just falls back to 0 there
+    term = state["term"] if "term" in state else 0
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_WARN, valid=newly & warn_live,
+        node=nid, term=term, aux=cfg_c["warn_ticks"],
+        counter="warns_armed")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_KILL, valid=killed, node=nid,
+        term=term, aux=prev_role, counter="kills")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_REPRIEVE, valid=reprieve, node=nid,
+        term=term, counter="reprieves")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_SEC_HANDOFF,
+        valid=newly & warn_live & (prev_role == SECRETARY), node=nid,
+        term=term, counter="sec_handoffs")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_OBS_DRAIN,
+        valid=newly & warn_live & (prev_role == OBSERVER), node=nid,
+        term=term, counter="obs_drains")
 
     # digest-tier observers (DESIGN.md §13) are spot instances too: the
     # site revocation signal, the §12 warning window, and the phi knob
@@ -352,6 +388,17 @@ def leader_step(state, static, cfg_c, rng_key, *, backend="xla"):
                  log_len=log_len,
                  write_pending=state["write_pending"] - n_accept,
                  entry_submit_t=entry_submit)
+
+    # Multi-Raft 2PC prepare seam -> ring + registry (DESIGN.md §9/§14):
+    # entries accepted this tick carrying the cross-shard coordinator
+    # mark.  Shared by both backends (emitted before the pallas split);
+    # `cross_frac == 0` keeps the count at zero — no event, no bump.
+    n_prep = jnp.sum(take & cross_shard_mark(idxs, cfg_c["cross_frac"])
+                     ).astype(jnp.int32)
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_2PC_PREPARE, valid=n_prep > 0,
+        node=lid_c, term=state["term"][lid_c], aux=n_prep,
+        counter="twopc_prepared", count=n_prep)
 
     # --- ship AppendEntries (budgeted fan-out: THE leader bottleneck) ----
     rtt = jnp.asarray(static["rtt"])
@@ -652,9 +699,23 @@ def commit_step(state, static, cfg_c, *, reference=False, backend="xla"):
         jnp.where(has_leader, new_commit, state["commit_len"][lid_c]))
     n_new = jnp.where(has_leader,
                       new_commit - state["commit_len"][lid_c], 0)
-    return dict(state, match_len=match_len, ack_arrive_t=ack_arrive_t,
-                commit_len=commit_len, entry_commit_t=entry_commit_t,
-                writes_committed=state["writes_committed"] + n_new)
+    state = dict(state, match_len=match_len, ack_arrive_t=ack_arrive_t,
+                 commit_len=commit_len, entry_commit_t=entry_commit_t,
+                 writes_committed=state["writes_committed"] + n_new)
+    # commit-advance + 2PC-commit seams -> ring + registry (§9/§14):
+    # one event per tick the commit index moves (aux = new length) and
+    # one per tick any cross-shard coordinators land in the advance
+    n_cross = jnp.sum(newly & cross).astype(jnp.int32)
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_COMMIT, valid=n_new > 0, node=lid_c,
+        term=state["term"][lid_c], aux=new_commit,
+        counter="commit_advances")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_2PC_COMMIT, valid=n_cross > 0,
+        node=lid_c, term=state["term"][lid_c], aux=n_cross,
+        counter="twopc_committed", count=n_cross)
+    state = trace_metrics.bump(state, "entries_committed", n_new)
+    return state
 
 
 def apply_step(state, static, cfg_c, *, reference=False, backend="xla"):
@@ -772,18 +833,11 @@ def anti_entropy_step(state, static, cfg_c, *, backend="xla"):
     O = state["dobs_alive"].shape[0] if "dobs_alive" in state else 0
     if O == 0:
         return state
-    if backend == "pallas":
-        applied, term, digest, synced = ae_ops.ae_sync(
-            state["dobs_alive"], state["dobs_fol"], state["dobs_applied"],
-            state["dobs_term"], state["dobs_digest"],
-            state["dobs_synced_t"], cfg_c["ae_phase"],
-            jnp.asarray(static["dobs_site"]), state["alive"],
-            jnp.asarray(static["is_voter"]), state["applied_len"],
-            state["term"], state["applied_digest"],
-            jnp.asarray(static["site"]), jnp.asarray(static["site_rtt"]),
-            state["tick"], cfg_c["ae_interval"])
-        return dict(state, dobs_applied=applied, dobs_term=term,
-                    dobs_digest=digest, dobs_synced_t=synced)
+    # the due rule / source selection, hoisted above the backend split
+    # (RNG-free, a few O-wide gathers): the XLA path consumes it
+    # directly, the pallas kernel recomputes it internally — and the
+    # flight-recorder events below (DESIGN.md §14) read THESE values so
+    # the decoded event stream is backend-uniform
     N = state["role"].shape[0]
     tick = state["tick"]
     is_voter = jnp.asarray(static["is_voter"])
@@ -798,6 +852,20 @@ def anti_entropy_step(state, static, cfg_c, *, backend="xla"):
     due = state["dobs_alive"] & (fol_ok | any_voter) & \
         (jnp.mod(tick + cfg_c["ae_phase"], interval) == 0)
     src_applied = state["applied_len"][eff]
+
+    if backend == "pallas":
+        applied, term, digest, synced = ae_ops.ae_sync(
+            state["dobs_alive"], state["dobs_fol"], state["dobs_applied"],
+            state["dobs_term"], state["dobs_digest"],
+            state["dobs_synced_t"], cfg_c["ae_phase"],
+            jnp.asarray(static["dobs_site"]), state["alive"],
+            jnp.asarray(static["is_voter"]), state["applied_len"],
+            state["term"], state["applied_digest"],
+            jnp.asarray(static["site"]), jnp.asarray(static["site_rtt"]),
+            state["tick"], cfg_c["ae_interval"])
+        state = dict(state, dobs_applied=applied, dobs_term=term,
+                     dobs_digest=digest, dobs_synced_t=synced)
+        return _ae_trace(state, cfg_c, due, fol_ok, eff, src_applied)
     adopt = due & (src_applied >= state["dobs_applied"])
     applied = jnp.where(adopt, src_applied, state["dobs_applied"])
     term = jnp.where(adopt, state["term"][eff], state["dobs_term"])
@@ -811,8 +879,24 @@ def anti_entropy_step(state, static, cfg_c, *, backend="xla"):
         jnp.asarray(static["dobs_site"]),
         jnp.asarray(static["site"])[eff]]
     synced = jnp.where(due, tick - hop, state["dobs_synced_t"])
-    return dict(state, dobs_applied=applied, dobs_term=term,
-                dobs_digest=digest, dobs_synced_t=synced)
+    state = dict(state, dobs_applied=applied, dobs_term=term,
+                 dobs_digest=digest, dobs_synced_t=synced)
+    return _ae_trace(state, cfg_c, due, fol_ok, eff, src_applied)
+
+
+def _ae_trace(state, cfg_c, due, fol_ok, eff, src_applied):
+    """Anti-entropy seam -> ring + registry (§13/§14): one `ae_sync`
+    event per due observer slot (node lane = the SLOT index — the
+    Perfetto exporter maps it to a site track via `static["dobs_site"]`;
+    term lane = source node id; aux = source applied length), plus an
+    `ae_fallback` event when the round used the any-voter fallback."""
+    o_ids = jnp.arange(due.shape[0])
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_AE_SYNC, valid=due, node=o_ids,
+        term=eff, aux=src_applied, counter="ae_rounds")
+    return trace_ring.record(
+        state, cfg_c, trace_ring.EV_AE_FALLBACK, valid=due & ~fol_ok,
+        node=o_ids, term=eff, aux=src_applied, counter="ae_fallbacks")
 
 
 def read_step(state, static, cfg_c):
@@ -979,6 +1063,9 @@ def election_step(state, static, cfg_c, rng):
     due = (vreq_t >= 0) & (vreq_t <= tick) & state["alive"] & is_voter
     req_term = vreq_term
     higher = req_term > term
+    # flight-recorder mask (§14): leaders demoted by a higher-term
+    # request — captured before the role rewrite
+    dem_higher = due & higher & (role == LEADER)
     term = jnp.where(due & higher, req_term, term)
     role = jnp.where(due & higher & (role == LEADER), FOLLOWER, role)
     role = jnp.where(due & higher & (role == CANDIDATE), FOLLOWER, role)
@@ -1018,6 +1105,7 @@ def election_step(state, static, cfg_c, rng):
     # demote any older-term leader the moment a newer one exists
     max_leader_term = jnp.max(jnp.where((role == LEADER) & state["alive"],
                                         term, -1))
+    dem_older = (role == LEADER) & (term < max_leader_term)
     role = jnp.where((role == LEADER) & (term < max_leader_term),
                      FOLLOWER, role)
     # new leader: reset bookkeeping, stop secretaries (paper Step 1); the
@@ -1025,17 +1113,40 @@ def election_step(state, static, cfg_c, rng):
     any_new = jnp.any(win)
     match_len = jnp.where(any_new, jnp.zeros_like(state["match_len"]),
                           state["match_len"])
+    sec_stop = any_new & (role == SECRETARY) & state["alive"]
     role = jnp.where(any_new & (role == SECRETARY), DEAD, role)
     alive = state["alive"] & ~(any_new & (state["role"] == SECRETARY))
     heartbeat_timer = jnp.where(win, 0, state["heartbeat_timer"])
 
-    return dict(state, alive=alive, term=term, role=role,
-                voted_for=voted_for, votes_received=vr,
-                election_timer=et, vreq_t=vreq_t, vreq_from=vreq_from,
-                vreq_term=vreq_term, vreq_lastterm=vreq_lastterm,
-                vreq_lastlen=vreq_lastlen, grant_t=grant_t,
-                grant_to=grant_to, grant_term=grant_term,
-                match_len=match_len, heartbeat_timer=heartbeat_timer)
+    state = dict(state, alive=alive, term=term, role=role,
+                 voted_for=voted_for, votes_received=vr,
+                 election_timer=et, vreq_t=vreq_t, vreq_from=vreq_from,
+                 vreq_term=vreq_term, vreq_lastterm=vreq_lastterm,
+                 vreq_lastlen=vreq_lastlen, grant_t=grant_t,
+                 grant_to=grant_to, grant_term=grant_term,
+                 match_len=match_len, heartbeat_timer=heartbeat_timer)
+
+    # election seam -> ring + registry (DESIGN.md §14): candidacies,
+    # grants (aux = candidate), wins (aux = tallied votes), the two
+    # leader-demotion rules, and the new-leader secretary stop — every
+    # mask captured above at the point its rule fired
+    nid = jnp.arange(N)
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_CANDIDACY, valid=timed_out, node=nid,
+        term=term, counter="elections_started")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_GRANT, valid=can_grant, node=nid,
+        term=req_term, aux=vreq_from, counter="votes_granted")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_ELECT, valid=win, node=nid,
+        term=term, aux=votes, counter="leader_elected")
+    state = trace_ring.record(
+        state, cfg_c, trace_ring.EV_STEPDOWN,
+        valid=dem_higher | dem_older, node=nid, term=term,
+        counter="leader_stepdowns")
+    return trace_ring.record(
+        state, cfg_c, trace_ring.EV_SEC_STOP, valid=sec_stop, node=nid,
+        term=term, counter="sec_stops")
 
 
 def cost_step(state, static, cfg_c):

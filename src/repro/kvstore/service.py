@@ -56,6 +56,12 @@ class BWKVService:
         # per-request read latencies (ticks), in completion order — the
         # host-side twin of the device read histogram (DESIGN.md §11)
         self.read_latencies: list = []
+        # client-round annotations for the flight-recorder Perfetto
+        # export (DESIGN.md §14): one span dict per completed put /
+        # read-index round ({name, start_tick, end_tick, ...args}),
+        # passed straight to `trace.export.to_perfetto(annotations=...)`
+        # to land on the "client" track next to the device events
+        self.annotations: list = []
         # session fence floor: the highest log length this client has
         # been acked (writes) or served (reads).  A read-index round
         # fences at max(leader commit index, floor), so a read can never
@@ -112,6 +118,10 @@ class BWKVService:
             lid_now = int(SM.leader_id(st, self.sim.static))
             if lid_now >= 0 and int(st["commit_len"][lid_now]) > pos:
                 self.session_floor = max(self.session_floor, pos + 1)
+                self.annotations.append({
+                    "name": f"put {key}", "start_tick": t0,
+                    "end_tick": int(st["tick"]), "revision": pos,
+                    "leader": lid_now})
                 return PutResult(revision=pos,
                                  latency_ticks=int(st["tick"]) - t0)
             if int(st["tick"]) - t0 > self.timeout:
@@ -195,6 +205,10 @@ class BWKVService:
                 raise Timeout("read: node never reached readindex")
         value = int(self.sim.state["kv"][node, kid])
         self.session_floor = max(self.session_floor, readindex)
+        self.annotations.append({
+            "name": f"read {key}", "start_tick": t0,
+            "end_tick": int(self.sim.state["tick"]),
+            "fence": readindex, "node": node})
         self._record_read(int(self.sim.state["tick"]) - t0)
         return value, readindex
 
@@ -238,5 +252,9 @@ class BWKVService:
         hits = np.where(keys == kid)[0]
         value = int(vals[hits[-1]]) if hits.size else -1
         self.session_floor = max(self.session_floor, revision)
+        self.annotations.append({
+            "name": f"read.stale {key}", "start_tick": t0,
+            "end_tick": int(self.sim.state["tick"]),
+            "revision": revision, "observer": o})
         self._record_read(int(self.sim.state["tick"]) - t0)
         return value, revision

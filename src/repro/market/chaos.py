@@ -141,13 +141,23 @@ class ChaosReport:
     safety_error: Optional[str]   # None = all §3 properties held
     trace: List[Dict[str, np.ndarray]] = dataclasses.field(
         default_factory=list, repr=False)
+    # flight-recorder capture (DESIGN.md §14, `trace_on=True` only):
+    # decoded events, exact per-class ring-overwrite counts, whether the
+    # trace-replayed leader timeline matches the harness's per-tick
+    # alive-leader probe bit for bit, and the Perfetto artifact path
+    events: List = dataclasses.field(default_factory=list, repr=False)
+    events_dropped: Optional[Dict[str, int]] = None
+    trace_leader_match: Optional[bool] = None
+    perfetto_path: Optional[str] = None
 
 
 def run_chaos(cfg, faults: FaultSchedule, *, warning_ticks: int = 0,
               ticks: Optional[int] = None, seed: int = 0, phi: float = 0.0,
               write_rate: float = 8.0, read_rate: float = 16.0,
               lease: Optional[Sequence[int]] = (4, 6), every: int = 1,
-              spot_bid=None, check: bool = True) -> ChaosReport:
+              spot_bid=None, check: bool = True, trace_on: bool = False,
+              trace_capacity: int = 1024,
+              trace_out: Optional[str] = None) -> ChaosReport:
     """Replay a `FaultSchedule` through a host tick loop and audit it.
 
     Builds a `runtime.BWRaftSim` carrying the schedule (so the exact
@@ -163,18 +173,28 @@ def run_chaos(cfg, faults: FaultSchedule, *, warning_ticks: int = 0,
     Pass a large `spot_bid` (say 10x the mean price) to silence
     market-driven revocations so the scripted schedule is the only
     fault source — the deterministic-drill configuration the fault
-    tests replay."""
+    tests replay.
+
+    `trace_on=True` arms the flight recorder (DESIGN.md §14) and drains
+    the ring every tick: the report gains the decoded events, the exact
+    per-class overwrite counts, and `trace_leader_match` — whether the
+    trace-replayed leader timeline (`trace.export.leader_timeline`)
+    reproduces the harness's per-tick alive-leader probe bit for bit.
+    `trace_out` additionally writes the Perfetto artifact, whose leader
+    track's GAPS are the leaderless spans this report measures."""
     import jax
 
     from repro.core import invariants
     from repro.core import runtime as RT
     from repro.core import state as SM
     from repro.core import step as step_mod
+    from repro.trace import export as trace_export
 
     T = int(ticks if ticks is not None else faults.ticks)
     sim = RT.BWRaftSim(cfg, write_rate=write_rate, read_rate=read_rate,
                        phi=phi, seed=seed, warning_ticks=warning_ticks,
-                       faults=faults, fault_ticks=T, spot_bid=spot_bid)
+                       faults=faults, fault_ticks=T, spot_bid=spot_bid,
+                       trace_on=trace_on, trace_capacity=trace_capacity)
     if lease is not None:
         sim._lease(*lease)
     static, cfg_c = sim.static, sim.cfg_c
@@ -186,6 +206,8 @@ def run_chaos(cfg, faults: FaultSchedule, *, warning_ticks: int = 0,
     trace: List[Dict[str, np.ndarray]] = []
     leader_up: List[bool] = []
     first_kill, killed_total = -1, 0
+    cursor = trace_export.DrainCursor()
+    events: List[trace_export.TraceEvent] = []
     for t in range(T):
         rng, sub = jax.random.split(rng)
         state, _ = tickfn(state, sub, cfg_c)
@@ -197,6 +219,8 @@ def run_chaos(cfg, faults: FaultSchedule, *, warning_ticks: int = 0,
             first_kill = t
         prev_alive = alive.copy()
         leader_up.append(bool(((role == SM.LEADER) & alive).any()))
+        if trace_on:
+            events.extend(cursor.drain(state))
         if t % every == 0:
             trace.append(invariants.snapshot(state))
 
@@ -219,10 +243,24 @@ def run_chaos(cfg, faults: FaultSchedule, *, warning_ticks: int = 0,
             raise
         error = str(exc)
 
+    leader_match: Optional[bool] = None
+    perfetto_path: Optional[str] = None
+    if trace_on:
+        up = trace_export.leader_timeline(events, T)
+        leader_match = bool((up == np.asarray(leader_up, bool)).all())
+        if trace_out is not None:
+            trace_export.write_perfetto(
+                events, trace_out, ticks=T,
+                sites={0: np.asarray(static["site"])},
+                obs_site={0: np.asarray(static["dobs_site"])})
+            perfetto_path = str(trace_out)
+
     return ChaosReport(
         name=faults.name, ticks=T, warning_ticks=int(warning_ticks),
         first_kill_tick=first_kill, killed_total=killed_total,
         recovery_ticks=recovery, max_leaderless_span=max_span,
         leader_uptime=float(np.mean(leader_up)) if leader_up else 1.0,
         alive_end=int(np.asarray(state["alive"]).sum()),
-        safety_error=error, trace=trace)
+        safety_error=error, trace=trace, events=events,
+        events_dropped=cursor.dropped_by_class() if trace_on else None,
+        trace_leader_match=leader_match, perfetto_path=perfetto_path)

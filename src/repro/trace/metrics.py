@@ -1,0 +1,56 @@
+"""Unified control-plane metrics registry (DESIGN.md §14).
+
+Named counters accumulated in-graph in the `(NCOUNTER,)` int32
+`metrics_ctr` state leaf, reduced through the epoch digest
+(`trace_metrics`, group-summed by `fleet._group_digest`) and surfaced
+as `EpochReport.metrics` — the structured replacement for growing the
+report one ad-hoc scalar field at a time.  Counters are ALWAYS on
+(unlike ring capture they are not gated by `trace_on`): they are a few
+integer adds per tick, and the per-epoch reduction is what the digest
+already pays for.  The leaf resets at compaction with the other
+per-epoch counters.
+
+This module must not import `repro.core` (it is imported by
+`core/state.py` via `trace.ring`).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+import jax.numpy as jnp
+
+COUNTERS = (
+    # election seam (step.election_step)
+    "elections_started", "votes_granted", "leader_elected",
+    "leader_stepdowns", "sec_stops",
+    # commit seam (step.commit_step)
+    "commit_advances", "entries_committed",
+    # revocation seam (step.spot_step, §12)
+    "warns_armed", "reprieves", "kills",
+    # handoff seam (§6/§13)
+    "sec_handoffs", "obs_drains",
+    # anti-entropy seam (step.anti_entropy_step, §13)
+    "ae_rounds", "ae_fallbacks",
+    # Multi-Raft 2PC seam (§9)
+    "twopc_prepared", "twopc_committed",
+)
+NCOUNTER = len(COUNTERS)
+INDEX = {name: i for i, name in enumerate(COUNTERS)}
+
+
+def bump(state: Dict, name: str, amount) -> Dict:
+    """Add `amount` to one named counter; a no-op passthrough on
+    minimal states without the registry leaf."""
+    if "metrics_ctr" not in state:
+        return state
+    return dict(state, metrics_ctr=state["metrics_ctr"].at[
+        INDEX[name]].add(jnp.asarray(amount, jnp.int32)))
+
+
+def as_dict(vec) -> Dict[str, int]:
+    """Decode a digest's `(NCOUNTER,)` counter vector into
+    `{name: int}` — the `EpochReport.metrics` payload."""
+    arr = np.asarray(vec).reshape(-1)
+    assert arr.shape[0] == NCOUNTER, arr.shape
+    return {name: int(arr[i]) for i, name in enumerate(COUNTERS)}

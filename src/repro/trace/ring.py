@@ -1,0 +1,160 @@
+"""Device-resident flight-recorder ring: in-graph event capture
+(DESIGN.md §14).
+
+Control-plane events are appended *inside* the compiled tick into one
+fixed-capacity ring per cluster: a `(CAP, LANES)` int32 leaf whose five
+lanes are `(code, tick, node, term, aux)`, plus a monotone int32 write
+cursor and a per-class gated-emit counter.  Capture is gated by the
+`trace_on` flag and the per-class `trace_mask` riding in `cfg_c` — both
+are jit *arguments*, so toggling tracing or remasking event classes
+never recompiles; only the ring capacity (a static shape,
+`state.build_static(trace_capacity=...)`) is compile-key material.
+
+The gate contract (audited by `tests/test_trace.py` against the
+pre-change fixture `tests/data/trace_golden.json`): `emit` reads
+dynamics and writes ONLY the three trace leaves, consumes no RNG, and
+scatters nothing when the gate is down — so `trace_on=0` trajectories
+and digests are bit-identical to the untraced program.
+
+Overflow semantics: the cursor always advances by the number of gated
+events, but a slot is written only for the newest `CAP`.  When a single
+batch emits more than `CAP` events, only its last `CAP` land (`rank +
+CAP > total`), which both keeps the scatter indices collision-free and
+matches what a wrapping ring would retain.  The host drain
+(`trace.export.DrainCursor`) recovers exact per-class `events_dropped`
+from `cursor delta - decoded events` — no silent truncation.
+
+This module is imported by `core/state.py` and `core/step.py`; it must
+not import `repro.core` back.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------- #
+# event classes (mask lanes) — `cfg_c["trace_mask"]` is (NCLASS,) bool
+CLS_ELECTION, CLS_COMMIT, CLS_SPOT, CLS_HANDOFF, CLS_AE, CLS_TWOPC = \
+    range(6)
+NCLASS = 6
+CLASS_NAMES = ("election", "commit", "spot", "handoff", "ae", "twopc")
+
+# event codes (the ring's `code` lane)
+EV_CANDIDACY = 0      # follower/candidate timed out, new candidacy
+EV_GRANT = 1          # voter granted a vote (aux = candidate id)
+EV_ELECT = 2          # candidate won: majority tallied this tick
+EV_STEPDOWN = 3       # leader demoted (higher term seen)
+EV_SEC_STOP = 4       # secretary stopped on a new-leader edge (§6)
+EV_COMMIT = 5         # commit index advanced (aux = new commit length)
+EV_WARN = 6           # advance warning armed, W > 0 (aux = W)
+EV_KILL = 7           # revocation landed / iid failure (aux = old role)
+EV_REPRIEVE = 8       # warning cleared before the timer expired (§12)
+EV_SEC_HANDOFF = 9    # warned secretary: fan-out hand-back begins
+EV_OBS_DRAIN = 10     # warned observer: read drain begins
+EV_AE_SYNC = 11       # anti-entropy round landed (node = observer slot,
+                      # aux = source applied length, §13)
+EV_AE_FALLBACK = 12   # round used the any-voter fallback source
+EV_2PC_PREPARE = 13   # cross-shard entries prepared (aux = count, §9)
+EV_2PC_COMMIT = 14    # cross-shard entries committed (aux = count)
+NEVENT = 15
+
+EVENT_NAMES = (
+    "candidacy", "grant", "elect", "stepdown", "sec_stop", "commit",
+    "warn", "kill", "reprieve", "sec_handoff", "obs_drain", "ae_sync",
+    "ae_fallback", "2pc_prepare", "2pc_commit")
+
+# class of each event code — host-side table; `emit` call sites pass a
+# python-int code, so the class lookup is static per site
+EVENT_CLASS = np.array([
+    CLS_ELECTION, CLS_ELECTION, CLS_ELECTION, CLS_ELECTION, CLS_ELECTION,
+    CLS_COMMIT,
+    CLS_SPOT, CLS_SPOT, CLS_SPOT,
+    CLS_HANDOFF, CLS_HANDOFF,
+    CLS_AE, CLS_AE,
+    CLS_TWOPC, CLS_TWOPC], np.int32)
+assert EVENT_CLASS.shape[0] == NEVENT == len(EVENT_NAMES)
+
+LANES = 5                     # (code, tick, node, term, aux)
+DEFAULT_CAPACITY = 128        # 128 * 5 * 4 B = 2560 B/drain, under §7.1
+
+
+def trace_leaves(capacity: int) -> Dict:
+    """Fresh flight-recorder leaves for `state.init_state`: the ring,
+    its monotone cursor, and the per-class gated-emit counters.  NOT
+    reset by `compact_state` — the cursor is monotone across epochs so
+    the host drain windows stay exact."""
+    from repro.trace.metrics import NCOUNTER
+    return {
+        "trace_ev": jnp.zeros((int(capacity), LANES), jnp.int32),
+        "trace_pos": jnp.zeros((), jnp.int32),
+        "trace_emit": jnp.zeros((NCLASS,), jnp.int32),
+        "metrics_ctr": jnp.zeros((NCOUNTER,), jnp.int32),
+    }
+
+
+def emit(state: Dict, cfg_c: Dict, code: int, *, valid, node,
+         term=0, aux=0) -> Dict:
+    """Append up to `valid.sum()` events of one code into the ring.
+
+    `valid` is a bool scalar or (n,) lane mask; `node`/`term`/`aux`
+    broadcast against it.  The write is gated by
+    `trace_on & trace_mask[class]` (cfg_c data — never recompiles);
+    with the gate down the scatter writes nothing and the cursor adds
+    zero, so the leaves are value-identical to the untraced program.
+    States without trace leaves (minimal unit-test pytrees) pass
+    through untouched."""
+    if "trace_ev" not in state:
+        return state
+    cls = int(EVENT_CLASS[code])
+    gate = cfg_c["trace_on"] & cfg_c["trace_mask"][cls]
+    valid = jnp.atleast_1d(jnp.asarray(valid))
+    n = valid.shape[0]
+    v = valid & gate
+    cap = state["trace_ev"].shape[0]
+    vi = v.astype(jnp.int32)
+    total = jnp.sum(vi)
+    rank = jnp.cumsum(vi)               # 1-based rank among gated events
+    # one batch larger than the ring: keep only the newest CAP, which
+    # keeps the scatter indices unique AND matches ring retention
+    keep = v & (rank + cap > total)
+    slot = jnp.where(keep, (state["trace_pos"] + rank - 1) % cap, cap)
+    row = jnp.stack([
+        jnp.full((n,), code, jnp.int32),
+        jnp.broadcast_to(state["tick"].astype(jnp.int32), (n,)),
+        jnp.broadcast_to(jnp.asarray(node, jnp.int32), (n,)),
+        jnp.broadcast_to(jnp.asarray(term, jnp.int32), (n,)),
+        jnp.broadcast_to(jnp.asarray(aux, jnp.int32), (n,)),
+    ], axis=1)
+    return dict(
+        state,
+        trace_ev=state["trace_ev"].at[slot].set(row, mode="drop"),
+        trace_pos=state["trace_pos"] + total,
+        trace_emit=state["trace_emit"].at[cls].add(total))
+
+
+def record(state: Dict, cfg_c: Dict, code: int, *, valid, node,
+           term=0, aux=0, counter: Optional[str] = None,
+           count=None) -> Dict:
+    """`emit` + metrics bump in one call: the counter (always-on, NOT
+    gated by `trace_on` — it replaces ad-hoc EpochReport fields) adds
+    `count` when given, else the number of valid lanes."""
+    from repro.trace import metrics as _metrics
+    state = emit(state, cfg_c, code, valid=valid, node=node, term=term,
+                 aux=aux)
+    if counter is not None and "metrics_ctr" in state:
+        amt = (jnp.sum(jnp.atleast_1d(jnp.asarray(valid))
+                       .astype(jnp.int32)) if count is None
+               else jnp.asarray(count, jnp.int32))
+        state = _metrics.bump(state, counter, amt)
+    return state
+
+
+def default_mask(**overrides: bool) -> Tuple[bool, ...]:
+    """The (NCLASS,) capture mask as a hashable tuple: all classes on,
+    with keyword overrides by class name (`ae=False`, ...)."""
+    mask = [True] * NCLASS
+    for name, on in overrides.items():
+        mask[CLASS_NAMES.index(name)] = bool(on)
+    return tuple(mask)

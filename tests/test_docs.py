@@ -84,6 +84,21 @@ def test_observer_tier_contract_is_cross_referenced():
     assert any("kvstore/service.py" in f for f in cited_from), cited_from
 
 
+def test_flight_recorder_contract_is_cross_referenced():
+    """Same rule for the §14 flight-recorder contract: cited from every
+    instrumented seam (the tick steps that emit, the state module that
+    owns the ring leaves, the runtime/fleet that drain, the chaos
+    harness that pins the leader timeline) and from every module of the
+    trace package itself."""
+    refs = _references()
+    cited_from = set(refs.get("14", []))
+    for seam in ("core/step.py", "core/state.py", "core/runtime.py",
+                 "core/fleet.py", "core/multiraft.py", "market/chaos.py",
+                 "kvstore/service.py", "trace/ring.py", "trace/metrics.py",
+                 "trace/export.py", "trace/timeline.py"):
+        assert any(seam in f for f in cited_from), (seam, sorted(cited_from))
+
+
 def test_serving_contract_is_cross_referenced():
     """Same rule for the §11 serving surface: cited from the tick that
     consumes arrival curves and serves the read-index round
